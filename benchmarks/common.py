@@ -1,0 +1,33 @@
+"""Benchmark harness utilities: timing + CSV emission.
+
+Times on this host are CPU-XLA and structure-faithful only (the TPU numbers
+are the dry-run roofline terms); throughput *ratios* between configurations
+(batch widths, backends, transfer vs kernel) are the meaningful output, as
+in the paper's Fig. 1 which is itself a ratio story."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+
+Row = Tuple[str, float, str]   # (name, us_per_call, derived)
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds per call (blocking on jax outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(rows: List[Row]) -> None:
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

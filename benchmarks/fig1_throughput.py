@@ -1,0 +1,93 @@
+"""Paper Fig. 1: time to align a batch of 100bp read pairs at E=2% / 4%.
+
+Roles, mapped to this framework:
+
+* ``gotoh``       — the classical dense DP (the O(n*m) baseline WFA replaced;
+                    run on fewer pairs and extrapolated, exactly because it
+                    is quadratically slower)
+* ``wfa-host``    — single-pair-at-a-time WFA (the "1-thread CPU" row)
+* ``wfa-batch``   — lock-step batched WFA, ring buffers (the PIM structural
+                    analogue: all lanes advance together, working set stays
+                    in the fast tier); reported both as *Total* (with
+                    host<->device transfers) and *Kernel* (align only)
+* ``wfa-kernel``  — the Pallas kernel (interpret=True on CPU: numbers are
+                    correctness-path only, the TPU projection lives in the
+                    roofline analysis)
+
+Pair counts are scaled down from the paper's 5M to CPU-feasible sizes;
+``--pairs`` scales up.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Row, time_fn
+from repro.configs import wfa_paper
+from repro.core.aligner import WFAligner
+from repro.core.gotoh import gotoh_score_vec
+from repro.core.pim import PIMBatchAligner
+from repro.data.reads import ReadPairSpec, generate_pairs
+
+
+def run(pairs: int = 8192, read_len: int = 100) -> list[Row]:
+    rows: list[Row] = []
+    for ef in (0.02, 0.04):
+        spec = ReadPairSpec(n_pairs=pairs, read_len=read_len, edit_frac=ef,
+                            seed=0)
+        P, plen, T, tlen = generate_pairs(spec)
+
+        # --- classical dense DP baseline (extrapolated from a sample) ----
+        n_dp = min(64, pairs)
+        t0 = time.perf_counter()
+        for i in range(n_dp):
+            gotoh_score_vec(P[i, : plen[i]], T[i, : tlen[i]], wfa_paper.pen)
+        dp_per_pair = (time.perf_counter() - t0) / n_dp
+        rows.append((f"fig1/E{ef:.0%}/gotoh-dense-dp",
+                     dp_per_pair * 1e6,
+                     f"{1.0 / dp_per_pair:,.0f} pairs/s (extrapolated)"))
+
+        # --- WFA one pair at a time (1-thread CPU role) -------------------
+        # fixed-width padded rows so the jit cache is hit (recompiling per
+        # read length would not be a fair single-pair cost)
+        al1 = WFAligner(wfa_paper.pen, backend="ring", edit_frac=ef)
+        from repro.core.aligner import problem_bounds
+        s_max, k_max = problem_bounds(wfa_paper.pen, plen, tlen, ef)
+        n_one = min(32, pairs)
+        al1.align_arrays(P[:1], T[:1], plen[:1], tlen[:1],
+                         s_max=s_max, k_max=k_max)  # compile
+        t0 = time.perf_counter()
+        for i in range(n_one):
+            al1.align_arrays(P[i:i+1], T[i:i+1], plen[i:i+1], tlen[i:i+1],
+                             s_max=s_max, k_max=k_max).score.block_until_ready()
+        one_per_pair = (time.perf_counter() - t0) / n_one
+        rows.append((f"fig1/E{ef:.0%}/wfa-host-1pair",
+                     one_per_pair * 1e6,
+                     f"{1.0 / one_per_pair:,.0f} pairs/s"))
+
+        # --- batched WFA via the PIM executor (Total vs Kernel) ----------
+        ex = PIMBatchAligner(al1, chunk_pairs=pairs)
+        ex.run_arrays(P[:256], plen[:256], T[:256], tlen[:256])  # compile
+        scores, stats = ex.run_arrays(P, plen, T, tlen)
+        assert (scores >= 0).all()
+        rows.append((f"fig1/E{ef:.0%}/wfa-batch-Total",
+                     stats.t_total / pairs * 1e6,
+                     f"{stats.throughput_total():,.0f} pairs/s"))
+        rows.append((f"fig1/E{ef:.0%}/wfa-batch-Kernel",
+                     stats.t_kernel / pairs * 1e6,
+                     f"{stats.throughput_kernel():,.0f} pairs/s"))
+        speedup = one_per_pair / (stats.t_total / pairs)
+        rows.append((f"fig1/E{ef:.0%}/batch-vs-1pair-speedup",
+                     0.0, f"{speedup:.1f}x"))
+
+        # --- Pallas kernel (interpret mode; correctness-path timing) -----
+        from repro.kernels.wfa import wfa_align
+        nk = min(512, pairs)
+        sec = time_fn(lambda: wfa_align(P[:nk], T[:nk], plen[:nk], tlen[:nk],
+                                        pen=wfa_paper.pen, s_max=s_max,
+                                        k_max=k_max), warmup=1, iters=2)
+        rows.append((f"fig1/E{ef:.0%}/wfa-kernel-interp-{nk}",
+                     sec / nk * 1e6,
+                     f"{nk / sec:,.0f} pairs/s (interpret)"))
+    return rows

@@ -1,0 +1,50 @@
+"""LM-substrate step costs on this host (smoke configs): train step, prefill
+and decode per architecture family.  These are framework health numbers
+(the production-scale projection is §Roofline in EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, time_fn
+from repro.configs import smoke_config
+from repro.models import get_model_fns, synth_batch
+from repro.models.common import ShapeSpec
+from repro.optim.adamw import AdamWConfig
+
+ARCHS = ["qwen3-0.6b", "deepseek-v2-lite-16b", "mamba2-780m", "zamba2-7b",
+         "whisper-base"]
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    shape = ShapeSpec("bench", 128, 2, "train")
+    for arch in ARCHS:
+        cfg = smoke_config(arch)
+        fns = get_model_fns(cfg)
+        state, _ = fns.init_train_state(cfg, jax.random.key(0))
+        step = jax.jit(fns.make_train_step(cfg, AdamWConfig(total_steps=8), 1))
+        batch = synth_batch(cfg, shape, seed=1)
+        tokens = shape.seq_len * shape.global_batch
+
+        def one(state=state, batch=batch, step=step):
+            s2, m = step(state, batch)
+            return m["loss"]
+
+        sec = time_fn(one, warmup=1, iters=3)
+        rows.append((f"lm/{arch}/train-step", sec * 1e6,
+                     f"{tokens / sec:,.0f} tok/s (smoke cfg)"))
+
+        B, S = 2, 64
+        cache = fns.init_cache(cfg, B, S)
+        tok = np.array([1, 2], np.int32)
+        kw = {}
+        if cfg.family == "vlm":
+            kw["mrope_pos"] = jnp.zeros((B, 1, 3), jnp.int32)
+        dec = jax.jit(lambda p, c, t, l: fns.serve_step(p, cfg, c, t, l, **kw))
+        sec = time_fn(lambda: dec(state["params"], cache, tok,
+                                  jnp.int32(3))[0], warmup=1, iters=3)
+        rows.append((f"lm/{arch}/decode-step", sec * 1e6,
+                     f"{B / sec:,.0f} tok/s (smoke cfg)"))
+    return rows

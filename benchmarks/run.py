@@ -1,0 +1,55 @@
+"""Benchmark driver: one module per paper table/figure + substrate benches.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only fig1,scaling,...]
+Prints ``name,us_per_call,derived`` CSV (one row per measurement)."""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks.common import emit
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: fig1,scaling,transfer,"
+                         "wfa_ops,lm")
+    ap.add_argument("--pairs", type=int, default=8192)
+    args = ap.parse_args(argv)
+    want = set(args.only.split(",")) if args.only else None
+
+    suites = []
+    if want is None or "fig1" in want:
+        from benchmarks import fig1_throughput
+        suites.append(("fig1", lambda: fig1_throughput.run(pairs=args.pairs)))
+    if want is None or "scaling" in want:
+        from benchmarks import scaling_batch
+        suites.append(("scaling", scaling_batch.run))
+    if want is None or "transfer" in want:
+        from benchmarks import transfer_overhead
+        suites.append(("transfer",
+                       lambda: transfer_overhead.run(pairs=args.pairs)))
+    if want is None or "wfa_ops" in want:
+        from benchmarks import wfa_ops
+        suites.append(("wfa_ops", wfa_ops.run))
+    if want is None or "lm" in want:
+        from benchmarks import lm_substrate
+        suites.append(("lm", lm_substrate.run))
+
+    rows = []
+    rc = 0
+    for name, fn in suites:
+        try:
+            rows.extend(fn())
+        except Exception:
+            print(f"# suite {name} FAILED:", file=sys.stderr)
+            traceback.print_exc()
+            rc = 1
+    emit(rows)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,35 @@
+"""Total-vs-Kernel decomposition (the paper's second key observation: 4.87x
+with transfers vs 37.4x without, E=2%).
+
+Sweeps the wave size (pairs moved host->device per round trip) and reports
+the kernel-time fraction — the paper's "Kernel" bar divided by its "Total"
+bar.  Larger waves amortize the scatter/gather exactly as the paper's
+parallel CPU->DPU transfers do."""
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.configs import wfa_paper
+from repro.core.aligner import WFAligner
+from repro.core.pim import PIMBatchAligner
+from repro.data.reads import ReadPairSpec, generate_pairs
+
+
+def run(pairs: int = 8192, read_len: int = 100,
+        edit_frac: float = 0.02) -> list[Row]:
+    spec = ReadPairSpec(n_pairs=pairs, read_len=read_len,
+                        edit_frac=edit_frac, seed=2)
+    P, plen, T, tlen = generate_pairs(spec)
+    al = WFAligner(wfa_paper.pen, backend="ring", edit_frac=edit_frac)
+
+    rows: list[Row] = []
+    for wave in (256, 1024, 4096, pairs):
+        ex = PIMBatchAligner(al, chunk_pairs=wave)
+        ex.run_arrays(P[:wave], plen[:wave], T[:wave], tlen[:wave])  # warm
+        _, stats = ex.run_arrays(P, plen, T, tlen)
+        frac = stats.t_kernel / stats.t_total
+        rows.append((f"transfer/wave{wave}",
+                     stats.t_total / pairs * 1e6,
+                     f"kernel_frac={frac:.2f} "
+                     f"in={stats.bytes_in / 1e6:.1f}MB "
+                     f"out={stats.bytes_out / 1e6:.2f}MB"))
+    return rows

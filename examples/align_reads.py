@@ -1,0 +1,13 @@
+"""The paper's scenario end-to-end: generate read pairs at an edit threshold,
+scatter them PIM-style over every device, align, gather, report Total vs
+Kernel throughput (Fig. 1's decomposition).
+
+    PYTHONPATH=src python examples/align_reads.py --pairs 20000 --edit-frac 0.02
+    PYTHONPATH=src python examples/align_reads.py --backend kernel --pairs 512
+"""
+import sys
+
+from repro.launch.align import main
+
+if __name__ == "__main__":
+    sys.exit(main())

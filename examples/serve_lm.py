@@ -1,0 +1,15 @@
+"""Serve a small model with batched requests: prefill + lock-step decode
+waves with greedy sampling (the CPU-scale instance of the decode cells the
+dry-run lowers at 32k/500k context).
+
+    PYTHONPATH=src python examples/serve_lm.py
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-780m-smoke --max-new 16
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:] if len(sys.argv) > 1 else
+                  ["--arch", "qwen3-0.6b-smoke", "--batch", "4",
+                   "--requests", "8", "--max-new", "24"]))

@@ -1,0 +1,26 @@
+"""Synthesize the zamba2 fused-vs-split A/B rows for the perf table from the
+two generations of dry-run records (campaign3 = fused baseline, campaign4 =
+split default) kept in the append-only cells.jsonl."""
+import json
+
+gens = []
+for line in open("results/dryrun/cells.jsonl"):
+    r = json.loads(line)
+    if (r.get("arch"), r.get("shape"), r.get("mesh"), r.get("pass")) == \
+            ("zamba2-7b", "train_4k", "pod1-16x16", "roofline") \
+            and r.get("status") == "ok":
+        gens.append(r)
+assert len(gens) >= 2, f"need both generations, have {len(gens)}"
+for name, rec in (("zamba2_train_fusedproj", gens[-2]),
+                  ("zamba2_train_splitproj", gens[-1])):
+    row = {"experiment": name, "status": "ok",
+           "timestamp": rec["timestamp"], "source": "cells.jsonl",
+           "n_devices": rec["n_devices"],
+           "model_flops": rec["model_flops"],
+           "flops_per_device": rec["flops_per_device"],
+           "bytes_per_device": rec["bytes_per_device"],
+           "collectives": rec["collectives"],
+           "compile_s": rec["compile_s"]}
+    with open("results/perf/experiments.jsonl", "a") as f:
+        f.write(json.dumps(row) + "\n")
+    print(name, f"coll={rec['collectives']['total']:.3e}")

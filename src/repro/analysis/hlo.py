@@ -1,0 +1,101 @@
+"""Post-SPMD HLO inspection: collective bytes-on-wire for the roofline.
+
+``compiled.cost_analysis()`` has FLOPs and memory traffic but no collective
+accounting, so we parse the compiled HLO text and sum, per collective kind,
+the wire bytes implied by its result shape and participant count:
+
+    all-reduce          2 * bytes * (N-1)/N        (ring: reduce-scatter+all-gather)
+    all-gather          bytes_out * (N-1)/N
+    reduce-scatter      bytes_out * (N-1)          (each rank sends (N-1) shards)
+    all-to-all          bytes * (N-1)/N
+    collective-permute  bytes * 1
+
+Bytes are per participating chip on its slowest link, the quantity the
+roofline's collective term divides by link bandwidth.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# e.g. "%all-gather.5 = bf16[4,128]{...} all-gather(" — capture shapes + op
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+    r"(all-reduce-start|all-gather-start|reduce-scatter|all-to-all|"
+    r"collective-permute-start|all-reduce|all-gather|collective-permute)\b")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # replica_groups=[G,N] iota form: G groups of size N
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def collective_bytes(hlo_text: str, n_devices: int) -> Dict[str, float]:
+    """-> {op_kind: per-chip wire bytes} + {"total": ...} (+ "count_<op>")."""
+    out: Dict[str, float] = defaultdict(float)
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m is None:
+            continue
+        shape_text, op = m.group(1), m.group(2)
+        op = op.replace("-start", "")
+        nbytes = _shape_bytes(shape_text)
+        N = max(2, _group_size(line, n_devices))
+        if op == "all-reduce":
+            wire = 2.0 * nbytes * (N - 1) / N
+        elif op == "all-gather":
+            wire = nbytes * (N - 1) / N
+        elif op == "reduce-scatter":
+            wire = nbytes * (N - 1)
+        elif op == "all-to-all":
+            wire = nbytes * (N - 1) / N
+        else:  # collective-permute
+            wire = float(nbytes)
+        out[op] += wire
+        counts[op] += 1
+    result = dict(out)
+    result["total"] = float(sum(out.values()))
+    for op, c in counts.items():
+        result[f"count_{op}"] = c
+    return result
+
+
+def hlo_op_histogram(hlo_text: str, top: int = 20) -> Dict[str, int]:
+    """Crude op-name histogram (remat/redundancy forensics)."""
+    hist: Dict[str, int] = defaultdict(int)
+    for m in re.finditer(r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+([a-z][a-z0-9-]*)\(",
+                         hlo_text):
+        hist[m.group(1)] += 1
+    return dict(sorted(hist.items(), key=lambda kv: -kv[1])[:top])

@@ -1,0 +1,116 @@
+"""Regenerate EXPERIMENTS.md's generated tables from results/*.jsonl.
+
+    PYTHONPATH=src python -m repro.analysis.report
+
+Replaces the <!-- ROOFLINE_TABLE --> and <!-- PERF_TABLE --> markers (the
+narrative text around them is hand-written and untouched).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import sys
+
+from repro.analysis.roofline import (ICI_BW, HBM_BW, PEAK_FLOPS, fit_table,
+                                     load, markdown, terms)
+
+PERF_ROWS = [
+    # (label, experiment key)
+    ("cell 1 — wfa-paper E2% · pjit baseline (lock-step)", "wfa_pjit_baseline"),
+    ("cell 1 — wfa-paper E2% · shard_map (per-shard term.)", "wfa_shardmap"),
+    ("cell 1 — multi-pod · pjit", "wfa_pjit_multipod"),
+    ("cell 1 — multi-pod · shard_map", "wfa_shardmap_multipod"),
+    ("cell 2 — zamba2 train · fused xBC (baseline)", "zamba2_train_fusedproj"),
+    ("cell 2 — zamba2 train · split x/B/C (refuted lever)", "zamba2_train_splitproj"),
+    ("cell 2 — zamba2 train · split + seq-parallel", "zamba2_train_seqshard"),
+    ("cell 3 — deepseek train · pjit scatter (baseline)", "deepseek_train_baseline"),
+    ("cell 3 — deepseek train · EP (shard_map+all_to_all)", "deepseek_train_ep"),
+    ("extra — phi3.5-moe train · EP dispatch", "phi35_train_ep"),
+    ("extra — qwen3-32b prefill · baseline", "qwen3_32b_prefill_baseline"),
+    ("extra — qwen3-32b prefill · seq-parallel", "qwen3_32b_prefill_seqshard"),
+    ("extra — granite-8b train · baseline", "granite8b_train_baseline"),
+    ("extra — granite-8b train · seq-parallel", "granite8b_train_seqshard"),
+    ("extra — qwen3-32b train · seq-parallel", "qwen3_32b_train_seqshard"),
+    ("extra — deepseek decode · naive MLA", "deepseek_decode_baseline"),
+    ("extra — deepseek decode · absorbed MLA", "deepseek_decode_absorb"),
+]
+
+MEM_ROWS = [
+    ("qwen3-32b train · TP-only state (baseline)", "qwen3_32b_train_nozero_mem"),
+    ("qwen3-32b train · ZeRO 2-D state", "qwen3_32b_train_zero_mem"),
+    ("qwen3-32b train · ZeRO + remat nothing", "qwen3_32b_train_remat_nothing_mem"),
+    ("qwen3-32b train · ZeRO + 2k-token microbatch", "qwen3_32b_train_micro2k_mem"),
+    ("granite-8b train · ZeRO + seq-parallel", "granite8b_train_seqshard_mem"),
+    ("qwen3-32b train · ZeRO + remat-nothing + seq-par", "qwen3_32b_train_fit_combo_mem"),
+    ("granite-34b train · ZeRO + remat-nothing + seq-par", "granite34b_train_fit_combo_mem"),
+    ("qwen2-vl-7b train · ZeRO + remat-nothing + seq-par", "qwen2vl_train_fit_combo_mem"),
+    ("zamba2-7b train · ZeRO + remat-nothing + seq-par", "zamba2_train_fit_combo_mem"),
+    ("zamba2-7b train · ZeRO + seq-par + chunk64", "zamba2_train_fit_dots_mem"),
+    ("phi3.5-moe train (2-pod) · ZeRO + EP + remat + seq-par", "phi35_train_fit_combo_mem"),
+]
+
+
+def perf_table(path="results/perf/experiments.jsonl") -> str:
+    recs = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                r = json.loads(line)
+                if r.get("status") == "ok":
+                    recs[r["experiment"]] = r
+    out = ["| experiment | compute | memory | collective | MFU bound |",
+           "|---|---|---|---|---|"]
+    for label, key in PERF_ROWS:
+        r = recs.get(key)
+        if r is None:
+            out.append(f"| {label} | — | — | — | (pending) |")
+            continue
+        tc = r["flops_per_device"] / PEAK_FLOPS
+        tm = r["bytes_per_device"] / HBM_BW
+        tx = r["collectives"]["total"] / ICI_BW
+        mf = r.get("model_flops") or 0.0
+        mfu = (mf / r["n_devices"] / PEAK_FLOPS / max(tc, tm, tx)) if mf else 0
+        f = lambda x: (f"{x*1e6:.1f}µs" if x < 1e-3 else
+                       f"{x*1e3:.2f}ms" if x < 1 else f"{x:.2f}s")
+        out.append(f"| {label} | {f(tc)} | {f(tm)} | {f(tx)} | "
+                   f"{mfu:.1%} |" if mf else
+                   f"| {label} | {f(tc)} | {f(tm)} | {f(tx)} | n/a |")
+
+    out += ["", "Memory-fit iterations (per-device, memory pass):", "",
+            "| experiment | args | temps | net | fits 16GB? |",
+            "|---|---|---|---|---|"]
+    for label, key in MEM_ROWS:
+        r = recs.get(key)
+        if r is None:
+            out.append(f"| {label} | — | — | — | (pending) |")
+            continue
+        a = r.get("mem_argument_size_in_bytes", 0)
+        t = r.get("mem_temp_size_in_bytes", 0)
+        net = a + t - r.get("mem_alias_size_in_bytes", 0) \
+            + r.get("mem_output_size_in_bytes", 0)
+        ok = "YES" if net < 16e9 else "**NO**"
+        out.append(f"| {label} | {a/1e9:.2f}GB | {t/1e9:.2f}GB "
+                   f"| {net/1e9:.2f}GB | {ok} |")
+    return "\n".join(out)
+
+
+def patch(md_path="EXPERIMENTS.md"):
+    with open(md_path) as f:
+        text = f.read()
+    recs = load("results/dryrun/cells.jsonl")
+    roof = markdown(recs) + "\n\n**Per-device memory fit (memory pass):**\n\n" \
+        + fit_table(recs)
+    text = re.sub(r"<!-- ROOFLINE_TABLE -->(?:.*?<!-- /ROOFLINE_TABLE -->)?",
+                  "<!-- ROOFLINE_TABLE -->\n" + roof + "\n<!-- /ROOFLINE_TABLE -->",
+                  text, flags=re.S)
+    text = re.sub(r"<!-- PERF_TABLE -->(?:.*?<!-- /PERF_TABLE -->)?",
+                  "<!-- PERF_TABLE -->\n" + perf_table() + "\n<!-- /PERF_TABLE -->",
+                  text, flags=re.S)
+    with open(md_path, "w") as f:
+        f.write(text)
+    print(f"patched {md_path}")
+
+
+if __name__ == "__main__":
+    patch(sys.argv[1] if len(sys.argv) > 1 else "EXPERIMENTS.md")

@@ -1,0 +1,2 @@
+from repro.checkpoint.manager import (AsyncCheckpointer, all_steps,  # noqa: F401
+                                      latest_step, restore, save)

@@ -1,0 +1,12 @@
+"""qwen3-0.6b [dense]: 28L d_model=1024 16H (GQA kv=8) d_ff=3072
+vocab=151936 — qk_norm, GQA, head_dim=128, tied embeddings.
+[hf:Qwen/Qwen3-0.6B; hf]"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-0.6b", family="dense",
+    n_layers=28, d_model=1024, n_heads=16, n_kv_heads=8, d_head=128,
+    d_ff=3072, vocab_size=151936,
+    qk_norm=True, rope_theta=1e6, tie_embeddings=True,
+    remat_policy="dots",
+)

@@ -1,0 +1,130 @@
+"""WFA traceback: wavefront history -> CIGAR op sequences.
+
+Traceback is pointer-chasing over the [s_max+1, B, K] M/I/D history — an
+inherently sequential, data-dependent walk, so (like the reference WFA2-lib,
+and like the paper's host-side result handling) it runs on the host in numpy.
+The throughput path (scores) never needs it; tests and the alignment examples
+do.
+
+Op codes match ``core.gotoh.score_cigar``: 0=M(match) 1=X(mismatch)
+2=I(insert, consumes text) 3=D(delete, consumes pattern); -1 = padding.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.penalties import Penalties
+from repro.core.wavefront import NEG, _VALID_THRESH
+
+OP_M, OP_X, OP_I, OP_D = 0, 1, 2, 3
+
+
+def _get(hist, s, k, k_max):
+    K = hist.shape[-1]
+    j = k + k_max
+    if s < 0 or j < 0 or j >= K:
+        return NEG
+    return int(hist[s, j])
+
+
+def traceback_one(m_hist, i_hist, d_hist, pen: Penalties, score: int,
+                  plen: int, tlen: int, k_max: int) -> np.ndarray:
+    """Traceback for one pair. hist arrays are [s_max+1, K] for this pair."""
+    if score < 0:
+        return np.empty((0,), np.int8)
+    x, o, e = pen.x, pen.o, pen.e
+    ops: list[int] = []          # built back-to-front
+    state = "M"
+    s = int(score)
+    k = tlen - plen
+    h = tlen
+    guard = 4 * (plen + tlen) + 4 * (s + 1) + 8
+    while guard > 0:
+        guard -= 1
+        if state == "M":
+            if s == 0:
+                assert k == 0, (s, k, h)
+                ops.extend([OP_M] * h)
+                break
+            cand_x = _get(m_hist, s - x, k, k_max)
+            cand_x = cand_x + 1 if cand_x > _VALID_THRESH else NEG
+            i_val = _get(i_hist, s, k, k_max)
+            d_val = _get(d_hist, s, k, k_max)
+            pre = max(cand_x, i_val, d_val)
+            assert pre > _VALID_THRESH and h >= pre, (s, k, h, pre)
+            ops.extend([OP_M] * (h - pre))
+            h = pre
+            if pre == cand_x:
+                ops.append(OP_X)
+                s -= x
+                h -= 1
+                # stay in M
+            elif pre == i_val:
+                state = "I"
+            else:
+                state = "D"
+        elif state == "I":
+            ext = _get(i_hist, s - e, k - 1, k_max) if s >= e else NEG
+            ext = ext + 1 if ext > _VALID_THRESH else NEG
+            ops.append(OP_I)
+            if ext > _VALID_THRESH and h == ext:
+                s -= e
+                k -= 1
+                h -= 1
+                # stay in I (gap extension)
+            else:
+                opn = _get(m_hist, s - o - e, k - 1, k_max)
+                assert opn > _VALID_THRESH and h == opn + 1, (s, k, h, opn)
+                s -= o + e
+                k -= 1
+                h -= 1
+                state = "M"
+        else:  # "D"
+            ext = _get(d_hist, s - e, k + 1, k_max) if s >= e else NEG
+            ops.append(OP_D)
+            if ext > _VALID_THRESH and h == ext:
+                s -= e
+                k += 1
+                # stay in D
+            else:
+                opn = _get(m_hist, s - o - e, k + 1, k_max)
+                assert opn > _VALID_THRESH and h == opn, (s, k, h, opn)
+                s -= o + e
+                k += 1
+                state = "M"
+    else:
+        raise RuntimeError("traceback did not terminate")
+    return np.asarray(ops[::-1], np.int8)
+
+
+def traceback_batch(result, pen: Penalties, plen, tlen, k_max: int):
+    """-> list of per-pair op arrays (ragged)."""
+    m_h = np.asarray(result.m_hist)
+    i_h = np.asarray(result.i_hist)
+    d_h = np.asarray(result.d_hist)
+    scores = np.asarray(result.score)
+    plen = np.asarray(plen)
+    tlen = np.asarray(tlen)
+    return [
+        traceback_one(m_h[:, b], i_h[:, b], d_h[:, b], pen, int(scores[b]),
+                      int(plen[b]), int(tlen[b]), k_max)
+        for b in range(scores.shape[0])
+    ]
+
+
+def cigar_string(ops: np.ndarray) -> str:
+    """Run-length encode ops to a CIGAR-like string (M/X/I/D)."""
+    chars = {OP_M: "M", OP_X: "X", OP_I: "I", OP_D: "D"}
+    out = []
+    run_c, run_n = None, 0
+    for op in ops:
+        c = chars[int(op)]
+        if c == run_c:
+            run_n += 1
+        else:
+            if run_c is not None:
+                out.append(f"{run_n}{run_c}")
+            run_c, run_n = c, 1
+    if run_c is not None:
+        out.append(f"{run_n}{run_c}")
+    return "".join(out)

@@ -1,0 +1,288 @@
+"""Batched pure-JAX Wavefront Algorithm (WFA, Marco-Sola et al. 2021).
+
+This is the paper's algorithm, expressed so a *batch* of pairs advances in
+lock-step (the TPU analogue of the paper's "each DPU thread aligns a pair
+independently" — see DESIGN.md §2).  All buffers are statically sized from
+``(s_max, k_max)`` bounds (``core.penalties``).
+
+Conventions
+-----------
+pattern ``p`` (length ``n``, vertical axis), text ``t`` (length ``m``,
+horizontal).  A wavefront cell on diagonal ``k = h - v`` stores the furthest
+reaching *offset* ``h`` (text chars consumed) attainable with cost exactly
+``s``; ``v = h - k`` is the pattern position.  Wavefronts:
+
+    I_s[k] = max(M_{s-o-e}[k-1], I_{s-e}[k-1]) + 1      (gap consuming text)
+    D_s[k] = max(M_{s-o-e}[k+1], D_{s-e}[k+1])          (gap consuming pattern)
+    M_s[k] = max(M_{s-x}[k] + 1, I_s[k], D_s[k])        (mismatch / close gap)
+    extend: M_s[k] += LCP(t[h:], p[v:])                  (free matches)
+
+and the alignment is found at the first ``s`` with
+``M_s[m-n] == m``.  Invalid cells hold ``NEG`` and all candidates are masked
+against the rectangle ``0 <= h <= m, 0 <= v <= n`` so out-of-board offsets
+never propagate.
+
+Two modes:
+
+* ``wfa_forward(..., keep_history=True)`` — full ``[s_max+1, B, K]`` M/I/D
+  history, enabling exact traceback (``core.cigar``).
+* ``wfa_scores`` — ring buffer of depth ``window = max(x, o+e) + 1``
+  (the paper's WRAM-resident working set), score-only throughput mode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.penalties import Penalties
+
+NEG = -(1 << 20)  # invalid-cell sentinel; survives +1 arithmetic harmlessly
+_VALID_THRESH = NEG // 2
+
+
+class WFAResult(NamedTuple):
+    score: jax.Array            # [B] int32 alignment cost, -1 if > s_max
+    m_hist: Optional[jax.Array]  # [s_max+1, B, K] or None
+    i_hist: Optional[jax.Array]
+    d_hist: Optional[jax.Array]
+    n_steps: jax.Array          # [] int32: score loop trips taken (telemetry)
+
+
+def _shift_from_km1(w):
+    """w[..., k] <- w[..., k-1]  (diagonal k reads its left neighbour)."""
+    neg = jnp.full(w.shape[:-1] + (1,), NEG, w.dtype)
+    return jnp.concatenate([neg, w[..., :-1]], axis=-1)
+
+
+def _shift_from_kp1(w):
+    """w[..., k] <- w[..., k+1]."""
+    neg = jnp.full(w.shape[:-1] + (1,), NEG, w.dtype)
+    return jnp.concatenate([w[..., 1:], neg], axis=-1)
+
+
+def _extend(M, pattern, text, plen, tlen, ks):
+    """Greedy diagonal extension, all (pair, diagonal) lanes in lock-step.
+
+    One matched character per while-trip across the whole [B, K] front — the
+    vectorized counterpart of the DPU's scalar per-diagonal extend loop.
+    """
+    Lt = text.shape[1]
+    Lp = pattern.shape[1]
+
+    def trip(state):
+        M, _ = state
+        h = M
+        v = M - ks[None, :]
+        can = ((M > _VALID_THRESH)
+               & (h >= 0) & (h < tlen[:, None])
+               & (v >= 0) & (v < plen[:, None]))
+        tc = jnp.take_along_axis(text, jnp.clip(h, 0, Lt - 1), axis=1)
+        pc = jnp.take_along_axis(pattern, jnp.clip(v, 0, Lp - 1), axis=1)
+        adv = can & (tc == pc)
+        return M + adv.astype(M.dtype), jnp.any(adv)
+
+    def cond(state):
+        return state[1]
+
+    M, _ = lax.while_loop(cond, trip, trip((M, jnp.bool_(True))))
+    return M
+
+
+def _next_wavefronts(pen: Penalties, read_m, s, M_prev_none, pattern, text,
+                     plen, tlen, ks, read_i, read_d):
+    """Compute (M_s, I_s, D_s) from history accessors.
+
+    ``read_m/read_i/read_d(delta)`` return the wavefront at score ``s - delta``
+    (NEG-filled when s - delta < 0).
+    """
+    del M_prev_none
+    x, o, e = pen.x, pen.o, pen.e
+    m_owe = read_m(o + e)
+    m_x = read_m(x)
+    i_e = read_i(e)
+    d_e = read_d(e)
+
+    tl = tlen[:, None]
+    pl = plen[:, None]
+
+    # Insertion: source on diagonal k-1, offset +1; needs new h <= m.
+    i_src = jnp.maximum(_shift_from_km1(m_owe), _shift_from_km1(i_e))
+    I_new = i_src + 1
+    I_new = jnp.where((i_src > _VALID_THRESH) & (I_new <= tl), I_new, NEG)
+
+    # Deletion: source on diagonal k+1, offset unchanged; needs new v <= n.
+    d_src = jnp.maximum(_shift_from_kp1(m_owe), _shift_from_kp1(d_e))
+    D_new = jnp.where((d_src > _VALID_THRESH)
+                      & (d_src - ks[None, :] <= pl), d_src, NEG)
+
+    # Mismatch: same diagonal, offset +1; consumes one char of each sequence.
+    X_new = m_x + 1
+    X_new = jnp.where((m_x > _VALID_THRESH) & (X_new <= tl)
+                      & (X_new - ks[None, :] <= pl), X_new, NEG)
+
+    M_new = jnp.maximum(jnp.maximum(X_new, I_new), D_new)
+    M_new = _extend(M_new, pattern, text, plen, tlen, ks)
+    return M_new, I_new, D_new
+
+
+def _target_reached(M, plen, tlen, k_max):
+    """[B] bool: does M hold offset == tlen on the final diagonal?"""
+    k_final = tlen - plen + k_max                   # index into K axis
+    K = M.shape[-1]
+    in_band = (k_final >= 0) & (k_final < K)
+    idx = jnp.clip(k_final, 0, K - 1)
+    val = jnp.take_along_axis(M, idx[:, None], axis=1)[:, 0]
+    return in_band & (val >= tlen) & (val > _VALID_THRESH)
+
+
+def _prep(pattern, text, plen, tlen):
+    pattern = jnp.asarray(pattern)
+    text = jnp.asarray(text)
+    if pattern.dtype != jnp.int32:
+        pattern = pattern.astype(jnp.int32)
+    if text.dtype != jnp.int32:
+        text = text.astype(jnp.int32)
+    return pattern, text, jnp.asarray(plen, jnp.int32), jnp.asarray(tlen, jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("pen", "s_max", "k_max",
+                                             "keep_history"))
+def wfa_forward(pattern, text, plen, tlen, *, pen: Penalties, s_max: int,
+                k_max: int, keep_history: bool = True) -> WFAResult:
+    """Full-history batched WFA.
+
+    pattern/text: [B, Lp]/[B, Lt] integer codes (padding values arbitrary —
+    bounds masking never reads past plen/tlen).  Returns per-pair cost and the
+    M/I/D wavefront history for traceback.
+    """
+    pattern, text, plen, tlen = _prep(pattern, text, plen, tlen)
+    B = pattern.shape[0]
+    K = 2 * k_max + 1
+    ks = jnp.arange(K, dtype=jnp.int32) - k_max
+
+    hist_shape = (s_max + 1, B, K)
+    m_hist = jnp.full(hist_shape, NEG, jnp.int32)
+    i_hist = jnp.full(hist_shape, NEG, jnp.int32)
+    d_hist = jnp.full(hist_shape, NEG, jnp.int32)
+
+    # s = 0: M_0[k=0] = LCP(p, t); I/D invalid.
+    M0 = jnp.full((B, K), NEG, jnp.int32).at[:, k_max].set(0)
+    M0 = _extend(M0, pattern, text, plen, tlen, ks)
+    m_hist = m_hist.at[0].set(M0)
+
+    score0 = jnp.where(_target_reached(M0, plen, tlen, k_max), 0, -1)
+
+    def read(hist, s, delta):
+        row = lax.dynamic_index_in_dim(hist, jnp.maximum(s - delta, 0),
+                                       keepdims=False)
+        return jnp.where(s >= delta, row, NEG)
+
+    def body(carry):
+        s, score, m_hist, i_hist, d_hist = carry
+        M_new, I_new, D_new = _next_wavefronts(
+            pen, lambda d: read(m_hist, s, d), s, None, pattern, text,
+            plen, tlen, ks, lambda d: read(i_hist, s, d),
+            lambda d: read(d_hist, s, d))
+        m_hist = lax.dynamic_update_index_in_dim(m_hist, M_new, s, axis=0)
+        i_hist = lax.dynamic_update_index_in_dim(i_hist, I_new, s, axis=0)
+        d_hist = lax.dynamic_update_index_in_dim(d_hist, D_new, s, axis=0)
+        reached = _target_reached(M_new, plen, tlen, k_max)
+        score = jnp.where((score < 0) & reached, s, score)
+        return s + 1, score, m_hist, i_hist, d_hist
+
+    def cond(carry):
+        s, score, *_ = carry
+        return (s <= s_max) & jnp.any(score < 0)
+
+    s, score, m_hist, i_hist, d_hist = lax.while_loop(
+        cond, body, (jnp.int32(1), score0, m_hist, i_hist, d_hist))
+
+    if keep_history:
+        return WFAResult(score, m_hist, i_hist, d_hist, s)
+    return WFAResult(score, None, None, None, s)
+
+
+@functools.partial(jax.jit, static_argnames=("pen", "s_max", "k_max"))
+def wfa_scores(pattern, text, plen, tlen, *, pen: Penalties, s_max: int,
+               k_max: int) -> WFAResult:
+    """Ring-buffer batched WFA — score-only throughput mode.
+
+    Memory: 3 rings of ``[window, B, K]`` with ``window = max(x, o+e) + 1``,
+    the WFA metadata the paper keeps hot in WRAM.  This is the jnp reference
+    for the Pallas kernel (same rolling-window discipline).
+    """
+    pattern, text, plen, tlen = _prep(pattern, text, plen, tlen)
+    B = pattern.shape[0]
+    K = 2 * k_max + 1
+    W = pen.window
+    ks = jnp.arange(K, dtype=jnp.int32) - k_max
+
+    # data-dependent zero: keeps the while-loop carries' varying-manual-axes
+    # consistent when this solver runs inside shard_map (per-shard loops)
+    taint = (plen.reshape(-1)[0] * 0).astype(jnp.int32)
+    m_ring = jnp.full((W, B, K), NEG, jnp.int32) + taint
+    i_ring = jnp.full((W, B, K), NEG, jnp.int32) + taint
+    d_ring = jnp.full((W, B, K), NEG, jnp.int32) + taint
+
+    M0 = jnp.full((B, K), NEG, jnp.int32).at[:, k_max].set(0)
+    M0 = _extend(M0, pattern, text, plen, tlen, ks)
+    m_ring = m_ring.at[0].set(M0)
+    score0 = jnp.where(_target_reached(M0, plen, tlen, k_max), 0, -1)
+
+    def read(ring, s, delta):
+        row = lax.dynamic_index_in_dim(ring, lax.rem(jnp.maximum(s - delta, 0),
+                                                     W), keepdims=False)
+        return jnp.where(s >= delta, row, NEG)
+
+    def body(carry):
+        s, score, m_ring, i_ring, d_ring = carry
+        M_new, I_new, D_new = _next_wavefronts(
+            pen, lambda d: read(m_ring, s, d), s, None, pattern, text,
+            plen, tlen, ks, lambda d: read(i_ring, s, d),
+            lambda d: read(d_ring, s, d))
+        row = lax.rem(s, W)
+        m_ring = lax.dynamic_update_index_in_dim(m_ring, M_new, row, axis=0)
+        i_ring = lax.dynamic_update_index_in_dim(i_ring, I_new, row, axis=0)
+        d_ring = lax.dynamic_update_index_in_dim(d_ring, D_new, row, axis=0)
+        reached = _target_reached(M_new, plen, tlen, k_max)
+        score = jnp.where((score < 0) & reached, s, score)
+        return s + 1, score, m_ring, i_ring, d_ring
+
+    def cond(carry):
+        s, score, *_ = carry
+        return (s <= s_max) & jnp.any(score < 0)
+
+    s, score, *_ = lax.while_loop(
+        cond, body, (jnp.int32(1), score0, m_ring, i_ring, d_ring))
+    return WFAResult(score, None, None, None, s)
+
+
+def wfa_scores_shardmap(pattern, text, plen, tlen, *, pen: Penalties,
+                        s_max: int, k_max: int, mesh, axis_names=None):
+    """PIM-faithful distributed WFA: per-shard termination via shard_map.
+
+    The pjit formulation's while-condition ``any(score < 0)`` spans the
+    GLOBAL batch, so SPMD inserts a small all-reduce every score iteration
+    and every shard runs until the globally-slowest pair finishes.  Wrapping
+    the ring-buffer solver in ``shard_map`` gives each shard its own loop —
+    exactly the paper's "no inter-DPU communication": zero collectives in
+    the lowered HLO (asserted by tests) and per-shard early exit.
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    names = tuple(axis_names if axis_names is not None else mesh.axis_names)
+    spec2 = P(names, None)
+    spec1 = P(names)
+
+    def local(p, t, pl, tl):
+        return wfa_scores(p, t, pl, tl, pen=pen, s_max=s_max,
+                          k_max=k_max).score
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(spec2, spec2, spec1, spec1), out_specs=spec1)
+    return fn(pattern, text, plen, tlen)

@@ -1,0 +1,2 @@
+from repro.data.reads import ReadPairSpec, generate_pairs, generate_shard  # noqa: F401
+from repro.data.tokens import TokenStreamSpec, batch_for_step  # noqa: F401

@@ -1,0 +1,86 @@
+"""Synthetic read-pair generator — the paper's workload.
+
+The paper aligns 5M pairs of 100bp reads whose divergence is bounded by an
+edit-distance threshold E (2% / 4%).  We reproduce that regime: a reference
+read is sampled uniformly over {A,C,G,T}; its mate is the read mutated with
+at most ``ceil(E*L)`` edits (substitutions / 1-base insertions / deletions,
+mixed like real sequencing error profiles).  Deterministic per (seed, index)
+so restarts and shards regenerate identical data (fault-tolerance contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+BASES = np.frombuffer(b"ACGT", dtype=np.uint8)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReadPairSpec:
+    n_pairs: int = 1000
+    read_len: int = 100
+    edit_frac: float = 0.02        # the paper's E
+    sub_prob: float = 0.6          # edit mix: substitution vs indel
+    ins_prob: float = 0.2
+    seed: int = 0
+
+
+def _mutate(rng: np.random.Generator, read: np.ndarray, n_edits: int,
+            sub_prob: float, ins_prob: float) -> np.ndarray:
+    seq = list(read)
+    for _ in range(n_edits):
+        r = rng.random()
+        pos = int(rng.integers(0, max(1, len(seq))))
+        if r < sub_prob and seq:
+            old = seq[pos]
+            choices = [b for b in BASES if b != old]
+            seq[pos] = choices[int(rng.integers(0, 3))]
+        elif r < sub_prob + ins_prob:
+            seq.insert(pos, int(BASES[int(rng.integers(0, 4))]))
+        elif seq:
+            del seq[pos]
+    return np.asarray(seq, np.uint8)
+
+
+def generate_pairs(spec: ReadPairSpec) -> Tuple[np.ndarray, np.ndarray,
+                                                np.ndarray, np.ndarray]:
+    """-> (patterns [N, Lp], plens [N], texts [N, Lt], tlens [N]) int32.
+
+    Mates can differ in length by up to ceil(E*L) (indels), so arrays are
+    padded to the batch max; padding is never read by the aligner.
+    """
+    rng = np.random.default_rng(spec.seed)
+    L = spec.read_len
+    n_err = int(np.ceil(spec.edit_frac * L))
+    pats, texts = [], []
+    for i in range(spec.n_pairs):
+        ref = BASES[rng.integers(0, 4, size=L)]
+        n_edits = int(rng.integers(0, n_err + 1))
+        mate = _mutate(rng, ref, n_edits, spec.sub_prob, spec.ins_prob)
+        pats.append(ref)
+        texts.append(mate)
+    Lp = max(len(p) for p in pats)
+    Lt = max(len(t) for t in texts)
+    P = np.zeros((spec.n_pairs, Lp), np.int32)
+    T = np.zeros((spec.n_pairs, Lt), np.int32)
+    plen = np.empty((spec.n_pairs,), np.int32)
+    tlen = np.empty((spec.n_pairs,), np.int32)
+    for i, (p, t) in enumerate(zip(pats, texts)):
+        P[i, : len(p)] = p
+        T[i, : len(t)] = t
+        plen[i] = len(p)
+        tlen[i] = len(t)
+    return P, plen, T, tlen
+
+
+def generate_shard(spec: ReadPairSpec, shard: int, n_shards: int):
+    """Deterministic shard: pairs [shard::n_shards] regenerate identically
+    regardless of worker count — the restart/straggler-skip contract."""
+    sub = dataclasses.replace(
+        spec,
+        n_pairs=(spec.n_pairs - shard + n_shards - 1) // n_shards,
+        seed=spec.seed * 1_000_003 + shard,
+    )
+    return generate_pairs(sub)

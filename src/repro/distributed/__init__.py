@@ -1,0 +1,2 @@
+from repro.distributed import sharding  # noqa: F401
+from repro.distributed import fault  # noqa: F401

@@ -1,0 +1,160 @@
+"""Logical-axis sharding: one place that decides how every tensor shards.
+
+The model code annotates tensors with *logical* axis names ("batch", "heads",
+"ff", "expert", "kv_seq", ...).  This module maps logical names onto mesh axes
+(("pod",) "data", "model") and degrades gracefully: an axis whose size does not
+divide the mesh-axis product is left unsharded (this is what makes e.g.
+whisper's 8 heads, MQA's single KV head, or batch=1 long-context decode lower
+cleanly on a 16x16 mesh).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical axis -> preferred mesh axes (in order; combined into one spec entry).
+RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "ff": ("model",),
+    "expert": ("model",),
+    "kv_seq": ("model",),     # KV-cache sequence axis (decode) — see DESIGN.md §6
+    "seq": ("model",),        # activation seq axis (sequence parallelism, §Perf)
+    "seq_data": ("data",),    # sequence sharding over the data axis (long ctx)
+    "embed": (),              # d_model stays replicated across 'model'
+    None: (),
+}
+
+_state = threading.local()
+
+
+def _mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    prev = _mesh()
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.mesh = prev
+
+
+def mesh_axis_size(mesh: Mesh, name: str) -> int:
+    try:
+        return mesh.shape[name]
+    except KeyError:
+        return 1
+
+
+def spec_entry(mesh: Mesh, dim_size: int, logical: Optional[str]):
+    """Mesh axes for one tensor dim; drops axes that don't divide dim_size."""
+    axes = [a for a in RULES.get(logical, ()) if a in mesh.axis_names]
+    # Greedily keep the longest prefix whose product divides dim_size.
+    kept: list[str] = []
+    prod = 1
+    for a in axes:
+        n = mesh_axis_size(mesh, a)
+        if n > 1 and dim_size % (prod * n) == 0:
+            kept.append(a)
+            prod *= n
+    if not kept:
+        return None
+    return tuple(kept) if len(kept) > 1 else kept[0]
+
+
+def spec_for(mesh: Mesh, shape: Sequence[int], logical: Sequence[Optional[str]]) -> P:
+    assert len(shape) == len(logical), (shape, logical)
+    return P(*[spec_entry(mesh, s, l) for s, l in zip(shape, logical)])
+
+
+def sharding_for(mesh: Mesh, shape: Sequence[int], logical: Sequence[Optional[str]]) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(mesh, shape, logical))
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint against the ambient mesh; no-op outside one."""
+    mesh = _mesh()
+    if mesh is None or len(mesh.devices.flatten()) == 1:
+        return x
+    spec = spec_for(mesh, x.shape, logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Param trees: leaves annotated at init with logical axes.
+
+
+def ann(array, *axes):
+    """Annotate a freshly-initialized parameter with logical axes."""
+    assert len(axes) == array.ndim, (array.shape, axes)
+    return (array, tuple(axes))
+
+
+def split_annotations(tree):
+    """(array, axes) leaf tree -> (param tree, logical-axes tree)."""
+    is_leaf = lambda x: isinstance(x, tuple) and len(x) == 2 and hasattr(x[0], "ndim")
+    params = jax.tree.map(lambda x: x[0], tree, is_leaf=is_leaf)
+    axes = jax.tree.map(lambda x: x[1], tree, is_leaf=is_leaf)
+    return params, axes
+
+
+def tree_shardings(mesh: Mesh, params, axes_tree):
+    """Build a NamedSharding pytree for `params` from its logical-axes tree."""
+    def one(p, ax):
+        ax = tuple(ax)
+        if len(ax) < p.ndim:  # stacked-layer leading dims added after init
+            ax = (None,) * (p.ndim - len(ax)) + ax
+        return sharding_for(mesh, p.shape, ax)
+
+    return jax.tree.map(one, params, axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x))
+
+
+def tree_specs(mesh: Mesh, params, axes_tree):
+    return jax.tree.map(lambda s: s.spec, tree_shardings(mesh, params, axes_tree))
+
+
+def zero_shardings(mesh: Mesh, params, axes_tree, *, data_axis: str = "data",
+                   min_size: int = 1 << 16):
+    """ZeRO-style 2-D parameter sharding: after the logical ('model') rules,
+    shard the largest still-unsharded dim of every big tensor over the
+    ``data`` axis.  Params, grads and optimizer moments then occupy
+    1/(data*model) of their global size per device — the difference between
+    a 32B-param train step fitting in 16 GB HBM or not (EXPERIMENTS.md
+    §Dry-run).  XLA SPMD inserts the weight all-gathers / gradient
+    reduce-scatters this implies (the ZeRO-3 communication pattern).
+    Sharding stays *within* a pod: the pod axis is untouched, so cross-pod
+    links only carry the data-parallel gradient reduction.
+    """
+    if data_axis not in mesh.axis_names or mesh_axis_size(mesh, data_axis) == 1:
+        return tree_shardings(mesh, params, axes_tree)
+    n = mesh_axis_size(mesh, data_axis)
+
+    def one(p, ax):
+        ax = tuple(ax)
+        if len(ax) < p.ndim:
+            ax = (None,) * (p.ndim - len(ax)) + ax
+        spec = [spec_entry(mesh, s, l) for s, l in zip(p.shape, ax)]
+        size = 1
+        for s in p.shape:
+            size *= int(s)
+        if size >= min_size:
+            # biggest unsharded dim divisible by the data-axis size
+            cands = [(s, i) for i, (s, e) in enumerate(zip(p.shape, spec))
+                     if e is None and s % n == 0]
+            if cands:
+                _, i = max(cands)
+                spec[i] = data_axis
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, params, axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(a, (str, type(None))) for a in x))

@@ -1,0 +1,123 @@
+"""Pallas TPU flash-attention (forward): online-softmax blocked attention.
+
+Why it exists here: the dry-run roofline showed every attention arch's
+memory term dominated by the materialized S^2 score tensors (XLA cannot
+fuse matmul->softmax->matmul, so scores round-trip HBM in fp32 —
+EXPERIMENTS.md §Roofline).  This kernel is the standard fix: Q/K/V stream
+HBM->VMEM in (block_q x block_k) tiles, the softmax runs online with
+running (max, denom) carried in VMEM scratch, and only O leaves the core —
+HBM traffic drops from O(S^2) to O(S*d).
+
+Grid: (B * KV_heads, n_q_blocks, n_kv_blocks) — the LAST dim iterates
+innermost/sequentially on a TPU core, so the scratch carries (m, l, acc)
+persist across KV blocks of one (batch-head, q-block) cell.  GQA: the G
+query heads sharing one KV head ride in the same block (the MXU matmul is
+[G*bq, dh] @ [dh, bk] — G fattens the tile, good for small bq).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            causal: bool, scale: float, block_q: int, block_k: int,
+            n_kv_blocks: int):
+    # q_ref [1, G, bq, dh]; k_ref/v_ref [1, bk, dh]; o_ref like q_ref
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                   # [G, bq, dh]
+    k = k_ref[0]                                   # [bk, dh]
+    v = v_ref[0]
+    G, bq, dh = q.shape
+
+    s = jax.lax.dot_general(q.reshape(G * bq, dh), k,
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s.reshape(G, bq, k.shape[0]) * scale       # [G, bq, bk] f32
+
+    if causal:
+        q_pos = iq * block_q + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        k_pos = ik * block_k + lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_scr[...]                            # [G, bq]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[..., None])              # [G, bq, bk]
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+
+    pv = jax.lax.dot_general(
+        p.reshape(G * bq, -1).astype(v.dtype), v,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).reshape(G, bq, dh)
+    acc_scr[...] = acc_scr[...] * corr[..., None] + pv
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[..., None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention_gqa(q, k, v, *, causal: bool = True, block_q: int = 512,
+                        block_k: int = 512, interpret: bool = True):
+    """q [B, Sq, H, dh]; k/v [B, Sk, KV, dh]; H % KV == 0.
+    -> o [B, Sq, H, dh].  Sq % block_q == 0 == Sk % block_k (ops.py pads)."""
+    B, Sq, H, dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    assert H % KV == 0, (H, KV)
+    G = H // KV
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk)
+    nq, nk = Sq // block_q, Sk // block_k
+    scale = 1.0 / math.sqrt(dh)
+
+    # [B,S,H,dh] -> [B*KV, G, Sq, dh]; k/v -> [B*KV, Sk, dh]
+    qr = (q.reshape(B, Sq, KV, G, dh).transpose(0, 2, 3, 1, 4)
+          .reshape(B * KV, G, Sq, dh))
+    kr = k.transpose(0, 2, 1, 3).reshape(B * KV, Sk, dh)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * KV, Sk, dh)
+
+    kernel = functools.partial(_kernel, causal=causal, scale=scale,
+                               block_q=block_q, block_k=block_k,
+                               n_kv_blocks=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * KV, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, G, block_q, dh), lambda bh, iq, ik: (bh, 0, iq, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda bh, iq, ik: (bh, ik, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda bh, iq, ik: (bh, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, block_q, dh),
+                               lambda bh, iq, ik: (bh, 0, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, Sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, block_q), jnp.float32),
+            pltpu.VMEM((G, block_q), jnp.float32),
+            pltpu.VMEM((G, block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+
+    return (out.reshape(B, KV, G, Sq, dh).transpose(0, 3, 1, 2, 4)
+            .reshape(B, Sq, H, dh))

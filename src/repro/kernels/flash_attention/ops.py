@@ -1,0 +1,51 @@
+"""jit'd wrapper for the flash-attention kernel: padding + defaults.
+
+Pads Sq/Sk up to block multiples; padded KV positions are masked out by the
+causal structure (pad keys sit at positions >= every real query) for causal
+use; the non-causal path requires dividing blocks (checked).  The wrapper
+exposes the same signature as the jnp oracle.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_gqa
+from repro.kernels.flash_attention.ref import ref_attention_gqa  # noqa: F401
+
+
+def _round_up(x, m):
+    return ((x + m - 1) // m) * m
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: Optional[bool] = None):
+    """Drop-in blocked attention. q [B,Sq,H,dh]; k/v [B,Sk,KV,dh]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, Sq, H, dh = q.shape
+    Sk = k.shape[1]
+    bq = min(block_q, _round_up(Sq, 128))
+    bk = min(block_k, _round_up(Sk, 128))
+    Sq_p, Sk_p = _round_up(Sq, bq), _round_up(Sk, bk)
+
+    if Sq_p != Sq:
+        q = jnp.pad(q, ((0, 0), (0, Sq_p - Sq), (0, 0), (0, 0)))
+    if Sk_p != Sk:
+        k = jnp.pad(k, ((0, 0), (0, Sk_p - Sk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Sk_p - Sk), (0, 0), (0, 0)))
+    if not causal and Sk_p != Sk:
+        # mask pad keys by pushing them outside every query's window:
+        # simplest correct route — fall back to biasing via huge negative
+        # handled in-kernel only for causal; mask here by zeroing V and
+        # subtracting their softmax mass is NOT exact, so instead shift pad
+        # keys to -inf via a causal=False kernel pass over the REAL Sk only.
+        raise ValueError("non-causal flash path requires Sk % block_k == 0 "
+                         "(pad upstream or pick a dividing block)")
+
+    o = flash_attention_gqa(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                            interpret=interpret)
+    return o[:, :Sq]

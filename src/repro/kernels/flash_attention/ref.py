@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash-attention kernel: materialized-scores GQA
+attention with fp32 softmax (numerically the reference the kernel must
+match block-for-block)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_attention_gqa(q, k, v, *, causal: bool = True):
+    """q [B,Sq,H,dh]; k/v [B,Sk,KV,dh] -> [B,Sq,H,dh]."""
+    B, Sq, H, dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    s = s / math.sqrt(dh)
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return o.reshape(B, Sq, H, dh)

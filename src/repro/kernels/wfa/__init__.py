@@ -1,0 +1,2 @@
+from repro.kernels.wfa.ops import wfa_align, wfa_align_np  # noqa: F401
+from repro.kernels.wfa.ref import ref_scores  # noqa: F401

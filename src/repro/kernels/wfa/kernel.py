@@ -1,0 +1,167 @@
+"""Pallas TPU kernel for batched WFA — the DPU inner loop, re-vectorized.
+
+Hardware mapping (DESIGN.md §2):
+
+* one **grid program** ≙ one DPU: it owns a block of ``BP`` pairs and runs
+  their entire alignment without leaving VMEM;
+* **BlockSpec** HBM→VMEM tiling of the pair batch ≙ the MRAM→WRAM DMA;
+* the M/I/D **ring buffers** (depth ``window = max(x,o+e)+1``) live in VMEM
+  scratch ≙ the WFA metadata the paper keeps hot in WRAM;
+* wavefronts are laid out ``[pairs, diagonals]`` on (sublane, lane) —
+  every arithmetic op is a full-width vector op;
+* character fetch during extension uses a **one-hot compare-and-reduce**
+  (``sum_l [idx == l] * seq[l]``) instead of a per-lane gather, which TPUs
+  lack (UPMEM's scalar loads do not transfer);
+* no communication between grid programs ≙ no inter-DPU communication.
+
+Score-only (throughput) mode, exactly like the ring-buffer jnp reference
+``kernels.wfa.ref.ref_scores`` it is validated against.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.penalties import Penalties
+
+NEG = -(1 << 20)
+_THRESH = NEG // 2
+
+
+def _gather_chars(seq, idx):
+    """seq [BP, L], idx [BP, K] -> seq[b, idx[b, k]] as [BP, K].
+
+    One-hot contraction (VPU compare + reduce); idx is pre-clipped by the
+    caller's validity mask so out-of-range lanes read junk that is never used.
+    """
+    BP, L = seq.shape
+    K = idx.shape[1]
+    l_iota = lax.broadcasted_iota(jnp.int32, (BP, K, L), 2)
+    idx_c = jnp.clip(idx, 0, L - 1)
+    hit = (l_iota == idx_c[:, :, None])
+    return jnp.sum(jnp.where(hit, seq[:, None, :], 0), axis=2)
+
+
+def _make_kernel(pen: Penalties, s_max: int):
+    x, o, e = pen.x, pen.o, pen.e
+    W = pen.window
+
+    def kernel(p_ref, t_ref, pl_ref, tl_ref, out_ref, steps_ref,
+               m_ring, i_ring, d_ring):
+        BP, Lp = p_ref.shape
+        _, Lt = t_ref.shape
+        K = m_ring.shape[-1]
+        kc = K // 2
+
+        pat = p_ref[...]
+        txt = t_ref[...]
+        plen = pl_ref[...]                       # [BP, 1]
+        tlen = tl_ref[...]
+        ks = lax.broadcasted_iota(jnp.int32, (BP, K), 1) - kc
+
+        def extend(M):
+            def trip(st):
+                M, _ = st
+                v = M - ks
+                can = ((M > _THRESH) & (M >= 0) & (M < tlen)
+                       & (v >= 0) & (v < plen))
+                tc = _gather_chars(txt, M)
+                pc = _gather_chars(pat, v)
+                adv = can & (tc == pc)
+                return M + adv.astype(jnp.int32), jnp.any(adv)
+
+            st = trip((M, jnp.bool_(True)))
+            M, _ = lax.while_loop(lambda st: st[1], trip, st)
+            return M
+
+        def reached(M):
+            """[BP, 1] bool: furthest offset hit the (tlen, plen) corner."""
+            k_final = tlen - plen                # [BP, 1] diagonal value
+            hit = (ks == k_final) & (M >= tlen) & (M > _THRESH)
+            return jnp.any(hit, axis=1, keepdims=True)
+
+        def store_row(ring, row, val):
+            ring[pl.ds(row, 1)] = val[None]
+
+        def load_row(ring, s, delta):
+            row = lax.rem(jnp.maximum(s - delta, 0), W)
+            val = ring[pl.ds(row, 1)][0]
+            return jnp.where(s >= delta, val, NEG)
+
+        # s = 0
+        M0 = jnp.where(ks == 0, 0, NEG)
+        M0 = extend(M0)
+        store_row(m_ring, 0, M0)
+        store_row(i_ring, 0, jnp.full((BP, K), NEG, jnp.int32))
+        store_row(d_ring, 0, jnp.full((BP, K), NEG, jnp.int32))
+        score0 = jnp.where(reached(M0), 0, -1)
+
+        def body(carry):
+            s, score = carry
+            m_owe = load_row(m_ring, s, o + e)
+            m_x = load_row(m_ring, s, x)
+            i_e = load_row(i_ring, s, e)
+            d_e = load_row(d_ring, s, e)
+
+            neg_col = jnp.full((BP, 1), NEG, jnp.int32)
+            sh_r = lambda w: jnp.concatenate([neg_col, w[:, :-1]], axis=1)
+            sh_l = lambda w: jnp.concatenate([w[:, 1:], neg_col], axis=1)
+
+            i_src = jnp.maximum(sh_r(m_owe), sh_r(i_e))
+            I_new = jnp.where((i_src > _THRESH) & (i_src + 1 <= tlen),
+                              i_src + 1, NEG)
+            d_src = jnp.maximum(sh_l(m_owe), sh_l(d_e))
+            D_new = jnp.where((d_src > _THRESH) & (d_src - ks <= plen),
+                              d_src, NEG)
+            X_new = jnp.where((m_x > _THRESH) & (m_x + 1 <= tlen)
+                              & (m_x + 1 - ks <= plen), m_x + 1, NEG)
+            M_new = extend(jnp.maximum(jnp.maximum(X_new, I_new), D_new))
+
+            row = lax.rem(s, W)
+            store_row(m_ring, row, M_new)
+            store_row(i_ring, row, I_new)
+            store_row(d_ring, row, D_new)
+            score = jnp.where((score < 0) & reached(M_new), s, score)
+            return s + 1, score
+
+        def cond(carry):
+            s, score = carry
+            return (s <= s_max) & jnp.any(score < 0)
+
+        s_end, score = lax.while_loop(cond, body, (jnp.int32(1), score0))
+        out_ref[...] = score
+        steps_ref[...] = jnp.broadcast_to(s_end, steps_ref.shape)
+
+    return kernel, W
+
+
+@functools.partial(jax.jit, static_argnames=("pen", "s_max", "k_pad",
+                                             "block_pairs", "interpret"))
+def wfa_pallas(pattern, text, plen, tlen, *, pen: Penalties, s_max: int,
+               k_pad: int, block_pairs: int = 8, interpret: bool = True):
+    """pattern/text [B, L*] int32 (B % block_pairs == 0, L* % 128 == 0),
+    plen/tlen [B, 1] int32, k_pad % 128 == 0 is the padded diagonal count.
+    -> (score [B, 1] int32, steps [B, 1] int32)."""
+    B, Lp = pattern.shape
+    Lt = text.shape[1]
+    BP = block_pairs
+    assert B % BP == 0, (B, BP)
+    kernel, W = _make_kernel(pen, s_max)
+    grid = (B // BP,)
+
+    spec2 = lambda L: pl.BlockSpec((BP, L), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec2(Lp), spec2(Lt), spec2(1), spec2(1)],
+        out_specs=[spec2(1), spec2(1)],
+        out_shape=[jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((B, 1), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((W, BP, k_pad), jnp.int32)] * 3,
+        interpret=interpret,
+    )(pattern, text, plen, tlen)

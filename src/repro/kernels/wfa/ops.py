@@ -1,0 +1,71 @@
+"""jit'd wrapper around the Pallas WFA kernel: padding, blocking, unpadding.
+
+Hardware-alignment contract (DESIGN.md §2): sequence buffers pad to lane
+multiples (128), the diagonal axis pads to a lane multiple, the pair axis
+pads to the block size — the TPU analogue of UPMEM's 8-byte DMA alignment,
+absorbed here by the wrapper exactly like the paper's custom allocator.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.penalties import Penalties
+from repro.kernels.wfa.kernel import wfa_pallas
+
+LANE = 128
+
+
+def _round_up(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m
+
+
+def _pad_axis(x, axis: int, to: int, value=0):
+    pad = to - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def wfa_align(pattern, text, plen, tlen, *, pen: Penalties, s_max: int,
+              k_max: int, block_pairs: int = 8,
+              interpret: Optional[bool] = None):
+    """Batched WFA scores via the Pallas kernel.
+
+    pattern/text: [B, L*] int; plen/tlen: [B] int.  Returns [B] int32 costs
+    (-1 where the optimal cost exceeds ``s_max``).  ``interpret`` defaults to
+    True off-TPU (CPU validation) and False on TPU.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    pattern = jnp.asarray(pattern, jnp.int32)
+    text = jnp.asarray(text, jnp.int32)
+    plen = jnp.asarray(plen, jnp.int32).reshape(-1)
+    tlen = jnp.asarray(tlen, jnp.int32).reshape(-1)
+
+    B, Lp = pattern.shape
+    Lt = text.shape[1]
+    Bp = _round_up(max(B, 1), block_pairs)
+    Lp_p = _round_up(max(Lp, 1), LANE)
+    Lt_p = _round_up(max(Lt, 1), LANE)
+    k_pad = _round_up(2 * k_max + 1, LANE)
+
+    pattern = _pad_axis(_pad_axis(pattern, 1, Lp_p), 0, Bp)
+    text = _pad_axis(_pad_axis(text, 1, Lt_p), 0, Bp)
+    # padded pairs have plen = tlen = 0 -> score 0 at s = 0, no extra trips
+    plen2 = _pad_axis(plen[:, None], 0, Bp)
+    tlen2 = _pad_axis(tlen[:, None], 0, Bp)
+
+    score, _ = wfa_pallas(pattern, text, plen2, tlen2, pen=pen, s_max=s_max,
+                          k_pad=k_pad, block_pairs=block_pairs,
+                          interpret=interpret)
+    return score[:B, 0]
+
+
+def wfa_align_np(pattern, text, plen, tlen, **kw):
+    return np.asarray(wfa_align(pattern, text, plen, tlen, **kw))

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the Pallas WFA kernel.
+
+Delegates to ``core.wavefront.wfa_scores`` — the same rolling-window,
+score-only formulation the kernel implements, written in plain jnp with no
+Pallas constructs.  The kernel test sweeps shapes/dtypes and asserts exact
+equality (scores are integers; there is no tolerance to pick).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.penalties import Penalties
+from repro.core.wavefront import wfa_scores
+
+
+def ref_scores(pattern, text, plen, tlen, *, pen: Penalties, s_max: int,
+               k_max: int):
+    """[B] int32 alignment costs (-1 where > s_max)."""
+    res = wfa_scores(jnp.asarray(pattern), jnp.asarray(text),
+                     jnp.asarray(plen).reshape(-1),
+                     jnp.asarray(tlen).reshape(-1),
+                     pen=pen, s_max=s_max, k_max=k_max)
+    return res.score

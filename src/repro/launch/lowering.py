@@ -1,0 +1,194 @@
+"""Cell construction for dry-run / train / serve: (fn, abstract args,
+in/out shardings, donation) for every (arch x input-shape x mesh) cell.
+
+``train_*`` lowers train_step, ``prefill_*`` lowers prefill, ``decode_*`` /
+``long_*`` lower serve_step (one new token against a seq_len-deep cache).
+The ``wfa-paper`` workload lowers the batched aligner with the pair axis
+sharded over every mesh axis (PIM: all chips are DPUs, no collectives).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.penalties import Penalties
+from repro.core.aligner import problem_bounds
+from repro.distributed.sharding import (sharding_for, tree_shardings,
+                                        zero_shardings)
+from repro.launch.mesh import data_shards, mesh_devices
+from repro.models.common import ModelConfig, ShapeSpec, num_microbatches
+from repro.models.registry import (abstract_train_state, batch_logical_axes,
+                                   batch_specs, decode_logical_axes,
+                                   decode_specs, get_model_fns)
+from repro.optim.adamw import AdamWConfig
+
+
+@dataclasses.dataclass
+class Cell:
+    name: str
+    fn: Callable
+    args: Tuple[Any, ...]            # abstract (ShapeDtypeStruct) args
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    meta: Dict[str, Any]
+
+
+def _batch_shardings(mesh: Mesh, specs, axes):
+    return jax.tree.map(
+        lambda s, ax: sharding_for(mesh, s.shape, tuple(ax)),
+        specs, axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x))
+
+
+def build_lm_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                  opt_cfg: Optional[AdamWConfig] = None,
+                  mode: str = "memory", zero: bool = True) -> Cell:
+    """``mode``:
+
+    * ``"memory"``   — production lowering (layer scan rolled, microbatched,
+      chunked attention): compiles fast, ``memory_analysis`` proves the step
+      fits.  XLA counts scan bodies ONCE, so its FLOP numbers undercount.
+    * ``"roofline"`` — accounting lowering (layer scan fully unrolled, no
+      microbatch scan, unchunked attention): identical math, exact HLO
+      FLOP/byte/collective counts for the roofline table.
+    """
+    assert mode in ("memory", "roofline"), mode
+    if mode == "roofline":
+        cfg = cfg.replace(unroll_layers=True, q_chunk=shape.seq_len,
+                          microbatch_tokens=1 << 40)
+    fns = get_model_fns(cfg)
+    state_sds, state_axes = abstract_train_state(cfg)
+    params_sds = state_sds["params"]
+    params_sh = tree_shardings(mesh, params_sds, state_axes["params"])
+
+    if shape.kind == "train":
+        n_micro = num_microbatches(cfg, shape, data_shards(mesh))
+        step = fns.make_train_step(cfg, opt_cfg or AdamWConfig(), n_micro)
+        b_sds = batch_specs(cfg, shape)
+        b_sh = _batch_shardings(mesh, b_sds, batch_logical_axes(cfg, shape))
+        # ZeRO 2-D state sharding: without it no >8B train cell fits HBM
+        # (§Dry-run); `zero=False` is kept as the recorded baseline.
+        state_sh = (zero_shardings(mesh, state_sds, state_axes) if zero
+                    else tree_shardings(mesh, state_sds, state_axes))
+        return Cell(
+            name=f"{cfg.name}:{shape.name}",
+            fn=step, args=(state_sds, b_sds),
+            in_shardings=(state_sh, b_sh),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,),
+            meta={"kind": "train", "n_micro": n_micro, "mode": mode},
+        )
+
+    if shape.kind == "prefill":
+        b_sds = batch_specs(cfg, shape)
+        b_sh = _batch_shardings(mesh, b_sds, batch_logical_axes(cfg, shape))
+
+        if cfg.family == "encdec":
+            fn = lambda params, tokens, frames: fns.prefill(
+                params, cfg, tokens, frames)
+            args = (params_sds, b_sds["tokens"], b_sds["frames"])
+            in_sh = (params_sh, b_sh["tokens"], b_sh["frames"])
+        elif cfg.family == "vlm":
+            fn = lambda params, tokens, pe, mp: fns.prefill(
+                params, cfg, tokens, patch_embeds=pe, mrope_pos=mp)
+            args = (params_sds, b_sds["tokens"], b_sds["patch_embeds"],
+                    b_sds["mrope_pos"])
+            in_sh = (params_sh, b_sh["tokens"], b_sh["patch_embeds"],
+                     b_sh["mrope_pos"])
+        else:
+            fn = lambda params, tokens: fns.prefill(params, cfg, tokens)
+            args = (params_sds, b_sds["tokens"])
+            in_sh = (params_sh, b_sh["tokens"])
+        return Cell(name=f"{cfg.name}:{shape.name}", fn=fn, args=args,
+                    in_shardings=in_sh, out_shardings=None,
+                    donate_argnums=(), meta={"kind": "prefill", "mode": mode})
+
+    # decode
+    d_sds = decode_specs(cfg, shape)
+    d_axes = decode_logical_axes(cfg)
+    cache_sh = _batch_shardings(mesh, d_sds["cache"], d_axes["cache"])
+    tok_sh = sharding_for(mesh, d_sds["token"].shape, ("batch",))
+    len_sh = NamedSharding(mesh, P())
+
+    if cfg.family == "vlm":
+        mp_sh = sharding_for(mesh, d_sds["mrope_pos"].shape,
+                             ("batch", None, None))
+        fn = lambda params, cache, token, cache_len, mp: fns.serve_step(
+            params, cfg, cache, token, cache_len, mrope_pos=mp)
+        args = (params_sds, d_sds["cache"], d_sds["token"],
+                d_sds["cache_len"], d_sds["mrope_pos"])
+        in_sh = (params_sh, cache_sh, tok_sh, len_sh, mp_sh)
+    else:
+        fn = lambda params, cache, token, cache_len: fns.serve_step(
+            params, cfg, cache, token, cache_len)
+        args = (params_sds, d_sds["cache"], d_sds["token"],
+                d_sds["cache_len"])
+        in_sh = (params_sh, cache_sh, tok_sh, len_sh)
+    return Cell(name=f"{cfg.name}:{shape.name}", fn=fn, args=args,
+                in_shardings=in_sh, out_shardings=(None, cache_sh),
+                donate_argnums=(1,), meta={"kind": "decode", "mode": mode})
+
+
+def build_wfa_cell(workload, mesh: Mesh, *, edit_frac: Optional[float] = None,
+                   pairs_per_device: Optional[int] = None,
+                   variant: str = "pjit") -> Cell:
+    """The paper's own workload: batched WFA, pair axis over all mesh axes.
+
+    ``variant="pjit"`` is the baseline (global lock-step termination — SPMD
+    inserts a tiny all-reduce per score iteration); ``"shard_map"`` is the
+    PIM-faithful per-shard-termination version (zero collectives).
+    """
+    from repro.core.wavefront import wfa_scores, wfa_scores_shardmap
+
+    ef = edit_frac if edit_frac is not None else workload.edit_frac
+    ppd = pairs_per_device or workload.pairs_per_device
+    n_dev = mesh_devices(mesh)
+    B = ppd * n_dev
+    L = workload.read_len
+    Lpad = ((L + 127) // 128) * 128
+    import numpy as np
+    fake = np.full((1,), L, np.int32)
+    s_max, k_max = problem_bounds(workload.pen, fake, fake, ef)
+
+    if variant == "shard_map":
+        def fn(pattern, text, plen, tlen):
+            return wfa_scores_shardmap(pattern, text, plen, tlen,
+                                       pen=workload.pen, s_max=s_max,
+                                       k_max=k_max, mesh=mesh)
+    else:
+        def fn(pattern, text, plen, tlen):
+            res = wfa_scores(pattern, text, plen, tlen, pen=workload.pen,
+                             s_max=s_max, k_max=k_max)
+            return res.score
+
+    pair_spec = NamedSharding(mesh, P(tuple(mesh.axis_names)))
+    seq_sds = jax.ShapeDtypeStruct((B, Lpad), jnp.int32)
+    len_sds = jax.ShapeDtypeStruct((B,), jnp.int32)
+    return Cell(
+        name=f"wfa-paper:E{int(ef * 100)}:{variant}",
+        fn=fn, args=(seq_sds, seq_sds, len_sds, len_sds),
+        in_shardings=(pair_spec, pair_spec, pair_spec, pair_spec),
+        out_shardings=pair_spec,
+        donate_argnums=(),
+        meta={"kind": "align", "pairs": B, "s_max": s_max, "k_max": k_max,
+              "edit_frac": ef, "variant": variant},
+    )
+
+
+def lower_cell(cell: Cell, mesh: Mesh):
+    """-> (lowered, jitted). Wrap in the mesh contexts so logical-axis
+    sharding constraints inside model code resolve against this mesh."""
+    from repro.distributed.sharding import use_mesh
+
+    jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                     out_shardings=cell.out_shardings,
+                     donate_argnums=cell.donate_argnums)
+    with mesh, use_mesh(mesh):
+        lowered = jitted.lower(*cell.args)
+    return lowered, jitted

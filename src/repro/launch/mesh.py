@@ -1,0 +1,47 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set XLA_FLAGS before the
+first jax device query, and smoke tests must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(shape)))
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(shape)))
+
+
+def make_host_mesh(model_parallel: Optional[int] = None) -> Mesh:
+    """Whatever this host actually has (CPU: usually 1 device)."""
+    n = jax.device_count()
+    mp = model_parallel or 1
+    assert n % mp == 0, (n, mp)
+    return jax.make_mesh((n // mp, mp), ("data", "model"), axis_types=_auto(2))
+
+
+def mesh_devices(mesh: Mesh) -> int:
+    return int(mesh.devices.size)
+
+
+def data_shards(mesh: Mesh) -> int:
+    n = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            n *= mesh.shape[ax]
+    return n

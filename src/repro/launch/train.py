@@ -1,0 +1,142 @@
+"""Training driver: data pipeline -> train_step -> checkpoint/restart loop.
+
+Runs the real thing at whatever scale the host has (CPU here: smoke-size or
+the examples' ~100M config); the production-mesh path is exercised by
+``dryrun.py`` (same Cell construction).  Demonstrates the full
+fault-tolerance loop: periodic async checkpoints, simulated failure,
+restart-and-continue (bit-exact, verified by tests/test_checkpoint.py).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.configs import get_config, smoke_config
+from repro.distributed.fault import FailureInjector, StragglerMonitor
+from repro.distributed.sharding import use_mesh
+from repro.data.tokens import TokenStreamSpec, batch_for_step
+from repro.launch.mesh import make_host_mesh
+from repro.models.common import ModelConfig, ShapeSpec
+from repro.models.registry import get_model_fns
+from repro.optim import compression
+from repro.optim.adamw import AdamWConfig
+
+
+def example_100m(vocab: int = 8192) -> ModelConfig:
+    """~100M-param dense decoder for the end-to-end example run."""
+    return ModelConfig(
+        name="example-100m", family="dense",
+        n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, d_head=64,
+        d_ff=2048, vocab_size=vocab, qk_norm=True, tie_embeddings=True,
+        remat_policy="dots", microbatch_tokens=1 << 30)
+
+
+def _grad_transform(kind: Optional[str]):
+    if kind in (None, "none"):
+        return None
+    if kind == "bf16":
+        return lambda g: compression.decompress_bf16(compression.compress_bf16(g))
+    if kind == "int8":
+        return lambda g: compression.decompress_int8(compression.compress_int8(g))
+    raise ValueError(kind)
+
+
+def train(cfg: ModelConfig, *, steps: int, global_batch: int, seq_len: int,
+          opt_cfg: Optional[AdamWConfig] = None, ckpt_dir: Optional[str] = None,
+          ckpt_every: int = 50, resume: bool = False,
+          fail_at_step: Optional[int] = None, grad_compress: Optional[str] = None,
+          seed: int = 0, log_every: int = 10, mesh=None):
+    """Returns (final state, list of per-step losses)."""
+    opt_cfg = opt_cfg or AdamWConfig(total_steps=steps,
+                                     warmup_steps=max(1, steps // 20))
+    fns = get_model_fns(cfg)
+    mesh = mesh if mesh is not None else make_host_mesh()
+    spec = TokenStreamSpec(vocab_size=cfg.vocab_size, seq_len=seq_len,
+                           global_batch=global_batch, seed=seed)
+    injector = FailureInjector(fail_at_step)
+    monitor = StragglerMonitor(n_workers=1)
+    writer = ckpt.AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
+
+    with mesh, use_mesh(mesh):
+        state, _ = fns.init_train_state(cfg, jax.random.key(seed))
+        start_step = 0
+        if resume and ckpt_dir and ckpt.latest_step(ckpt_dir) is not None:
+            state, start_step = ckpt.restore(ckpt_dir, state)
+            start_step += 1
+            print(f"[train] resumed from step {start_step - 1}", flush=True)
+
+        step_fn = jax.jit(fns.make_train_step(
+            cfg, opt_cfg, n_micro=1, grad_transform=_grad_transform(grad_compress)),
+            donate_argnums=(0,))
+
+        losses = []
+        for step in range(start_step, steps):
+            batch = batch_for_step(spec, step)
+            if cfg.family == "encdec":
+                batch["frames"] = np.zeros(
+                    (global_batch, cfg.enc_frames, cfg.d_model), np.float32)
+            t0 = time.perf_counter()
+            state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])
+            monitor.record(0, time.perf_counter() - t0)
+            losses.append(loss)
+            if step % log_every == 0 or step == steps - 1:
+                print(f"[train] step {step:5d} loss {loss:.4f} "
+                      f"lr {float(metrics['lr']):.2e} "
+                      f"gnorm {float(metrics['grad_norm']):.3f}", flush=True)
+            if writer and (step + 1) % ckpt_every == 0:
+                writer.save(step, state, extra_meta={"arch": cfg.name})
+            injector.check(step)  # may raise SimulatedFailure AFTER ckpt
+        if writer:
+            writer.save(steps - 1, state, extra_meta={"arch": cfg.name})
+            writer.wait()
+    return state, losses
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="example-100m",
+                    help="arch id, 'example-100m', or '<id>-smoke'")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--simulate-failure", type=int, default=None,
+                    help="raise a simulated node failure at this step")
+    ap.add_argument("--grad-compress", choices=["none", "bf16", "int8"],
+                    default="none")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.arch == "example-100m":
+        cfg = example_100m()
+    elif args.arch.endswith("-smoke"):
+        cfg = smoke_config(args.arch[: -len("-smoke")])
+    else:
+        cfg = get_config(args.arch)
+
+    opt = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                      warmup_steps=max(1, args.steps // 20))
+    try:
+        train(cfg, steps=args.steps, global_batch=args.global_batch,
+              seq_len=args.seq, opt_cfg=opt, ckpt_dir=args.ckpt_dir,
+              ckpt_every=args.ckpt_every, resume=args.resume,
+              fail_at_step=args.simulate_failure,
+              grad_compress=args.grad_compress, seed=args.seed)
+    except FailureInjector.SimulatedFailure as e:
+        print(f"[train] {e} — restart with --resume to continue", flush=True)
+        return 42
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

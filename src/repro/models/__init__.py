@@ -1,0 +1,5 @@
+from repro.models.common import ModelConfig, SHAPES, ShapeSpec, model_flops  # noqa: F401
+from repro.models.registry import (ModelFns, abstract_train_state,  # noqa: F401
+                                   batch_logical_axes, batch_specs,
+                                   build_model, decode_logical_axes,
+                                   decode_specs, get_model_fns, synth_batch)

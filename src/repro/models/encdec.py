@@ -1,0 +1,196 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` supplies
+precomputed frame embeddings [B, enc_frames, d_model].  Positions are absolute
+sinusoidal (rope_theta=0 in the config disables RoPE inside attention).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import ann, constrain
+from repro.models import layers as L
+from repro.models.common import ModelConfig
+from repro.models.transformer import _remat_policy, _stack
+
+
+def _sinusoid(pos, d):
+    """pos [...,] -> [..., d] sinusoidal embedding (whisper layout)."""
+    half = d // 2
+    inv = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                  * (jnp.log(10000.0) / max(1, half - 1)))
+    ang = pos.astype(jnp.float32)[..., None] * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _init_enc_block(cfg, key):
+    ks = jax.random.split(key, 2)
+    return {"ln1": L.init_rmsnorm(cfg, cfg.d_model),
+            "ln2": L.init_rmsnorm(cfg, cfg.d_model),
+            "attn": L.init_gqa(cfg, ks[0]),
+            "mlp": L.init_mlp(cfg, ks[1])}
+
+
+def _init_dec_block(cfg, key):
+    ks = jax.random.split(key, 3)
+    return {"ln1": L.init_rmsnorm(cfg, cfg.d_model),
+            "lnx": L.init_rmsnorm(cfg, cfg.d_model),
+            "ln2": L.init_rmsnorm(cfg, cfg.d_model),
+            "attn": L.init_gqa(cfg, ks[0]),
+            "xattn": L.init_gqa(cfg, ks[1]),
+            "mlp": L.init_mlp(cfg, ks[2])}
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, cfg.enc_layers + cfg.n_layers + 2)
+    V, D = cfg.vocab_padded, cfg.d_model
+    return {
+        "embed": {"w": ann(
+            jax.random.normal(ks[-1], (V, D), jnp.float32).astype(cfg.pdtype()) * 0.02,
+            "vocab", None)},
+        "enc_layers": _stack([_init_enc_block(cfg, ks[i])
+                              for i in range(cfg.enc_layers)]),
+        "enc_norm": L.init_rmsnorm(cfg, D),
+        "layers": _stack([_init_dec_block(cfg, ks[cfg.enc_layers + i])
+                          for i in range(cfg.n_layers)]),
+        "final_norm": L.init_rmsnorm(cfg, D),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames [B, T, D] (stubbed frontend output) -> encoder states."""
+    c = cfg.cdtype()
+    B, T, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    h = frames.astype(c) + _sinusoid(pos, cfg.d_model).astype(c)
+    h = constrain(h, "batch", None, None)
+
+    def body(h, blk):
+        a = L.rmsnorm(blk["ln1"], h, cfg.rms_eps)
+        h = h + L.gqa_forward(blk["attn"], a, cfg, pos, causal=False)
+        m = L.rmsnorm(blk["ln2"], h, cfg.rms_eps)
+        h = h + L.mlp_forward(blk["mlp"], m, cfg)
+        return constrain(h, "batch", None, None), None
+
+    body_r = jax.checkpoint(body, policy=_remat_policy(cfg), prevent_cse=False)
+    h, _ = lax.scan(body_r, h, params["enc_layers"], unroll=cfg.scan_unroll)
+    return L.rmsnorm(params["enc_norm"], h, cfg.rms_eps)
+
+
+def forward(params, cfg: ModelConfig, tokens, frames):
+    """Teacher-forced decoder. -> (logits [B,S,Vp], aux=0)."""
+    c = cfg.cdtype()
+    enc_h = encode(params, cfg, frames)
+    B, S = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    h = jnp.take(params["embed"]["w"], tokens, axis=0).astype(c)
+    h = h + _sinusoid(pos, cfg.d_model).astype(c)
+    h = constrain(h, "batch", None, None)
+
+    def body(h, blk):
+        a = L.rmsnorm(blk["ln1"], h, cfg.rms_eps)
+        h = h + L.gqa_forward(blk["attn"], a, cfg, pos, causal=True)
+        x = L.rmsnorm(blk["lnx"], h, cfg.rms_eps)
+        ek, ev = L.encode_kv(blk["xattn"], enc_h, cfg)
+        h = h + L.cross_attn_forward(blk["xattn"], x, cfg, ek, ev)
+        m = L.rmsnorm(blk["ln2"], h, cfg.rms_eps)
+        h = h + L.mlp_forward(blk["mlp"], m, cfg)
+        return constrain(h, "batch", None, None), None
+
+    body_r = jax.checkpoint(body, policy=_remat_policy(cfg), prevent_cse=False)
+    h, _ = lax.scan(body_r, h, params["layers"], unroll=cfg.scan_unroll)
+    h = L.rmsnorm(params["final_norm"], h, cfg.rms_eps)
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"]["w"].astype(c))
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    logits, _ = forward(params, cfg, batch["tokens"], batch["frames"])
+    logits = logits.astype(jnp.float32)
+    targets = batch["targets"]
+    mask = (targets >= 0).astype(jnp.float32)
+    tgt = jnp.maximum(targets, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    return jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    cd = jnp.dtype(cfg.cache_dtype)
+    Ls = cfg.n_layers
+    return {
+        "k": jnp.zeros((Ls, batch, max_seq, cfg.n_kv_heads, cfg.d_head), cd),
+        "v": jnp.zeros((Ls, batch, max_seq, cfg.n_kv_heads, cfg.d_head), cd),
+        "ck": jnp.zeros((Ls, batch, cfg.enc_frames, cfg.n_kv_heads, cfg.d_head), cd),
+        "cv": jnp.zeros((Ls, batch, cfg.enc_frames, cfg.n_kv_heads, cfg.d_head), cd),
+    }
+
+
+def cache_logical_axes(cfg: ModelConfig):
+    return {"k": (None, "batch", "kv_seq", None, None),
+            "v": (None, "batch", "kv_seq", None, None),
+            "ck": (None, "batch", "kv_seq", None, None),
+            "cv": (None, "batch", "kv_seq", None, None)}
+
+
+def prefill(params, cfg: ModelConfig, tokens, frames):
+    """Encode + teacher-forced pass emitting decoder self & cross caches."""
+    c = cfg.cdtype()
+    enc_h = encode(params, cfg, frames)
+    B, S = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    h = jnp.take(params["embed"]["w"], tokens, axis=0).astype(c)
+    h = h + _sinusoid(pos, cfg.d_model).astype(c)
+    h = constrain(h, "batch", None, None)
+    cd = jnp.dtype(cfg.cache_dtype)
+
+    def body(h, blk):
+        a = L.rmsnorm(blk["ln1"], h, cfg.rms_eps)
+        y, (k, v) = L.gqa_forward(blk["attn"], a, cfg, pos, causal=True,
+                                  return_kv=True)
+        h = h + y
+        x = L.rmsnorm(blk["lnx"], h, cfg.rms_eps)
+        ek, ev = L.encode_kv(blk["xattn"], enc_h, cfg)
+        h = h + L.cross_attn_forward(blk["xattn"], x, cfg, ek, ev)
+        m = L.rmsnorm(blk["ln2"], h, cfg.rms_eps)
+        h = h + L.mlp_forward(blk["mlp"], m, cfg)
+        h = constrain(h, "batch", None, None)
+        return h, (k, v, ek.astype(cd), ev.astype(cd))
+
+    body_r = jax.checkpoint(body, policy=_remat_policy(cfg), prevent_cse=False)
+    h, (ks, vs, cks, cvs) = lax.scan(body_r, h, params["layers"],
+                                     unroll=cfg.scan_unroll)
+    h = L.rmsnorm(params["final_norm"], h[:, -1:, :], cfg.rms_eps)
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"]["w"].astype(c))
+    return logits[:, 0].astype(jnp.float32), {"k": ks, "v": vs, "ck": cks, "cv": cvs}
+
+
+def serve_step(params, cfg: ModelConfig, cache, token, cache_len):
+    c = cfg.cdtype()
+    h = jnp.take(params["embed"]["w"], token[:, None], axis=0).astype(c)
+    B = token.shape[0]
+    pos1 = jnp.full((B, 1), cache_len, dtype=jnp.int32)
+    h = h + _sinusoid(pos1, cfg.d_model).astype(c)
+    h = constrain(h, "batch", None, None)
+
+    def body(h, xs):
+        blk, ck_, cv_, xk, xv = xs
+        a = L.rmsnorm(blk["ln1"], h, cfg.rms_eps)
+        y, nk, nv = L.gqa_decode(blk["attn"], a, cfg, ck_, cv_, cache_len)
+        h = h + y
+        x = L.rmsnorm(blk["lnx"], h, cfg.rms_eps)
+        h = h + L.cross_attn_forward(blk["xattn"], x, cfg, xk, xv)
+        m = L.rmsnorm(blk["ln2"], h, cfg.rms_eps)
+        h = h + L.mlp_forward(blk["mlp"], m, cfg)
+        return h, (nk, nv)
+
+    h, (ks, vs) = lax.scan(body, h, (params["layers"], cache["k"], cache["v"],
+                                     cache["ck"], cache["cv"]), unroll=cfg.scan_unroll)
+    h = L.rmsnorm(params["final_norm"], h, cfg.rms_eps)
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"]["w"].astype(c))
+    return logits[:, 0].astype(jnp.float32), {"k": ks, "v": vs,
+                                              "ck": cache["ck"], "cv": cache["cv"]}

@@ -1,0 +1,387 @@
+"""Transformer building blocks: norms, RoPE/M-RoPE, GQA/MLA attention, MLPs.
+
+All functions are pure; params are nested dicts whose leaves were created with
+``sharding.ann`` (array + logical axes).  Compute runs in ``cfg.compute_dtype``;
+normalizations and softmax accumulate in fp32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import ann, constrain
+from repro.models.common import ModelConfig
+
+NEG_INF = -1e30
+
+
+def _init(key, shape, scale, dtype):
+    return jax.random.normal(key, shape, dtype=jnp.float32).astype(dtype) * scale
+
+
+# --------------------------------------------------------------------------
+# Norms
+
+
+def init_rmsnorm(cfg: ModelConfig, d: int):
+    return {"w": ann(jnp.ones((d,), cfg.pdtype()), None)}
+
+
+def rmsnorm(p, x, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    return (y * p["w"].astype(jnp.float32)).astype(x.dtype)
+
+
+def head_rmsnorm(w, x, eps):
+    """Per-head RMSNorm (qwen3 qk_norm): x [..., dh], w [dh]."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE / M-RoPE
+
+
+def rope_cos_sin(pos, dim, theta, dtype):
+    """pos [..., ] int -> cos/sin [..., dim//2]."""
+    half = dim // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def mrope_cos_sin(pos3, dim, theta, sections, dtype):
+    """M-RoPE (qwen2-vl): pos3 [..., 3] -> cos/sin [..., dim//2].
+
+    Frequency slots are partitioned into (temporal, height, width) sections;
+    slot i draws its position from the section it belongs to.
+    """
+    half = dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=half)
+    pos_per_slot = jnp.take_along_axis(
+        pos3.astype(jnp.float32),
+        jnp.broadcast_to(sec_id, pos3.shape[:-1] + (half,)).astype(jnp.int32),
+        axis=-1,
+    )
+    ang = pos_per_slot * freqs
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x, cos, sin):
+    """x [B,S,H,dh]; cos/sin [B,S,dh//2] (broadcast over heads)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# GQA attention
+
+
+def init_gqa(cfg: ModelConfig, key):
+    D, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(D)
+    p = {
+        "wq": ann(_init(ks[0], (D, H, dh), s, cfg.pdtype()), None, "heads", None),
+        "wk": ann(_init(ks[1], (D, KV, dh), s, cfg.pdtype()), None, "heads", None),
+        "wv": ann(_init(ks[2], (D, KV, dh), s, cfg.pdtype()), None, "heads", None),
+        "wo": ann(_init(ks[3], (H, dh, D), 1.0 / math.sqrt(H * dh), cfg.pdtype()),
+                  "heads", None, None),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = ann(jnp.ones((dh,), cfg.pdtype()), None)
+        p["k_norm"] = ann(jnp.ones((dh,), cfg.pdtype()), None)
+    return p
+
+
+def _qkv(p, h, cfg: ModelConfig, rope):
+    c = cfg.cdtype()
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(c))
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"].astype(c))
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"].astype(c))
+    if cfg.qk_norm:
+        q = head_rmsnorm(p["q_norm"], q, cfg.rms_eps)
+        k = head_rmsnorm(p["k_norm"], k, cfg.rms_eps)
+    if rope is not None:  # whisper: absolute sinusoidal positions, no RoPE
+        cos, sin = rope
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """q [B,Sq,H,dh], k/v [B,Sk,KV,dh], mask broadcastable to [B,1,1,Sq,Sk]."""
+    B, Sq, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k) / math.sqrt(dh)
+    scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(B, Sq, H, dh)
+
+
+def gqa_forward(p, h, cfg: ModelConfig, pos, *, causal=True, mrope_pos=None,
+                q_chunk: int = 0, return_kv=False):
+    """Full-sequence attention (train / prefill). h [B,S,D], pos [B,S]."""
+    c = cfg.cdtype()
+    B, S, _ = h.shape
+    q_chunk = q_chunk or cfg.q_chunk
+    if cfg.rope_theta == 0:
+        rope = None
+    elif cfg.mrope and mrope_pos is not None:
+        rope = mrope_cos_sin(mrope_pos, cfg.d_head, cfg.rope_theta,
+                             cfg.mrope_sections, c)
+    else:
+        rope = rope_cos_sin(pos, cfg.d_head, cfg.rope_theta, c)
+    q, k, v = _qkv(p, h, cfg, rope)
+
+    if S <= q_chunk:
+        if causal:
+            mask = (pos[:, None, None, :, None] >= pos[:, None, None, None, :])
+        else:
+            mask = jnp.ones((1, 1, 1, S, S), dtype=bool)
+        out = _sdpa(q, k, v, mask, cfg)
+    else:
+        # Chunked ("flash-style") query scan: bounds the score matrix to
+        # [B, H, q_chunk, S] per step.  Backward recomputes per chunk under
+        # the block remat policy.
+        n = S // q_chunk
+        assert S % q_chunk == 0, (S, q_chunk)
+        qc = q.reshape(B, n, q_chunk, *q.shape[2:]).transpose(1, 0, 2, 3, 4)
+        pc = pos.reshape(B, n, q_chunk).transpose(1, 0, 2)
+
+        def step(_, xs):
+            qi, pi = xs
+            if causal:
+                m = (pi[:, None, None, :, None] >= pos[:, None, None, None, :])
+            else:
+                m = jnp.ones((1, 1, 1, q_chunk, S), dtype=bool)
+            return None, _sdpa(qi, k, v, m, cfg)
+
+        _, oc = lax.scan(step, None, (qc, pc))
+        out = oc.transpose(1, 0, 2, 3, 4).reshape(B, S, cfg.n_heads, cfg.d_head)
+
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(c))
+    if return_kv:
+        return y, (k.astype(jnp.dtype(cfg.cache_dtype)),
+                   v.astype(jnp.dtype(cfg.cache_dtype)))
+    return y
+
+
+def gqa_decode(p, h, cfg: ModelConfig, cache_k, cache_v, cache_len, *,
+               mrope_pos=None):
+    """One-token decode. h [B,1,D]; cache_[kv] [B,Smax,KV,dh]; cache_len scalar."""
+    c = cfg.cdtype()
+    B = h.shape[0]
+    pos = jnp.full((B, 1), cache_len, dtype=jnp.int32)
+    if cfg.rope_theta == 0:
+        rope = None
+    elif cfg.mrope and mrope_pos is not None:
+        rope = mrope_cos_sin(mrope_pos, cfg.d_head, cfg.rope_theta,
+                             cfg.mrope_sections, c)
+    else:
+        rope = rope_cos_sin(pos, cfg.d_head, cfg.rope_theta, c)
+    q, k, v = _qkv(p, h, cfg, rope)
+    cd = jnp.dtype(cfg.cache_dtype)
+    cache_k = lax.dynamic_update_slice_in_dim(cache_k, k.astype(cd), cache_len, axis=1)
+    cache_v = lax.dynamic_update_slice_in_dim(cache_v, v.astype(cd), cache_len, axis=1)
+    cache_k = constrain(cache_k, "batch", "kv_seq", None, None)
+    cache_v = constrain(cache_v, "batch", "kv_seq", None, None)
+    Smax = cache_k.shape[1]
+    valid = (jnp.arange(Smax) <= cache_len)[None, None, None, None, :]
+    out = _sdpa(q, cache_k.astype(c), cache_v.astype(c), valid, cfg)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(c))
+    return y, cache_k, cache_v
+
+
+def cross_attn_forward(p, h, cfg: ModelConfig, enc_k, enc_v):
+    """Decoder cross-attention over precomputed encoder K/V (no mask)."""
+    c = cfg.cdtype()
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(c))
+    Sk = enc_k.shape[1]
+    mask = jnp.ones((1, 1, 1, h.shape[1], Sk), dtype=bool)
+    out = _sdpa(q, enc_k.astype(c), enc_v.astype(c), mask, cfg)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(c))
+
+
+def encode_kv(p, enc_h, cfg: ModelConfig):
+    c = cfg.cdtype()
+    k = jnp.einsum("bsd,dhk->bshk", enc_h, p["wk"].astype(c))
+    v = jnp.einsum("bsd,dhk->bshk", enc_h, p["wv"].astype(c))
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# MLA attention (deepseek-v2): the compressed latent IS the KV cache.
+
+
+def init_mla(cfg: ModelConfig, key):
+    D, H = cfg.d_model, cfg.n_heads
+    r, rd, nd, vd = cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.qk_nope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(D)
+    return {
+        "wq": ann(_init(ks[0], (D, H, nd + rd), s, cfg.pdtype()), None, "heads", None),
+        "w_dkv": ann(_init(ks[1], (D, r), s, cfg.pdtype()), None, None),
+        "w_kr": ann(_init(ks[2], (D, rd), s, cfg.pdtype()), None, None),
+        "kv_norm": ann(jnp.ones((r,), cfg.pdtype()), None),
+        "w_uk": ann(_init(ks[3], (r, H, nd), 1.0 / math.sqrt(r), cfg.pdtype()),
+                    None, "heads", None),
+        "w_uv": ann(_init(ks[4], (r, H, vd), 1.0 / math.sqrt(r), cfg.pdtype()),
+                    None, "heads", None),
+        "wo": ann(_init(ks[5], (H, vd, D), 1.0 / math.sqrt(H * vd), cfg.pdtype()),
+                  "heads", None, None),
+    }
+
+
+def _mla_latent(p, h, cfg: ModelConfig, pos):
+    c = cfg.cdtype()
+    c_kv = jnp.einsum("bsd,dr->bsr", h, p["w_dkv"].astype(c))
+    c_kv = rmsnorm({"w": p["kv_norm"]}, c_kv, cfg.rms_eps)
+    k_rope = jnp.einsum("bsd,dr->bsr", h, p["w_kr"].astype(c))
+    cos, sin = rope_cos_sin(pos, cfg.qk_rope_dim, cfg.rope_theta, c)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def _mla_q(p, h, cfg: ModelConfig, pos):
+    c = cfg.cdtype()
+    nd, rd = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(c))
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    cos, sin = rope_cos_sin(pos, rd, cfg.rope_theta, c)
+    q_rope = apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def mla_forward(p, h, cfg: ModelConfig, pos, *, q_chunk: int = 0,
+                return_kv=False):
+    """Full-sequence MLA (naive / paper-formula path)."""
+    c = cfg.cdtype()
+    B, S, _ = h.shape
+    q_chunk = q_chunk or cfg.q_chunk
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    c_kv, k_rope = _mla_latent(p, h, cfg, pos)
+    q_nope, q_rope = _mla_q(p, h, cfg, pos)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"].astype(c))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"].astype(c))
+
+    # scores: per-head nope part + shared rope key
+    def scores_fn(qn, qr, qpos):
+        sc = jnp.einsum("bqhk,bshk->bhqs", qn, k_nope)
+        sc = sc + jnp.einsum("bqhk,bsk->bhqs", qr, k_rope)
+        sc = sc * scale
+        mask = (qpos[:, None, :, None] >= pos[:, None, None, :])
+        sc = jnp.where(mask, sc.astype(jnp.float32), NEG_INF)
+        w = jax.nn.softmax(sc, axis=-1).astype(c)
+        return jnp.einsum("bhqs,bshk->bqhk", w, v)
+
+    if S <= q_chunk:
+        out = scores_fn(q_nope, q_rope, pos)
+    else:
+        n = S // q_chunk
+        qn = q_nope.reshape(B, n, q_chunk, *q_nope.shape[2:]).transpose(1, 0, 2, 3, 4)
+        qr = q_rope.reshape(B, n, q_chunk, *q_rope.shape[2:]).transpose(1, 0, 2, 3, 4)
+        pc = pos.reshape(B, n, q_chunk).transpose(1, 0, 2)
+        _, oc = lax.scan(lambda _, xs: (None, scores_fn(*xs)), None, (qn, qr, pc))
+        out = oc.transpose(1, 0, 2, 3, 4).reshape(B, S, cfg.n_heads, cfg.v_head_dim)
+
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(c))
+    if return_kv:
+        cd = jnp.dtype(cfg.cache_dtype)
+        return y, (c_kv.astype(cd), k_rope.astype(cd))
+    return y
+
+
+def mla_decode(p, h, cfg: ModelConfig, cache_ckv, cache_kr, cache_len):
+    """One-token MLA decode.
+
+    cfg.mla_absorb=False: naive path — re-expand k_nope/v from the latent cache
+    (faithful to the published formulas; memory-heavy).
+    cfg.mla_absorb=True: absorbed path — fold w_uk into the query and w_uv into
+    the output so attention runs directly in the latent space (perf iteration).
+    """
+    c = cfg.cdtype()
+    B = h.shape[0]
+    pos = jnp.full((B, 1), cache_len, dtype=jnp.int32)
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    c_kv_new, k_rope_new = _mla_latent(p, h, cfg, pos)
+    q_nope, q_rope = _mla_q(p, h, cfg, pos)
+
+    cd = jnp.dtype(cfg.cache_dtype)
+    cache_ckv = lax.dynamic_update_slice_in_dim(cache_ckv, c_kv_new.astype(cd),
+                                                cache_len, axis=1)
+    cache_kr = lax.dynamic_update_slice_in_dim(cache_kr, k_rope_new.astype(cd),
+                                               cache_len, axis=1)
+    cache_ckv = constrain(cache_ckv, "batch", "kv_seq", None)
+    cache_kr = constrain(cache_kr, "batch", "kv_seq", None)
+    Smax = cache_ckv.shape[1]
+    valid = (jnp.arange(Smax) <= cache_len)[None, None, None, :]
+    ckv = cache_ckv.astype(c)
+    kr = cache_kr.astype(c)
+
+    if cfg.mla_absorb:
+        qa = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["w_uk"].astype(c))
+        sc = jnp.einsum("bqhr,bsr->bhqs", qa, ckv)
+        sc = sc + jnp.einsum("bqhk,bsk->bhqs", q_rope, kr)
+        sc = jnp.where(valid, sc.astype(jnp.float32) * scale, NEG_INF)
+        w = jax.nn.softmax(sc, axis=-1).astype(c)
+        ol = jnp.einsum("bhqs,bsr->bqhr", w, ckv)
+        out = jnp.einsum("bqhr,rhk->bqhk", ol, p["w_uv"].astype(c))
+    else:
+        k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uk"].astype(c))
+        v = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uv"].astype(c))
+        sc = jnp.einsum("bqhk,bshk->bhqs", q_nope, k_nope)
+        sc = sc + jnp.einsum("bqhk,bsk->bhqs", q_rope, kr)
+        sc = jnp.where(valid, sc.astype(jnp.float32) * scale, NEG_INF)
+        w = jax.nn.softmax(sc, axis=-1).astype(c)
+        out = jnp.einsum("bhqs,bshk->bqhk", w, v)
+
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(c))
+    return y, cache_ckv, cache_kr
+
+
+# --------------------------------------------------------------------------
+# MLPs
+
+
+def init_mlp(cfg: ModelConfig, key, d_ff: Optional[int] = None):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    s_in, s_out = 1.0 / math.sqrt(D), 1.0 / math.sqrt(F)
+    if cfg.mlp_gated:
+        return {
+            "w1": ann(_init(ks[0], (D, F), s_in, cfg.pdtype()), None, "ff"),
+            "w3": ann(_init(ks[1], (D, F), s_in, cfg.pdtype()), None, "ff"),
+            "w2": ann(_init(ks[2], (F, D), s_out, cfg.pdtype()), "ff", None),
+        }
+    return {
+        "w_in": ann(_init(ks[0], (D, F), s_in, cfg.pdtype()), None, "ff"),
+        "w_out": ann(_init(ks[1], (F, D), s_out, cfg.pdtype()), "ff", None),
+    }
+
+
+def mlp_forward(p, x, cfg: ModelConfig):
+    c = cfg.cdtype()
+    if "w1" in p:
+        g = jnp.einsum("...d,df->...f", x, p["w1"].astype(c))
+        u = jnp.einsum("...d,df->...f", x, p["w3"].astype(c))
+        h = jax.nn.silu(g) * u
+        return jnp.einsum("...f,fd->...d", h, p["w2"].astype(c))
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, p["w_in"].astype(c)))
+    return jnp.einsum("...f,fd->...d", h, p["w_out"].astype(c))

@@ -1,0 +1,213 @@
+"""Mixture-of-Experts: top-k router + capacity-buffer dispatch.
+
+The dispatch path is the GShard-style capacity formulation: tokens are
+scattered into a per-expert buffer ``[E, C, D]`` (positions assigned by a
+running count per expert), experts run as a single batched einsum with the
+expert axis sharded on the mesh ``model`` axis (expert parallelism), and
+outputs are gathered back with the router weights.  Tokens beyond capacity are
+dropped (contribute zero), standard for capacity-based MoE.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import ann, constrain
+from repro.models.common import ModelConfig
+from repro.models.layers import _init, mlp_forward, init_mlp
+
+
+def init_moe(cfg: ModelConfig, key):
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.d_expert
+    ks = jax.random.split(key, 5)
+    s_in, s_out = 1.0 / math.sqrt(D), 1.0 / math.sqrt(F)
+    p = {
+        "router": ann(_init(ks[0], (D, E), s_in, cfg.pdtype()), None, None),
+        "w1": ann(_init(ks[1], (E, D, F), s_in, cfg.pdtype()), "expert", None, None),
+        "w3": ann(_init(ks[2], (E, D, F), s_in, cfg.pdtype()), "expert", None, None),
+        "w2": ann(_init(ks[3], (E, F, D), s_out, cfg.pdtype()), "expert", None, None),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(cfg, ks[4], d_ff=cfg.n_shared_experts * cfg.d_expert)
+    return p
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(math.ceil(cfg.capacity_factor * cfg.top_k * n_tokens / cfg.n_experts))
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def moe_forward(p, x, cfg: ModelConfig):
+    """x [B, S, D] -> (y [B, S, D], aux_loss scalar)."""
+    if cfg.moe_ep:
+        from repro.distributed.sharding import _mesh
+        mesh = _mesh()
+        if mesh is not None and "model" in mesh.axis_names \
+                and mesh.shape["model"] > 1 \
+                and cfg.n_experts % mesh.shape["model"] == 0:
+            return moe_forward_ep(p, x, cfg, mesh)
+    return _moe_forward_pjit(p, x, cfg)
+
+
+def _moe_forward_pjit(p, x, cfg: ModelConfig):
+    """Baseline pjit global-scatter dispatch (recorded §Perf baseline)."""
+    c = cfg.cdtype()
+    B, S, D = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.top_k
+    xt = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xt, p["router"].astype(c)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_e = lax.top_k(probs, K)                       # [T, K]
+    gate_w = gate_w / jnp.sum(gate_w, axis=-1, keepdims=True)
+
+    # Load-balancing auxiliary loss (Switch/GShard form).
+    me = jnp.mean(probs, axis=0)                               # [E]
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(gate_e, E, dtype=jnp.float32), axis=1), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    C = capacity(cfg, T)
+    ef = gate_e.reshape(-1)                                    # [T*K]
+    wf = gate_w.reshape(-1).astype(c)
+    onehot = jax.nn.one_hot(ef, E, dtype=jnp.int32)            # [T*K, E]
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot             # position before me
+    pos = jnp.sum(pos_in_e * onehot, axis=-1)                  # [T*K]
+    keep = pos < C
+    tok = jnp.repeat(jnp.arange(T), K)
+
+    flat_idx = jnp.where(keep, ef * C + jnp.minimum(pos, C - 1), E * C)  # drop slot
+    buf = jnp.zeros((E * C + 1, D), dtype=c)
+    buf = buf.at[flat_idx].add(xt[tok].astype(c))
+    buf = buf[:-1].reshape(E, C, D)
+    buf = constrain(buf, "expert", None, None)
+
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w1"].astype(c))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w3"].astype(c))
+    h = jax.nn.silu(g) * u
+    out = jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(c))
+    out = constrain(out, "expert", None, None)
+
+    out_flat = out.reshape(E * C, D)
+    picked = jnp.where(keep[:, None],
+                       out_flat[jnp.minimum(flat_idx, E * C - 1)], 0.0)
+    y = jnp.sum((picked * wf[:, None]).reshape(T, K, D), axis=1)
+
+    if "shared" in p:
+        y = y + mlp_forward(p["shared"], xt, cfg)
+    return y.reshape(B, S, D), aux.astype(jnp.float32)
+
+
+def _dispatch_local(xt, gate_e, gate_w, E, C, D, c):
+    """Scatter local tokens into a local [E, C, D] buffer (no comm).
+    -> (buf, flat_idx, keep, wf, tok) for the matching combine."""
+    T = xt.shape[0]
+    K = gate_e.shape[1]
+    ef = gate_e.reshape(-1)
+    wf = gate_w.reshape(-1).astype(c)
+    onehot = jax.nn.one_hot(ef, E, dtype=jnp.int32)
+    pos = jnp.sum((jnp.cumsum(onehot, axis=0) - onehot) * onehot, axis=-1)
+    keep = pos < C
+    tok = jnp.repeat(jnp.arange(T), K)
+    flat_idx = jnp.where(keep, ef * C + jnp.minimum(pos, C - 1), E * C)
+    buf = jnp.zeros((E * C + 1, D), dtype=c)
+    buf = buf.at[flat_idx].add(xt[tok].astype(c))
+    return buf[:-1].reshape(E, C, D), flat_idx, keep, wf
+
+
+def moe_forward_ep(p, x, cfg: ModelConfig, mesh):
+    """Expert-parallel MoE: shard_map over (batch x experts).
+
+    Per (data, model) shard: route the LOCAL tokens, build a LOCAL capacity
+    buffer over all E experts, then all_to_all over the 'model' axis so each
+    shard receives, for its OWN E/MP experts, the slots contributed by every
+    token shard; expert matmuls run on local weights; the inverse all_to_all
+    returns expert outputs to the token owners for the weighted combine.
+    Wire cost: 2 x (routed token slots), vs the baseline's per-layer fp32
+    all-reduce of the whole [E*C, D] buffer.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    c = cfg.cdtype()
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    MP = mesh.shape["model"]
+    E_loc = E // MP
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_tok_shards = 1
+    for a in batch_axes:
+        n_tok_shards *= mesh.shape[a]
+    tok_axes = batch_axes if len(batch_axes) > 1 else (batch_axes[0]
+                                                       if batch_axes else None)
+
+    x_spec = P(tok_axes, None, None) if tok_axes else P(None, None, None)
+    w_row = {"router": P(None, None), "w1": P("model", None, None),
+             "w3": P("model", None, None), "w2": P("model", None, None)}
+    p_specs = {k: w_row[k] for k in ("router", "w1", "w3", "w2")}
+    if "shared" in p:
+        p_specs["shared"] = jax.tree.map(
+            lambda _: P(None, None), p["shared"])
+
+    def body(xs, ps):
+        Bl, Sl, _ = xs.shape
+        T = Bl * Sl
+        assert T % MP == 0, (T, MP)
+        T_m = T // MP
+        xt = xs.reshape(T, D)
+        # x is replicated along 'model': each expert shard routes its OWN
+        # 1/MP slice of the local tokens (token axis splits over data x model)
+        m_idx = lax.axis_index("model")
+        xt_m = lax.dynamic_slice_in_dim(xt, m_idx * T_m, T_m)
+
+        logits = jnp.einsum("td,de->te", xt_m,
+                            ps["router"].astype(c)).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_w, gate_e = lax.top_k(probs, K)
+        gate_w = gate_w / jnp.sum(gate_w, axis=-1, keepdims=True)
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean(jnp.sum(jax.nn.one_hot(gate_e, E, dtype=jnp.float32),
+                              axis=1), axis=0)
+        for ax in batch_axes + ("model",):
+            me = lax.pmean(me, ax)
+            ce = lax.pmean(ce, ax)
+        aux = E * jnp.sum(me * ce)
+
+        C = capacity(cfg, T_m)
+        buf, flat_idx, keep, wf = _dispatch_local(xt_m, gate_e, gate_w, E, C,
+                                                  D, c)
+        # [E, C, D] -> [MP, E_loc, C, D]; all_to_all sends slice m' to expert
+        # shard m'; received axis 0 indexes the contributing token sub-shard.
+        buf = buf.reshape(MP, E_loc, C, D)
+        buf = lax.all_to_all(buf, "model", split_axis=0, concat_axis=0,
+                             tiled=False)
+        # expert compute on local weights over every contributor's slots
+        g = jnp.einsum("mecd,edf->mecf", buf, ps["w1"].astype(c))
+        u = jnp.einsum("mecd,edf->mecf", buf, ps["w3"].astype(c))
+        h = jax.nn.silu(g) * u
+        out = jnp.einsum("mecf,efd->mecd", h, ps["w2"].astype(c))
+        # return slots to their token owners
+        out = lax.all_to_all(out, "model", split_axis=0, concat_axis=0,
+                             tiled=False)
+        out_flat = out.reshape(E * C, D)         # expert-major, = flat_idx space
+        picked = jnp.where(keep[:, None],
+                           out_flat[jnp.minimum(flat_idx, E * C - 1)], 0.0)
+        y_m = jnp.sum((picked * wf[:, None]).reshape(T_m, K, D), axis=1)
+        if "shared" in ps:
+            y_m = y_m + mlp_forward(ps["shared"], xt_m, cfg)
+        # reassemble the token block (replicated along 'model' again)
+        y = lax.all_gather(y_m, "model", axis=0, tiled=True)
+        return y.reshape(Bl, Sl, D), aux.astype(jnp.float32)
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(x_spec, p_specs),
+                   out_specs=(x_spec, P()),
+                   check_rep=False)
+    ps = {k: p[k] for k in ("router", "w1", "w3", "w2")}
+    if "shared" in p:
+        ps["shared"] = p["shared"]
+    return fn(x, ps)

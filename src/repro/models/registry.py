@@ -1,0 +1,163 @@
+"""Architecture registry: one uniform interface over every model family.
+
+``get_model_fns(cfg)`` returns the family's functions with uniform
+signatures; ``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins
+for every input of the step that the shape exercises (train_step for
+``train_*``, prefill for ``prefill_*``, serve_step for ``decode_*`` /
+``long_*``) — weak-type-correct, shardable, no device allocation.
+``abstract_train_state`` / ``abstract_cache`` build the matching abstract
+state trees plus their logical-axes trees for NamedSharding construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, ShapeSpec
+from repro.models import encdec as ENCDEC
+from repro.models import transformer as TFM
+from repro.optim.adamw import AdamWConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelFns:
+    init_params: Callable
+    loss_fn: Callable
+    prefill: Callable
+    serve_step: Callable
+    init_cache: Callable
+    cache_logical_axes: Callable
+    forward: Optional[Callable] = None
+
+    def make_train_step(self, cfg: ModelConfig, opt_cfg: AdamWConfig,
+                        n_micro: int, grad_transform=None):
+        return TFM.make_train_step(cfg, opt_cfg, n_micro,
+                                   grad_transform=grad_transform,
+                                   loss=self.loss_fn)
+
+    def init_train_state(self, cfg: ModelConfig, key):
+        return TFM.init_train_state(cfg, key, init=self.init_params)
+
+
+def get_model_fns(cfg: ModelConfig) -> ModelFns:
+    if cfg.family == "encdec":
+        return ModelFns(
+            init_params=ENCDEC.init_params,
+            loss_fn=ENCDEC.loss_fn,
+            prefill=ENCDEC.prefill,
+            serve_step=ENCDEC.serve_step,
+            init_cache=ENCDEC.init_cache,
+            cache_logical_axes=ENCDEC.cache_logical_axes,
+            forward=ENCDEC.forward,
+        )
+    return ModelFns(
+        init_params=TFM.init_params,
+        loss_fn=TFM.loss_fn,
+        prefill=TFM.prefill,
+        serve_step=TFM.serve_step,
+        init_cache=TFM.init_cache,
+        cache_logical_axes=TFM.cache_logical_axes,
+        forward=TFM.forward,
+    )
+
+
+def build_model(cfg: ModelConfig) -> ModelFns:  # back-compat alias
+    return get_model_fns(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs (ShapeDtypeStruct) per shape.
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Inputs of loss/train for ``train_*`` or of prefill for ``prefill_*``."""
+    B, S = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {"tokens": _sds((B, S), jnp.int32)}
+    if shape.kind == "train":
+        specs["targets"] = _sds((B, S), jnp.int32)
+    if cfg.family == "encdec":
+        specs["frames"] = _sds((B, cfg.enc_frames, cfg.d_model), cfg.cdtype())
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = _sds((B, cfg.n_patches, cfg.d_model),
+                                     cfg.cdtype())
+        specs["mrope_pos"] = _sds((B, S, 3), jnp.int32)
+    return specs
+
+
+def batch_logical_axes(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    axes: Dict[str, Any] = {"tokens": ("batch", None)}
+    if shape.kind == "train":
+        axes["targets"] = ("batch", None)
+    if cfg.family == "encdec":
+        axes["frames"] = ("batch", None, None)
+    if cfg.family == "vlm":
+        axes["patch_embeds"] = ("batch", None, None)
+        axes["mrope_pos"] = ("batch", None, None)
+    return axes
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """(cache_sds, token_sds, cache_len_sds [, mrope]) for serve_step."""
+    B, S = shape.global_batch, shape.seq_len
+    fns = get_model_fns(cfg)
+    cache = jax.eval_shape(lambda: fns.init_cache(cfg, B, S))
+    out = {"cache": cache, "token": _sds((B,), jnp.int32),
+           "cache_len": _sds((), jnp.int32)}
+    if cfg.family == "vlm":
+        out["mrope_pos"] = _sds((B, 1, 3), jnp.int32)
+    return out
+
+
+def decode_logical_axes(cfg: ModelConfig):
+    fns = get_model_fns(cfg)
+    out = {"cache": fns.cache_logical_axes(cfg), "token": ("batch",),
+           "cache_len": ()}
+    if cfg.family == "vlm":
+        out["mrope_pos"] = ("batch", None, None)
+    return out
+
+
+def abstract_train_state(cfg: ModelConfig, seed: int = 0):
+    """(state ShapeDtypeStruct tree, logical-axes tree) — no allocation."""
+    fns = get_model_fns(cfg)
+    captured: Dict[str, Any] = {}
+
+    def init(key):
+        state, axes = fns.init_train_state(cfg, key)
+        captured["axes"] = axes
+        return state
+
+    state_sds = jax.eval_shape(init, jax.random.key(seed))
+    return state_sds, captured["axes"]
+
+
+def synth_batch(cfg: ModelConfig, shape: ShapeSpec, seed: int = 0,
+                batch_override: Optional[int] = None) -> Dict[str, Any]:
+    """Concrete synthetic batch matching batch_specs (for smoke/train runs)."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    V = cfg.vocab_size
+    toks = rng.integers(0, V, size=(B, S), dtype=np.int32)
+    batch: Dict[str, Any] = {"tokens": toks}
+    if shape.kind == "train":
+        batch["targets"] = np.concatenate(
+            [toks[:, 1:], np.full((B, 1), -1, np.int32)], axis=1)
+    if cfg.family == "encdec":
+        batch["frames"] = rng.standard_normal(
+            (B, cfg.enc_frames, cfg.d_model)).astype(np.float32)
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = rng.standard_normal(
+            (B, cfg.n_patches, cfg.d_model)).astype(np.float32)
+        pos = np.broadcast_to(np.arange(S, dtype=np.int32)[None, :, None],
+                              (B, S, 3))
+        batch["mrope_pos"] = np.ascontiguousarray(pos)
+    return batch

@@ -1,0 +1,228 @@
+"""Mamba2 (state-space duality) block: chunked train/prefill + O(1) decode.
+
+Chunked SSD: within a chunk of length Q the output is a masked quadratic
+("attention-like") term; across chunks a recurrent state [B,H,P,N] is carried
+by a lax.scan.  Decode is a single recurrent state update.  Group count = 1.
+
+Projections are split (z / xBC / dt) instead of one fused in_proj so each
+output axis shards cleanly on the mesh `model` axis (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import ann
+from repro.models.common import ModelConfig
+from repro.models.layers import _init
+
+NEG = -1e30
+
+
+def init_ssm(cfg: ModelConfig, key):
+    D = cfg.d_model
+    di = cfg.d_inner
+    N, H, W = cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv
+    gN = cfg.ssm_groups * N
+    xbc = di + 2 * gN
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(D)
+    a_init = jnp.log(jnp.linspace(1.0, 16.0, H))
+    p = {
+        "w_z": ann(_init(ks[0], (D, di), s, cfg.pdtype()), None, "ff"),
+        "w_dt": ann(_init(ks[2], (D, H), s, cfg.pdtype()), None, "heads"),
+        "A_log": ann(a_init.astype(cfg.pdtype()), "heads"),
+        "D": ann(jnp.ones((H,), cfg.pdtype()), "heads"),
+        "dt_bias": ann(jnp.full((H,), -4.6, cfg.pdtype()), "heads"),
+        "norm_w": ann(jnp.ones((di,), cfg.pdtype()), "ff"),
+        "w_out": ann(_init(ks[4], (di, D), 1.0 / math.sqrt(di), cfg.pdtype()),
+                     "ff", None),
+    }
+    if cfg.ssm_split_proj:
+        # TP-clean split projections: x shards on 'ff'; the small per-group
+        # B/C tensors stay replicated (no mid-channel slicing of a sharded
+        # axis -> no per-layer resharding; §Perf cell 2)
+        p.update({
+            "w_x": ann(_init(ks[1], (D, di), s, cfg.pdtype()), None, "ff"),
+            "w_B": ann(_init(ks[5], (D, gN), s, cfg.pdtype()), None, None),
+            "w_C": ann(_init(ks[6], (D, gN), s, cfg.pdtype()), None, None),
+            "conv_w_x": ann(_init(ks[3], (W, di), 0.5, cfg.pdtype()), None, "ff"),
+            "conv_b_x": ann(jnp.zeros((di,), cfg.pdtype()), "ff"),
+            "conv_w_bc": ann(_init(ks[7], (W, 2 * gN), 0.5, cfg.pdtype()),
+                             None, None),
+            "conv_b_bc": ann(jnp.zeros((2 * gN,), cfg.pdtype()), None),
+        })
+    else:
+        p.update({
+            "w_xbc": ann(_init(ks[1], (D, xbc), s, cfg.pdtype()), None, "ff"),
+            "conv_w": ann(_init(ks[3], (W, xbc), 0.5, cfg.pdtype()), None, "ff"),
+            "conv_b": ann(jnp.zeros((xbc,), cfg.pdtype()), "ff"),
+        })
+    return p
+
+
+def _causal_conv(xbc, w, b, conv_state=None):
+    """Depthwise causal conv. xbc [B,S,C]; w [W,C]; returns (y, new_state)."""
+    W = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)          # [B, S+W-1, C]
+    y = sum(full[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+            for i in range(W))
+    new_state = full[:, -(W - 1):, :]
+    return jax.nn.silu(y + b[None, None, :]), new_state
+
+
+def _split_xbc(xbc, cfg: ModelConfig):
+    di, N = cfg.d_inner, cfg.ssm_state
+    x = xbc[..., :di]
+    Bm = xbc[..., di:di + N]
+    Cm = xbc[..., di + N:di + 2 * N]
+    B, S = x.shape[:2]
+    x = x.reshape(B, S, cfg.ssm_heads, cfg.ssm_head_dim)
+    return x, Bm, Cm
+
+
+def _gated_norm(y, z, w, eps):
+    g = (y * jax.nn.silu(z)).astype(jnp.float32)
+    var = jnp.mean(g * g, axis=-1, keepdims=True)
+    return (g * lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(y.dtype)
+
+
+def _project_xbc(p, h, cfg: ModelConfig, c, conv_state=None):
+    """-> (x [B,S,H,P], Bm, Cm [B,S,gN], new_conv_state [B,W-1,xbc]).
+
+    Split path: three clean projections + per-part depthwise convs (weights
+    partitioned exactly like the fused conv, so the math is identical).
+    Fused path (legacy baseline): one projection, conv, then channel slices.
+    """
+    if "w_x" in p:
+        gN = cfg.ssm_groups * cfg.ssm_state
+        x = jnp.einsum("bsd,de->bse", h, p["w_x"].astype(c))
+        bc = jnp.concatenate(
+            [jnp.einsum("bsd,de->bse", h, p["w_B"].astype(c)),
+             jnp.einsum("bsd,de->bse", h, p["w_C"].astype(c))], axis=-1)
+        st_x = st_bc = None
+        if conv_state is not None:
+            st_x = conv_state[..., : cfg.d_inner]
+            st_bc = conv_state[..., cfg.d_inner:]
+        x, st_x = _causal_conv(x, p["conv_w_x"].astype(c),
+                               p["conv_b_x"].astype(c), st_x)
+        bc, st_bc = _causal_conv(bc, p["conv_w_bc"].astype(c),
+                                 p["conv_b_bc"].astype(c), st_bc)
+        B, S = x.shape[:2]
+        x = x.reshape(B, S, cfg.ssm_heads, cfg.ssm_head_dim)
+        new_state = jnp.concatenate([st_x, st_bc], axis=-1)
+        return x, bc[..., :gN], bc[..., gN:], new_state
+    xbc = jnp.einsum("bsd,de->bse", h, p["w_xbc"].astype(c))
+    xbc, new_state = _causal_conv(xbc, p["conv_w"].astype(c),
+                                  p["conv_b"].astype(c), conv_state)
+    x, Bm, Cm = _split_xbc(xbc, cfg)
+    return x, Bm, Cm, new_state
+
+
+def ssm_forward(p, h, cfg: ModelConfig, *, initial_state=None, return_state=False):
+    """h [B,S,D] -> y [B,S,D] (+ (ssm_state, conv_state) if return_state).
+
+    All FLOP-heavy SSD terms (intra-chunk quadratic, chunk-state outer
+    products, inter-chunk readout) are *batched over chunks* — big MXU-shaped
+    einsums, and exact under XLA cost accounting.  Only the O(B*H*P*N)
+    elementwise state recurrence is sequential (lax.scan over chunks).
+    """
+    c = cfg.cdtype()
+    B, S, D = h.shape
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, (S, Q)
+    nC = S // Q
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+    z = jnp.einsum("bsd,de->bse", h, p["w_z"].astype(c))
+    x, Bm, Cm, conv_state = _project_xbc(p, h, cfg, c)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", h, p["w_dt"].astype(c)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))                        # [B,S,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                   # [H] < 0
+    a = dt * A                                                     # [B,S,H] <= 0
+
+    # chunk views: [B, nC, Q, ...]
+    def chunk(t):
+        return t.reshape(B, nC, Q, *t.shape[2:])
+
+    xc = chunk(x).astype(jnp.float32)          # [B,C,Q,H,P]
+    Bc = chunk(Bm).astype(jnp.float32)         # [B,C,Q,N]
+    Cc = chunk(Cm).astype(jnp.float32)         # [B,C,Q,N]
+    ac = chunk(a)                              # [B,C,Q,H]
+    dtc = chunk(dt)                            # [B,C,Q,H]
+
+    if initial_state is None:
+        state0 = jnp.zeros((B, H, P, N), jnp.float32)
+    else:
+        state0 = initial_state.astype(jnp.float32)
+
+    idx = jnp.arange(Q)
+    causal = idx[:, None] >= idx[None, :]
+
+    cum = jnp.cumsum(ac, axis=2)               # [B,C,Q,H]
+    ci = cum.transpose(0, 1, 3, 2)             # [B,C,H,Q]
+    # intra-chunk quadratic term, batched over all chunks
+    dec = jnp.exp(jnp.where(causal[None, None, None],
+                            ci[..., :, None] - ci[..., None, :], NEG))
+    cb = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)
+    y_intra = jnp.einsum("bchqk,bcqk,bckh,bckhp->bcqhp", dec, cb, dtc, xc)
+    # per-chunk input states + decays, batched
+    decay_to_end = jnp.exp(ci[..., -1:].transpose(0, 1, 3, 2) - cum)  # [B,C,Q,H]
+    s_chunk = jnp.einsum("bckh,bckn,bckhp->bchpn",
+                         dtc * decay_to_end, Bc, xc)                  # [B,C,H,P,N]
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                           # [B,C,H]
+
+    # sequential part: state_in[c+1] = chunk_decay[c] * state_in[c] + s_chunk[c]
+    def step(state, xs):
+        dcy, s_new = xs                         # [B,H], [B,H,P,N]
+        nxt = dcy[:, :, None, None] * state + s_new
+        return nxt, state                       # emit the INCOMING state
+
+    state, states_in = lax.scan(
+        step, state0, (chunk_decay.swapaxes(0, 1), s_chunk.swapaxes(0, 1)))
+    states_in = states_in.swapaxes(0, 1)        # [B,C,H,P,N]
+
+    # inter-chunk readout, batched over chunks
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp",
+                         Cc, states_in, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    y = y.astype(c).reshape(B, S, H * P)
+    y = _gated_norm(y, z, p["norm_w"], cfg.rms_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(c))
+    if return_state:
+        return out, (state.astype(jnp.float32), conv_state.astype(c))
+    return out
+
+
+def ssm_decode(p, h, cfg: ModelConfig, ssm_state, conv_state):
+    """One-token recurrent step. h [B,1,D]; ssm_state [B,H,P,N] fp32;
+    conv_state [B,W-1,C]."""
+    c = cfg.cdtype()
+    B = h.shape[0]
+    z = jnp.einsum("bsd,de->bse", h, p["w_z"].astype(c))
+    x, Bm, Cm, conv_state = _project_xbc(p, h, cfg, c, conv_state)  # [B,1,...]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", h, p["w_dt"].astype(c)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))[:, 0]          # [B,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)                                # [B,H]
+    xs = x[:, 0].astype(jnp.float32)                       # [B,H,P]
+    Bs = Bm[:, 0].astype(jnp.float32)                      # [B,N]
+    Cs = Cm[:, 0].astype(jnp.float32)
+    new_state = (decay[:, :, None, None] * ssm_state
+                 + jnp.einsum("bh,bn,bhp->bhpn", dt, Bs, xs))
+    y = jnp.einsum("bn,bhpn->bhp", Cs, new_state)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xs
+    y = y.astype(c).reshape(B, 1, -1)
+    y = _gated_norm(y, z, p["norm_w"], cfg.rms_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(c))
+    return out, (new_state, conv_state.astype(c))

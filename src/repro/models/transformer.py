@@ -1,0 +1,540 @@
+"""Decoder-only LM assembly for dense / MoE / SSM / hybrid / VLM families.
+
+Layers are parameter-stacked and driven by ``lax.scan`` so HLO size and
+compile time are O(1) in depth; the scanned block is wrapped in
+``jax.checkpoint`` with a configurable policy; ``train_step`` accumulates
+gradients over microbatches (scan) to bound live activation memory.
+
+Hybrid (zamba2) layers run as static *segments*: scan over `hybrid_attn_every`
+mamba layers, then the shared attention block, repeated — no lax.cond, so HLO
+FLOP counts are exact and shared-attn KV caches index statically.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import ann, constrain
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.common import ModelConfig
+from repro.optim.adamw import AdamWConfig, adamw_update
+
+# --------------------------------------------------------------------------
+# Init
+
+
+def _is_ann(x):
+    return (isinstance(x, tuple) and len(x) == 2 and hasattr(x[0], "ndim")
+            and isinstance(x[1], tuple))
+
+
+def _stack(trees):
+    """Stack per-layer (array, logical-axes) trees along a new leading dim."""
+    def one(*xs):
+        if _is_ann(xs[0]):
+            return (jnp.stack([x[0] for x in xs], axis=0),
+                    (None,) + xs[0][1])
+        return jnp.stack(xs, axis=0)
+
+    return jax.tree.map(one, *trees, is_leaf=_is_ann)
+
+
+def _tree_slice(tree, a, b):
+    return jax.tree.map(lambda x: x[a:b], tree)
+
+
+def _init_block(cfg: ModelConfig, key, layer_idx: int):
+    ks = jax.random.split(key, 4)
+    if cfg.family in ("ssm", "hybrid"):
+        return {
+            "norm": L.init_rmsnorm(cfg, cfg.d_model),
+            "ssm": SSM.init_ssm(cfg, ks[0]),
+        }
+    blk = {
+        "ln1": L.init_rmsnorm(cfg, cfg.d_model),
+        "ln2": L.init_rmsnorm(cfg, cfg.d_model),
+    }
+    if cfg.attn_kind == "mla":
+        blk["attn"] = L.init_mla(cfg, ks[0])
+    else:
+        blk["attn"] = L.init_gqa(cfg, ks[0])
+    if cfg.is_moe and layer_idx >= cfg.first_k_dense:
+        blk["moe"] = MOE.init_moe(cfg, ks[1])
+    else:
+        ff = cfg.dense_layer_ff if (cfg.is_moe and cfg.dense_layer_ff) else cfg.d_ff
+        blk["mlp"] = L.init_mlp(cfg, ks[1], d_ff=ff)
+    return blk
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, cfg.n_layers + 4)
+    V, D = cfg.vocab_padded, cfg.d_model
+    params: Dict[str, Any] = {
+        "embed": {"w": ann(
+            jax.random.normal(ks[-1], (V, D), jnp.float32).astype(cfg.pdtype()) * 0.02,
+            "vocab", None)},
+        "final_norm": L.init_rmsnorm(cfg, D),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = {"w": ann(
+            jax.random.normal(ks[-2], (D, V), jnp.float32).astype(cfg.pdtype()) * 0.02,
+            None, "vocab")}
+
+    first = cfg.first_k_dense if cfg.is_moe else 0
+    if first:
+        params["head_layers"] = [_init_block(cfg, ks[i], i) for i in range(first)]
+    params["layers"] = _stack([
+        _init_block(cfg, ks[first + i], first + i)
+        for i in range(cfg.n_layers - first)])
+
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        params["shared_attn"] = {
+            "ln1": L.init_rmsnorm(cfg, D),
+            "ln2": L.init_rmsnorm(cfg, D),
+            "attn": L.init_gqa(cfg, ks[-3]),
+            "mlp": L.init_mlp(cfg, ks[-4]),
+        }
+    return params
+
+
+def n_shared_apps(cfg: ModelConfig) -> int:
+    if cfg.family != "hybrid" or not cfg.hybrid_attn_every:
+        return 0
+    return cfg.n_layers // cfg.hybrid_attn_every
+
+
+def _hybrid_segments(cfg: ModelConfig):
+    """[(start, end, apply_shared_after)] covering all stacked layers."""
+    every, n = cfg.hybrid_attn_every, cfg.n_layers
+    segs = []
+    a = 0
+    while a < n:
+        b = min(a + every, n)
+        segs.append((a, b, b - a == every))
+        a = b
+    return segs
+
+
+def _remat_policy(cfg: ModelConfig):
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    if cfg.remat_policy == "everything":
+        return jax.checkpoint_policies.everything_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+# --------------------------------------------------------------------------
+# Blocks (full-sequence path)
+
+
+def _block_fwd(cfg: ModelConfig, blk, h, pos, mrope_pos, is_moe_layer):
+    """One block, full sequence. Returns (h, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family in ("ssm", "hybrid"):
+        h = h + SSM.ssm_forward(blk["ssm"], L.rmsnorm(blk["norm"], h, cfg.rms_eps), cfg)
+        return h, aux
+    a = L.rmsnorm(blk["ln1"], h, cfg.rms_eps)
+    if cfg.attn_kind == "mla":
+        h = h + L.mla_forward(blk["attn"], a, cfg, pos)
+    else:
+        h = h + L.gqa_forward(blk["attn"], a, cfg, pos, mrope_pos=mrope_pos)
+    m = L.rmsnorm(blk["ln2"], h, cfg.rms_eps)
+    if is_moe_layer:
+        y, aux = MOE.moe_forward(blk["moe"], m, cfg)
+        h = h + y
+    else:
+        h = h + L.mlp_forward(blk["mlp"], m, cfg)
+    return h, aux
+
+
+def _shared_block_fwd(cfg: ModelConfig, sp, h, pos, *, return_kv=False):
+    a = L.rmsnorm(sp["ln1"], h, cfg.rms_eps)
+    if return_kv:
+        y, kv = L.gqa_forward(sp["attn"], a, cfg, pos, return_kv=True)
+    else:
+        y = L.gqa_forward(sp["attn"], a, cfg, pos)
+    h = h + y
+    m = L.rmsnorm(sp["ln2"], h, cfg.rms_eps)
+    h = h + L.mlp_forward(sp["mlp"], m, cfg)
+    return (h, kv) if return_kv else h
+
+
+def _logits(params, cfg: ModelConfig, h):
+    c = cfg.cdtype()
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", h, params["embed"]["w"].astype(c))
+    return jnp.einsum("bsd,dv->bsv", h, params["unembed"]["w"].astype(c))
+
+
+def _hc(cfg: ModelConfig, h):
+    """Between-layer activation constraint; seq axis shards under §Perf's
+    sequence-parallel experiment (cfg.seq_shard)."""
+    return constrain(h, "batch", "seq" if cfg.seq_shard else None, None)
+
+
+def _embed(params, cfg: ModelConfig, tokens, patch_embeds):
+    c = cfg.cdtype()
+    h = jnp.take(params["embed"]["w"], tokens, axis=0).astype(c)
+    if cfg.family == "vlm" and patch_embeds is not None:
+        P = patch_embeds.shape[1]
+        h = jnp.concatenate([patch_embeds.astype(c), h[:, P:, :]], axis=1)
+    return _hc(cfg, h)
+
+
+def forward(params, cfg: ModelConfig, tokens, *, patch_embeds=None,
+            mrope_pos=None):
+    """Full forward. tokens [B,S] -> (logits [B,S,Vp] compute dtype, moe aux)."""
+    B, S = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    h = _embed(params, cfg, tokens, patch_embeds)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for blk in params.get("head_layers", []):
+        h, aux = _block_fwd(cfg, blk, h, pos, mrope_pos, is_moe_layer=False)
+        aux_total = aux_total + aux
+
+    def body(carry, xs):
+        h, aux_acc = carry
+        h, aux = _block_fwd(cfg, xs, h, pos, mrope_pos, is_moe_layer=cfg.is_moe)
+        h = _hc(cfg, h)
+        return (h, aux_acc + aux), None
+
+    body_r = jax.checkpoint(body, policy=_remat_policy(cfg), prevent_cse=False)
+
+    if cfg.family == "hybrid" and "shared_attn" in params:
+        shared_r = jax.checkpoint(
+            lambda hh: _shared_block_fwd(cfg, params["shared_attn"], hh, pos),
+            policy=_remat_policy(cfg), prevent_cse=False)
+        for a, b, app in _hybrid_segments(cfg):
+            (h, aux_total), _ = lax.scan(
+                body_r, (h, aux_total), _tree_slice(params["layers"], a, b),
+                unroll=cfg.scan_unroll)
+            if app:
+                h = shared_r(h)
+                h = _hc(cfg, h)
+    else:
+        (h, aux_total), _ = lax.scan(body_r, (h, aux_total), params["layers"],
+                                     unroll=cfg.scan_unroll)
+
+    h = L.rmsnorm(params["final_norm"], h, cfg.rms_eps)
+    return _logits(params, cfg, h), aux_total
+
+
+# --------------------------------------------------------------------------
+# Loss / train step
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    logits, aux = forward(params, cfg, batch["tokens"],
+                          patch_embeds=batch.get("patch_embeds"),
+                          mrope_pos=batch.get("mrope_pos"))
+    logits = logits.astype(jnp.float32)
+    targets = batch["targets"]
+    mask = (targets >= 0).astype(jnp.float32)
+    tgt = jnp.maximum(targets, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    if cfg.is_moe:
+        loss = loss + cfg.router_aux_coef * aux / max(1, cfg.n_layers)
+    return loss
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, n_micro: int,
+                    grad_transform=None, loss=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``loss`` defaults to the decoder LM loss; encoder-decoder passes its own.
+    """
+    loss = loss or loss_fn
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        if n_micro == 1:
+            loss_, grads = jax.value_and_grad(loss)(params, cfg, batch)
+        else:
+            def micro(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss)(params, cfg, mb)
+                gsum = jax.tree.map(lambda a, gg: a + gg.astype(jnp.float32),
+                                    gsum, g)
+                return (gsum, lsum + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                                 params)
+            mb = jax.tree.map(
+                lambda x: x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:]),
+                batch)
+            (grads, loss_), _ = lax.scan(micro, (zeros, jnp.zeros(())), mb)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss_ = loss_ / n_micro
+
+        new_params, new_opt, om = adamw_update(
+            opt_cfg, params, grads, state["opt"], state["step"],
+            grad_transform=grad_transform)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, {"loss": loss_, **om}
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, key, init=None):
+    from repro.distributed.sharding import split_annotations
+    from repro.optim.adamw import adamw_init
+    tree = (init or init_params)(cfg, key)
+    params, axes = split_annotations(tree)
+    state = {"params": params, "opt": adamw_init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    state_axes = {"params": axes, "opt": {"m": axes, "v": axes}, "step": ()}
+    return state, state_axes
+
+
+# --------------------------------------------------------------------------
+# KV / state caches
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    cd = jnp.dtype(cfg.cache_dtype)
+    Ls = cfg.n_layers
+    xbc = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    if cfg.family == "ssm":
+        return {
+            "ssm": jnp.zeros((Ls, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                              cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros((Ls, batch, cfg.ssm_conv - 1, xbc), cd),
+        }
+    if cfg.family == "hybrid":
+        napp = n_shared_apps(cfg)
+        return {
+            "ssm": jnp.zeros((Ls, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                              cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros((Ls, batch, cfg.ssm_conv - 1, xbc), cd),
+            "attn_k": jnp.zeros((napp, batch, max_seq, cfg.n_kv_heads, cfg.d_head), cd),
+            "attn_v": jnp.zeros((napp, batch, max_seq, cfg.n_kv_heads, cfg.d_head), cd),
+        }
+    if cfg.attn_kind == "mla":
+        return {
+            "ckv": jnp.zeros((Ls, batch, max_seq, cfg.kv_lora_rank), cd),
+            "kr": jnp.zeros((Ls, batch, max_seq, cfg.qk_rope_dim), cd),
+        }
+    return {
+        "k": jnp.zeros((Ls, batch, max_seq, cfg.n_kv_heads, cfg.d_head), cd),
+        "v": jnp.zeros((Ls, batch, max_seq, cfg.n_kv_heads, cfg.d_head), cd),
+    }
+
+
+def cache_logical_axes(cfg: ModelConfig):
+    if cfg.family == "ssm":
+        return {"ssm": (None, "batch", "heads", None, None),
+                "conv": (None, "batch", None, "ff")}
+    if cfg.family == "hybrid":
+        return {"ssm": (None, "batch", "heads", None, None),
+                "conv": (None, "batch", None, "ff"),
+                "attn_k": (None, "batch", "kv_seq", None, None),
+                "attn_v": (None, "batch", "kv_seq", None, None)}
+    if cfg.attn_kind == "mla":
+        return {"ckv": (None, "batch", "kv_seq", None),
+                "kr": (None, "batch", "kv_seq", None)}
+    return {"k": (None, "batch", "kv_seq", None, None),
+            "v": (None, "batch", "kv_seq", None, None)}
+
+
+# --------------------------------------------------------------------------
+# Decode (serve_step) — one token against the cache.
+
+
+def _block_decode(cfg: ModelConfig, blk, h, sl, cache_len, mrope_pos,
+                  is_moe_layer):
+    if cfg.family in ("ssm", "hybrid"):
+        a = L.rmsnorm(blk["norm"], h, cfg.rms_eps)
+        y, (s_new, c_new) = SSM.ssm_decode(blk["ssm"], a, cfg, sl["ssm"], sl["conv"])
+        return h + y, {"ssm": s_new, "conv": c_new}
+    a = L.rmsnorm(blk["ln1"], h, cfg.rms_eps)
+    if cfg.attn_kind == "mla":
+        y, ckv, kr = L.mla_decode(blk["attn"], a, cfg, sl["ckv"], sl["kr"], cache_len)
+        new_cache = {"ckv": ckv, "kr": kr}
+    else:
+        y, k, v = L.gqa_decode(blk["attn"], a, cfg, sl["k"], sl["v"], cache_len,
+                               mrope_pos=mrope_pos)
+        new_cache = {"k": k, "v": v}
+    h = h + y
+    m = L.rmsnorm(blk["ln2"], h, cfg.rms_eps)
+    if is_moe_layer:
+        y2, _ = MOE.moe_forward(blk["moe"], m, cfg)
+        h = h + y2
+    else:
+        h = h + L.mlp_forward(blk["mlp"], m, cfg)
+    return h, new_cache
+
+
+def serve_step(params, cfg: ModelConfig, cache, token, cache_len, *,
+               mrope_pos=None):
+    """token [B] int32; cache_len scalar int32 -> (logits [B,Vp] fp32, cache)."""
+    c = cfg.cdtype()
+    h = jnp.take(params["embed"]["w"], token[:, None], axis=0).astype(c)
+    h = constrain(h, "batch", None, None)
+    new_cache = dict(cache)
+
+    n_head = len(params.get("head_layers", []))
+    if n_head:
+        keys = [kk for kk in ("ckv", "kr", "k", "v") if kk in cache]
+        for i, blk in enumerate(params["head_layers"]):
+            sl = {kk: cache[kk][i] for kk in keys}
+            h, nc = _block_decode(cfg, blk, h, sl, cache_len, mrope_pos,
+                                  is_moe_layer=False)
+            for kk in keys:
+                new_cache[kk] = new_cache[kk].at[i].set(nc[kk])
+
+    if cfg.family == "hybrid" and "shared_attn" in params:
+        sp = params["shared_attn"]
+        ak, av = cache["attn_k"], cache["attn_v"]
+        ssm_out, conv_out = [], []
+        app_idx = 0
+
+        def body(h, xs):
+            blk, s_ssm, s_conv = xs
+            h, nc = _block_decode(cfg, blk, h, {"ssm": s_ssm, "conv": s_conv},
+                                  cache_len, mrope_pos, is_moe_layer=False)
+            return h, (nc["ssm"], nc["conv"])
+
+        for a, b, app in _hybrid_segments(cfg):
+            sub = _tree_slice(params["layers"], a, b)
+            h, (s_s, c_s) = lax.scan(body, h, (sub, cache["ssm"][a:b],
+                                               cache["conv"][a:b]),
+                                     unroll=cfg.scan_unroll)
+            ssm_out.append(s_s)
+            conv_out.append(c_s)
+            if app:
+                aa = L.rmsnorm(sp["ln1"], h, cfg.rms_eps)
+                y, nk, nv = L.gqa_decode(sp["attn"], aa, cfg, ak[app_idx],
+                                         av[app_idx], cache_len)
+                h = h + y
+                m = L.rmsnorm(sp["ln2"], h, cfg.rms_eps)
+                h = h + L.mlp_forward(sp["mlp"], m, cfg)
+                ak = ak.at[app_idx].set(nk)
+                av = av.at[app_idx].set(nv)
+                app_idx += 1
+        new_cache = {"ssm": jnp.concatenate(ssm_out, axis=0),
+                     "conv": jnp.concatenate(conv_out, axis=0),
+                     "attn_k": ak, "attn_v": av}
+    else:
+        keys = [kk for kk in ("ckv", "kr", "k", "v", "ssm", "conv") if kk in cache]
+
+        def body(h, xs):
+            blk = xs[0]
+            sl = dict(zip(keys, xs[1:]))
+            h, nc = _block_decode(cfg, blk, h, sl, cache_len, mrope_pos,
+                                  is_moe_layer=cfg.is_moe)
+            return h, tuple(nc[kk] for kk in keys)
+
+        stacked = tuple(cache[kk][n_head:] if n_head else cache[kk] for kk in keys)
+        h, new_stacked = lax.scan(body, h, (params["layers"],) + stacked,
+                                  unroll=cfg.scan_unroll)
+        for i, kk in enumerate(keys):
+            if n_head:
+                new_cache[kk] = lax.dynamic_update_slice_in_dim(
+                    new_cache[kk], new_stacked[i], n_head, axis=0)
+            else:
+                new_cache[kk] = new_stacked[i]
+
+    h = L.rmsnorm(params["final_norm"], h, cfg.rms_eps)
+    logits = _logits(params, cfg, h)
+    return logits[:, 0].astype(jnp.float32), new_cache
+
+
+# --------------------------------------------------------------------------
+# Prefill: full forward that also emits the filled cache.
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, patch_embeds=None,
+            mrope_pos=None):
+    """tokens [B,S] -> (next-token logits [B,Vp] fp32, cache filled to S)."""
+    B, S = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    h = _embed(params, cfg, tokens, patch_embeds)
+
+    head_caches = []
+    for blk in params.get("head_layers", []):
+        a = L.rmsnorm(blk["ln1"], h, cfg.rms_eps)
+        if cfg.attn_kind == "mla":
+            y, kv = L.mla_forward(blk["attn"], a, cfg, pos, return_kv=True)
+        else:
+            y, kv = L.gqa_forward(blk["attn"], a, cfg, pos,
+                                  mrope_pos=mrope_pos, return_kv=True)
+        h = h + y
+        m = L.rmsnorm(blk["ln2"], h, cfg.rms_eps)
+        h = h + L.mlp_forward(blk["mlp"], m, cfg)
+        head_caches.append(kv)
+
+    def body(h, blk):
+        if cfg.family in ("ssm", "hybrid"):
+            a = L.rmsnorm(blk["norm"], h, cfg.rms_eps)
+            y, (s_state, c_state) = SSM.ssm_forward(blk["ssm"], a, cfg,
+                                                    return_state=True)
+            h = h + y
+            ys = (s_state, c_state)
+        else:
+            a = L.rmsnorm(blk["ln1"], h, cfg.rms_eps)
+            if cfg.attn_kind == "mla":
+                y, kv = L.mla_forward(blk["attn"], a, cfg, pos, return_kv=True)
+            else:
+                y, kv = L.gqa_forward(blk["attn"], a, cfg, pos,
+                                      mrope_pos=mrope_pos, return_kv=True)
+            h = h + y
+            m = L.rmsnorm(blk["ln2"], h, cfg.rms_eps)
+            if cfg.is_moe:
+                y2, _ = MOE.moe_forward(blk["moe"], m, cfg)
+                h = h + y2
+            else:
+                h = h + L.mlp_forward(blk["mlp"], m, cfg)
+            ys = kv
+        return _hc(cfg, h), ys
+
+    body_r = jax.checkpoint(body, policy=_remat_policy(cfg), prevent_cse=False)
+
+    if cfg.family == "hybrid" and "shared_attn" in params:
+        sp = params["shared_attn"]
+        ssm_s, conv_s, shk, shv = [], [], [], []
+        for a, b, app in _hybrid_segments(cfg):
+            h, (s_s, c_s) = lax.scan(body_r, h, _tree_slice(params["layers"], a, b),
+                                     unroll=cfg.scan_unroll)
+            ssm_s.append(s_s)
+            conv_s.append(c_s)
+            if app:
+                h, kv = _shared_block_fwd(cfg, sp, h, pos, return_kv=True)
+                h = _hc(cfg, h)
+                shk.append(kv[0])
+                shv.append(kv[1])
+        cache = {"ssm": jnp.concatenate(ssm_s, axis=0),
+                 "conv": jnp.concatenate(conv_s, axis=0),
+                 "attn_k": jnp.stack(shk), "attn_v": jnp.stack(shv)}
+    else:
+        h, ys = lax.scan(body_r, h, params["layers"], unroll=cfg.scan_unroll)
+        if cfg.family == "ssm":
+            cache = {"ssm": ys[0], "conv": ys[1]}
+        elif cfg.attn_kind == "mla":
+            cache = {"ckv": ys[0], "kr": ys[1]}
+            if head_caches:
+                hc = jnp.stack([kv[0] for kv in head_caches])
+                hr = jnp.stack([kv[1] for kv in head_caches])
+                cache = {"ckv": jnp.concatenate([hc, cache["ckv"]], axis=0),
+                         "kr": jnp.concatenate([hr, cache["kr"]], axis=0)}
+        else:
+            cache = {"k": ys[0], "v": ys[1]}
+            if head_caches:
+                hk = jnp.stack([kv[0] for kv in head_caches])
+                hv = jnp.stack([kv[1] for kv in head_caches])
+                cache = {"k": jnp.concatenate([hk, cache["k"]], axis=0),
+                         "v": jnp.concatenate([hv, cache["v"]], axis=0)}
+
+    h = L.rmsnorm(params["final_norm"], h, cfg.rms_eps)
+    logits = _logits(params, cfg, h[:, -1:, :])
+    return logits[:, 0].astype(jnp.float32), cache

@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, global_norm  # noqa: F401
+from repro.optim import compression  # noqa: F401

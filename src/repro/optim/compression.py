@@ -1,0 +1,60 @@
+"""Gradient compression for cross-pod reduction: bf16 cast and int8
+quantization with error feedback.
+
+On a real multi-pod system the data-parallel gradient all-reduce crosses the
+(slow) inter-pod links; compressing the payload trades a little fidelity for
+up to 4x less inter-pod traffic.  Here the compressors are exact pytree
+transforms (validated by unit tests); `train.py` applies them between backward
+and the optimizer, and the error-feedback residual rides along in the train
+state so restarts are exact.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_bf16(grads):
+    return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def decompress_bf16(grads):
+    return jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+
+def _q8(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_int8(grads):
+    """-> pytree of (int8 values, fp32 scale) pairs."""
+    return jax.tree.map(_q8, grads)
+
+
+def decompress_int8(comp):
+    return jax.tree.map(lambda qs: qs[0].astype(jnp.float32) * qs[1], comp,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def error_feedback_int8(grads, residual):
+    """Quantize (grads + residual); return (dequantized grads, new residual).
+
+    The residual keeps what quantization dropped, so the *accumulated* update
+    is unbiased — the standard EF-SGD construction.
+    """
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        q, scale = _q8(g32)
+        deq = q.astype(jnp.float32) * scale
+        return deq, g32 - deq
+
+    out = jax.tree.map(one, grads, residual)
+    deq = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_res = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return deq, new_res
+
+
+def init_residual(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)

@@ -1,0 +1,85 @@
+"""Units for the dry-run analysis layer: HLO collective parsing, roofline
+term arithmetic, ZeRO sharding specs."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis.hlo import collective_bytes, hlo_op_histogram
+from repro.analysis.roofline import attn_s2_traffic, fmt_seconds, terms
+from repro.distributed.sharding import ann, split_annotations, zero_shardings
+
+HLO = """
+  %all-reduce.1 = f32[1024]{0} all-reduce(%x), replica_groups=[1,8]<=[8], to_apply=%add
+  %all-gather.2 = bf16[16,128]{1,0} all-gather(%y), replica_groups={{0,1,2,3}}, dimensions={0}
+  %reduce-scatter.3 = f32[64]{0} reduce-scatter(%z), replica_groups=[2,4]<=[8], dimensions={0}
+  %collective-permute.4 = s32[256]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %add.5 = f32[4]{0} add(%a, %b)
+"""
+
+
+def test_collective_bytes_formulas():
+    out = collective_bytes(HLO, n_devices=8)
+    # all-reduce: 2 * 4096B * 7/8
+    assert abs(out["all-reduce"] - 2 * 4096 * 7 / 8) < 1e-6
+    # all-gather over 4: 16*128*2B * 3/4
+    assert abs(out["all-gather"] - 16 * 128 * 2 * 3 / 4) < 1e-6
+    # reduce-scatter over 4: 64*4B * 3
+    assert abs(out["reduce-scatter"] - 64 * 4 * 3) < 1e-6
+    # permute: raw bytes
+    assert abs(out["collective-permute"] - 256 * 4) < 1e-6
+    assert out["count_all-reduce"] == 1
+    assert out["total"] == pytest.approx(
+        out["all-reduce"] + out["all-gather"] + out["reduce-scatter"]
+        + out["collective-permute"])
+
+
+def test_collective_bytes_ignores_plain_ops():
+    assert collective_bytes("  %m = f32[8,8]{1,0} dot(%a, %b)", 8)["total"] == 0
+
+
+def test_hlo_op_histogram():
+    h = hlo_op_histogram(HLO)
+    assert h.get("all-reduce") == 1 and h.get("add") == 1
+
+
+def test_roofline_terms_dominant():
+    rec = {"status": "ok", "arch": "nonexistent-arch", "shape": "train_4k",
+           "n_devices": 256, "flops_per_device": 197e12,     # 1s compute
+           "bytes_per_device": 819e9 * 2,                    # 2s memory
+           "collectives": {"total": 50e9 * 0.5},             # 0.5s coll
+           "model_flops": 197e12 * 256}
+    t = terms(rec)
+    assert t["dominant"] == "memory"
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    assert abs(t["mfu_bound"] - 0.5) < 1e-9  # 1s useful / 2s bound
+
+
+def test_attn_s2_traffic_shapes():
+    dense = attn_s2_traffic("qwen3-0.6b", "train_4k", 256)
+    assert dense > 0
+    assert attn_s2_traffic("mamba2-780m", "train_4k", 256) == 0.0  # attn-free
+    assert attn_s2_traffic("qwen3-0.6b", "decode_32k", 256) == 0.0  # 1 token
+    hybrid = attn_s2_traffic("zamba2-7b", "train_4k", 256)
+    assert 0 < hybrid < dense * 10
+
+
+def test_fmt_seconds():
+    assert fmt_seconds(0) == "0"
+    assert fmt_seconds(5e-7).endswith("µs")
+    assert fmt_seconds(5e-2).endswith("ms")
+    assert fmt_seconds(2.0).endswith("s")
+
+
+def test_zero_shardings_sharding():
+    n = jax.device_count()
+    mesh = jax.make_mesh((n, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    tree = {"big": ann(jnp.zeros((4 * n, 8 * n)), None, "ff"),
+            "small": ann(jnp.zeros((4,)), None)}
+    params, axes = split_annotations(tree)
+    sh = zero_shardings(mesh, params, axes, min_size=0)
+    # big: dim 1 ('ff' -> model=1 -> unsharded), so dim 0 takes 'data'
+    assert sh["big"].spec in (P("data", None), P(None, None))
+    if n > 1:
+        assert sh["big"].spec == P("data", None)

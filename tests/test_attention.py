@@ -1,0 +1,127 @@
+"""Attention-path consistency: chunked==unchunked, decode==teacher-forced
+forward, MLA absorbed==naive, M-RoPE degenerates to RoPE."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.distributed.sharding import split_annotations
+from repro.models import layers as L
+from repro.models import get_model_fns
+
+
+def _params(init, cfg, seed=0):
+    tree = init(cfg, jax.random.key(seed))
+    params, _ = split_annotations(tree)
+    return params
+
+
+def test_gqa_chunked_matches_unchunked():
+    cfg = smoke_config("qwen3-0.6b").replace(q_chunk=16)
+    p = _params(L.init_gqa, cfg)
+    h = jax.random.normal(jax.random.key(1), (2, 64, cfg.d_model),
+                          jnp.float32) * 0.3
+    pos = jnp.broadcast_to(jnp.arange(64, dtype=jnp.int32)[None], (2, 64))
+    y_chunk = L.gqa_forward(p, h, cfg, pos)                  # 64 > 16 -> scan
+    y_full = L.gqa_forward(p, h, cfg, pos, q_chunk=64)
+    np.testing.assert_allclose(np.asarray(y_chunk, np.float32),
+                               np.asarray(y_full, np.float32),
+                               rtol=0, atol=2e-2)
+
+
+def test_mla_chunked_matches_unchunked():
+    cfg = smoke_config("deepseek-v2-lite-16b").replace(q_chunk=16)
+    p = _params(L.init_mla, cfg)
+    h = jax.random.normal(jax.random.key(1), (2, 64, cfg.d_model),
+                          jnp.float32) * 0.3
+    pos = jnp.broadcast_to(jnp.arange(64, dtype=jnp.int32)[None], (2, 64))
+    y_chunk = L.mla_forward(p, h, cfg, pos)
+    y_full = L.mla_forward(p, h, cfg, pos, q_chunk=64)
+    np.testing.assert_allclose(np.asarray(y_chunk, np.float32),
+                               np.asarray(y_full, np.float32),
+                               rtol=0, atol=2e-2)
+
+
+def test_mla_absorbed_decode_matches_naive():
+    cfg = smoke_config("deepseek-v2-lite-16b")
+    p = _params(L.init_mla, cfg)
+    B, S = 2, 12
+    ckv = jax.random.normal(jax.random.key(2), (B, S, cfg.kv_lora_rank),
+                            jnp.float32) * 0.3
+    kr = jax.random.normal(jax.random.key(3), (B, S, cfg.qk_rope_dim),
+                           jnp.float32) * 0.3
+    h1 = jax.random.normal(jax.random.key(4), (B, 1, cfg.d_model),
+                           jnp.float32) * 0.3
+    cd = jnp.dtype(cfg.cache_dtype)
+    y_naive, *_ = L.mla_decode(p, h1, cfg, ckv.astype(cd), kr.astype(cd),
+                               jnp.int32(S - 1))
+    cfg_a = cfg.replace(mla_absorb=True)
+    y_abs, *_ = L.mla_decode(p, h1, cfg_a, ckv.astype(cd), kr.astype(cd),
+                             jnp.int32(S - 1))
+    np.testing.assert_allclose(np.asarray(y_naive, np.float32),
+                               np.asarray(y_abs, np.float32),
+                               rtol=0, atol=3e-2)
+
+
+def test_mrope_equals_rope_on_equal_sections():
+    """When all three position components are equal, M-RoPE == RoPE."""
+    dim, theta = 64, 1e4
+    pos = jnp.arange(10, dtype=jnp.int32)[None]
+    pos3 = jnp.broadcast_to(pos[..., None], (1, 10, 3))
+    c1, s1 = L.rope_cos_sin(pos, dim, theta, jnp.float32)
+    c3, s3 = L.mrope_cos_sin(pos3, dim, theta, (10, 11, 11), jnp.float32)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c3), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s3), atol=1e-6)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "deepseek-v2-lite-16b",
+                                  "mamba2-780m", "zamba2-7b"])
+def test_decode_matches_teacher_forcing(arch):
+    """prefill(tokens[:t]) + serve_step chain == forward(tokens) logits.
+
+    fp32 compute/cache isolates PATH divergence from bf16 rounding noise,
+    so the tolerance can be tight.  capacity_factor is raised so MoE
+    capacity drops (which legitimately differ between a 48-token forward
+    and a 1-token decode) cannot occur."""
+    cfg = smoke_config(arch).replace(compute_dtype="float32",
+                                     cache_dtype="float32",
+                                     capacity_factor=8.0)
+    fns = get_model_fns(cfg)
+    state, _ = fns.init_train_state(cfg, jax.random.key(0))
+    params = state["params"]
+    B, S = 2, 24
+    toks = np.asarray(
+        jax.random.randint(jax.random.key(5), (B, S), 0, cfg.vocab_size),
+        np.int32)
+
+    logits_full, _ = fns.forward(params, cfg, jnp.asarray(toks))
+    logits_full = np.asarray(logits_full, np.float32)
+
+    t0 = S // 2
+    _, pcache = fns.prefill(params, cfg, jnp.asarray(toks[:, :t0]))
+    if cfg.family in ("ssm", "hybrid"):
+        cache = pcache
+        if cfg.family == "hybrid":
+            grown = {}
+            for k, v in pcache.items():
+                if k.startswith("attn_"):
+                    pad = [(0, 0)] * v.ndim
+                    pad[2] = (0, S - v.shape[2])
+                    grown[k] = jnp.pad(v, pad)
+                else:
+                    grown[k] = v
+            cache = grown
+    else:
+        cache = fns.init_cache(cfg, B, S)
+        cache = {k: jax.lax.dynamic_update_slice_in_dim(
+            cache[k], pcache[k].astype(cache[k].dtype), 0, axis=2)
+            for k in cache}
+    for t in range(t0, S):
+        logits_t, cache = fns.serve_step(params, cfg, cache,
+                                         jnp.asarray(toks[:, t]),
+                                         jnp.int32(t))
+        # serve_step consumed token t with cache holding 0..t-1: its output
+        # must match forward's logits at position t
+        np.testing.assert_allclose(np.asarray(logits_t, np.float32),
+                                   logits_full[:, t], rtol=0, atol=2e-3)

@@ -1,0 +1,93 @@
+"""Lowering/dry-run machinery at test scale: a subprocess forces 16 host
+devices and lowers smoke-size cells on a 4x4 mesh, proving the sharding
+rules compose before the (expensive) production 512-device campaign.
+Also asserts the PIM property: the aligner cell lowers with ZERO collectives.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+DRIVER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import json
+import jax
+from repro.analysis.hlo import collective_bytes
+from repro.configs import smoke_config, wfa_paper
+from repro.launch.lowering import build_lm_cell, build_wfa_cell, lower_cell
+from repro.launch.mesh import make_mesh
+from repro.models.common import ShapeSpec
+
+mesh = make_mesh((4, 4), ("data", "model"))
+out = {}
+
+for arch, shape in [("qwen3-0.6b", ShapeSpec("t", 64, 8, "train")),
+                    ("deepseek-v2-lite-16b", ShapeSpec("t", 64, 8, "train")),
+                    ("mamba2-780m", ShapeSpec("d", 128, 8, "decode")),
+                    ("whisper-base", ShapeSpec("p", 64, 8, "prefill"))]:
+    cfg = smoke_config(arch)
+    cell = build_lm_cell(cfg, shape, mesh, mode="roofline")
+    lowered, _ = lower_cell(cell, mesh)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    out[f"{arch}:{shape.kind}"] = {
+        "flops": float(cost.get("flops", -1)),
+        "coll": collective_bytes(compiled.as_text(), 16)["total"],
+    }
+
+# EP-MoE numerics on a real multi-device mesh
+import jax.numpy as jnp
+import numpy as np
+from repro.distributed.sharding import split_annotations, use_mesh
+from repro.models import moe as MOE
+cfg = smoke_config("phi3.5-moe-42b-a6.6b").replace(
+    n_experts=8, top_k=2, capacity_factor=8.0, n_shared_experts=0,
+    compute_dtype="float32")
+params, _ = split_annotations(MOE.init_moe(cfg, jax.random.key(0)))
+xm = jax.random.normal(jax.random.key(1), (4, 32, cfg.d_model), jnp.float32)
+with mesh, use_mesh(mesh):
+    yb, _ = jax.jit(lambda p, x: MOE.moe_forward(p, x, cfg))(params, xm)
+    ye, _ = jax.jit(lambda p, x: MOE.moe_forward(
+        p, x, cfg.replace(moe_ep=True)))(params, xm)
+out["moe_ep_err"] = float(jnp.max(jnp.abs(yb - ye)))
+
+for variant in ("pjit", "shard_map"):
+    cell = build_wfa_cell(wfa_paper, mesh, pairs_per_device=8, variant=variant)
+    lowered, _ = lower_cell(cell, mesh)
+    compiled = lowered.compile()
+    out[f"wfa_{variant}"] = {
+        "coll": collective_bytes(compiled.as_text(), 16)["total"]}
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_lowering_on_16_device_mesh():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("JAX_PLATFORMS", None)
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run([sys.executable, "-c", DRIVER], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+
+    # every LM cell compiled and did real work
+    for key, rec in out.items():
+        if key.startswith("wfa_") or not isinstance(rec, dict):
+            continue
+        assert rec["flops"] > 0, (key, rec)
+    # model-parallel cells must communicate...
+    assert out["qwen3-0.6b:train"]["coll"] > 0
+    # ...the baseline aligner carries only the tiny lock-step termination
+    # all-reduce (DESIGN.md §9.7) ...
+    assert 0 < out["wfa_pjit"]["coll"] < 1e5
+    # ...and the shard_map variant is collective-FREE (the paper's
+    # no-inter-DPU-communication property, restored)
+    assert out["wfa_shard_map"]["coll"] == 0.0
+    # EP MoE numerics must match the pjit dispatch on a real mesh
+    assert out["moe_ep_err"] < 1e-4

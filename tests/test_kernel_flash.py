@@ -1,0 +1,64 @@
+"""Flash-attention Pallas kernel vs jnp oracle: shape/dtype/blocking sweeps
+(interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention, ref_attention_gqa
+
+
+def _qkv(B, Sq, Sk, H, KV, dh, dtype, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = (jax.random.normal(ks[0], (B, Sq, H, dh), jnp.float32) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (B, Sk, KV, dh), jnp.float32) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (B, Sk, KV, dh), jnp.float32) * 0.5).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("H,KV", [(8, 8), (8, 2), (16, 1)],
+                         ids=["mha", "gqa", "mqa"])
+@pytest.mark.parametrize("S", [128, 256, 250])
+def test_flash_matches_ref_fp32(H, KV, S):
+    q, k, v = _qkv(2, S, S, H, KV, 64, jnp.float32)
+    got = flash_attention(q, k, v, block_q=128, block_k=128)
+    ref = ref_attention_gqa(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=3e-5)
+
+
+def test_flash_bf16_tolerance():
+    q, k, v = _qkv(1, 256, 256, 4, 2, 128, jnp.bfloat16)
+    got = flash_attention(q, k, v, block_q=128, block_k=128)
+    ref = ref_attention_gqa(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32), atol=2e-2)
+
+
+def test_flash_block_size_invariance():
+    q, k, v = _qkv(1, 512, 512, 4, 2, 64, jnp.float32, seed=3)
+    a = flash_attention(q, k, v, block_q=128, block_k=128)
+    b = flash_attention(q, k, v, block_q=256, block_k=512)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5)
+
+
+def test_flash_causality():
+    """Changing a future key must not change past outputs."""
+    q, k, v = _qkv(1, 256, 256, 4, 2, 64, jnp.float32, seed=4)
+    base = flash_attention(q, k, v, block_q=128, block_k=128)
+    k2 = k.at[:, 200].add(7.0)
+    v2 = v.at[:, 200].add(7.0)
+    pert = flash_attention(q, k2, v2, block_q=128, block_k=128)
+    np.testing.assert_allclose(np.asarray(base[:, :200]),
+                               np.asarray(pert[:, :200]), atol=3e-5)
+    assert not np.allclose(np.asarray(base[:, 201:]),
+                           np.asarray(pert[:, 201:]))
+
+
+def test_flash_long_context_streaming():
+    """KV much longer than one block: online softmax must stay exact."""
+    q, k, v = _qkv(1, 128, 1024, 4, 4, 64, jnp.float32, seed=5)
+    # decode-like: causal with query block at the END of the kv range is not
+    # expressible without offsets; test the non-causal full-window variant
+    got = flash_attention(q, k, v, causal=False, block_q=128, block_k=128)
+    ref = ref_attention_gqa(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=3e-5)

@@ -1,0 +1,111 @@
+"""Pallas WFA kernel vs the pure-jnp oracle: shape/penalty/blocking sweeps.
+
+Scores are integers, so the assertion is exact equality (no tolerance).
+The kernel runs interpret=True on CPU (the TPU lowering is exercised
+structurally by pallas_call + BlockSpec construction)."""
+import numpy as np
+import pytest
+
+from repro.core.aligner import problem_bounds
+from repro.core.penalties import DEFAULT, Penalties
+from repro.data.reads import ReadPairSpec, generate_pairs
+from repro.kernels.wfa import ref_scores, wfa_align_np
+
+PENS = [DEFAULT, Penalties(1, 0, 1), Penalties(2, 3, 1), Penalties(5, 1, 1)]
+
+
+def _regime(n_pairs, read_len, edit_frac, seed, pen):
+    P, plen, T, tlen = generate_pairs(
+        ReadPairSpec(n_pairs=n_pairs, read_len=read_len, edit_frac=edit_frac,
+                     seed=seed))
+    s_max, k_max = problem_bounds(pen, plen, tlen, edit_frac)
+    return P, plen, T, tlen, s_max, k_max
+
+
+@pytest.mark.parametrize("pen", PENS, ids=lambda p: f"x{p.x}o{p.o}e{p.e}")
+@pytest.mark.parametrize("read_len,edit_frac", [(48, 0.05), (100, 0.02),
+                                                (100, 0.04)])
+def test_kernel_matches_ref(pen, read_len, edit_frac):
+    P, plen, T, tlen, s_max, k_max = _regime(16, read_len, edit_frac, 3, pen)
+    ref = np.asarray(ref_scores(P, T, plen, tlen, pen=pen, s_max=s_max,
+                                k_max=k_max))
+    got = wfa_align_np(P, T, plen, tlen, pen=pen, s_max=s_max, k_max=k_max)
+    np.testing.assert_array_equal(ref, got)
+
+
+@pytest.mark.parametrize("n_pairs", [1, 3, 8, 19])
+def test_kernel_pair_padding(n_pairs):
+    """Batch sizes that do not divide the block size must still be exact."""
+    P, plen, T, tlen, s_max, k_max = _regime(n_pairs, 60, 0.06, 11, DEFAULT)
+    ref = np.asarray(ref_scores(P, T, plen, tlen, pen=DEFAULT, s_max=s_max,
+                                k_max=k_max))
+    got = wfa_align_np(P, T, plen, tlen, pen=DEFAULT, s_max=s_max,
+                       k_max=k_max)
+    np.testing.assert_array_equal(ref, got)
+
+
+@pytest.mark.parametrize("block_pairs", [8, 16])
+def test_kernel_block_size_invariance(block_pairs):
+    P, plen, T, tlen, s_max, k_max = _regime(32, 80, 0.05, 5, DEFAULT)
+    ref = np.asarray(ref_scores(P, T, plen, tlen, pen=DEFAULT, s_max=s_max,
+                                k_max=k_max))
+    got = wfa_align_np(P, T, plen, tlen, pen=DEFAULT, s_max=s_max,
+                       k_max=k_max, block_pairs=block_pairs)
+    np.testing.assert_array_equal(ref, got)
+
+
+def test_kernel_ragged_lengths():
+    """Mates of different lengths within one block."""
+    rng = np.random.default_rng(7)
+    pats, txts = [], []
+    for i in range(12):
+        L = int(rng.integers(8, 90))
+        p = rng.integers(65, 69, size=L, dtype=np.int32)
+        cut = int(rng.integers(0, 6))
+        t = np.concatenate([p[cut:], rng.integers(65, 69, size=cut,
+                                                  dtype=np.int32)])
+        pats.append(p)
+        txts.append(t)
+    Lp = max(len(p) for p in pats)
+    Lt = max(len(t) for t in txts)
+    P = np.zeros((12, Lp), np.int32)
+    T = np.zeros((12, Lt), np.int32)
+    plen = np.array([len(p) for p in pats], np.int32)
+    tlen = np.array([len(t) for t in txts], np.int32)
+    for i in range(12):
+        P[i, : plen[i]] = pats[i]
+        T[i, : tlen[i]] = txts[i]
+    s_max, k_max = problem_bounds(DEFAULT, plen, tlen, None)
+    ref = np.asarray(ref_scores(P, T, plen, tlen, pen=DEFAULT, s_max=s_max,
+                                k_max=k_max))
+    got = wfa_align_np(P, T, plen, tlen, pen=DEFAULT, s_max=s_max,
+                       k_max=k_max)
+    np.testing.assert_array_equal(ref, got)
+
+
+def test_kernel_score_cap():
+    """Pairs over the score budget must come back -1, exactly like the ref."""
+    P = np.full((8, 16), 65, np.int32)
+    T = np.full((8, 16), 67, np.int32)   # all-mismatch
+    lens = np.full((8,), 16, np.int32)
+    ref = np.asarray(ref_scores(P, T, lens, lens, pen=DEFAULT, s_max=10,
+                                k_max=4))
+    got = wfa_align_np(P, T, lens, lens, pen=DEFAULT, s_max=10, k_max=4)
+    np.testing.assert_array_equal(ref, got)
+    assert (got == -1).all()
+
+
+def test_kernel_empty_and_tiny():
+    P = np.zeros((4, 4), np.int32)
+    T = np.zeros((4, 4), np.int32)
+    P[1, 0] = 65
+    T[2, 0] = 66
+    plen = np.array([0, 1, 0, 1], np.int32)
+    tlen = np.array([0, 1, 1, 0], np.int32)
+    P[3, 0] = 67
+    s_max, k_max = problem_bounds(DEFAULT, plen, tlen, None)
+    ref = np.asarray(ref_scores(P, T, plen, tlen, pen=DEFAULT, s_max=s_max,
+                                k_max=k_max))
+    got = wfa_align_np(P, T, plen, tlen, pen=DEFAULT, s_max=s_max,
+                       k_max=k_max)
+    np.testing.assert_array_equal(ref, got)

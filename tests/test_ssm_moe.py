@@ -1,0 +1,141 @@
+"""SSD (Mamba2) and MoE unit invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.distributed.sharding import split_annotations
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+
+
+def _params(init, cfg, seed=0):
+    params, _ = split_annotations(init(cfg, jax.random.key(seed)))
+    return params
+
+
+# ---------------------------------------------------------------- SSD ----
+
+
+def test_ssd_chunk_size_invariance():
+    cfg8 = smoke_config("mamba2-780m").replace(ssm_chunk=8)
+    cfg16 = cfg8.replace(ssm_chunk=16)
+    p = _params(SSM.init_ssm, cfg8)
+    h = jax.random.normal(jax.random.key(1), (2, 32, cfg8.d_model),
+                          jnp.float32) * 0.5
+    y8 = SSM.ssm_forward(p, h, cfg8)
+    y16 = SSM.ssm_forward(p, h, cfg16)
+    np.testing.assert_allclose(np.asarray(y8, np.float32),
+                               np.asarray(y16, np.float32), atol=3e-2)
+
+
+def test_ssd_state_continuation():
+    """forward(x[:,:16]) state feeds forward(x[:,16:]) == forward(x)."""
+    cfg = smoke_config("mamba2-780m").replace(ssm_chunk=8)
+    p = _params(SSM.init_ssm, cfg)
+    h = jax.random.normal(jax.random.key(2), (2, 32, cfg.d_model),
+                          jnp.float32) * 0.5
+    y_full, (state_f, _) = SSM.ssm_forward(p, h, cfg, return_state=True)
+    y1, (state1, conv1) = SSM.ssm_forward(p, h[:, :16], cfg, return_state=True)
+    # continuation must consume both the ssm state AND the conv tail; the
+    # public decode path does this (test_attention covers it end-to-end).
+    # Here we check the ssm state algebra alone with a clean conv boundary.
+    h2 = h.at[:, 16 - (cfg.ssm_conv - 1):16].set(0.0)
+    y1b, (state1b, _) = SSM.ssm_forward(p, h2[:, :16], cfg, return_state=True)
+    y2, (state2, _) = SSM.ssm_forward(p, h2[:, 16:], cfg,
+                                      initial_state=state1b,
+                                      return_state=True)
+    y_ref, (state_ref, _) = SSM.ssm_forward(p, h2, cfg, return_state=True)
+    np.testing.assert_allclose(np.asarray(y2, np.float32),
+                               np.asarray(y_ref[:, 16:], np.float32),
+                               atol=3e-2)
+    np.testing.assert_allclose(np.asarray(state2), np.asarray(state_ref),
+                               atol=3e-2)
+
+
+def test_ssd_decay_is_contractive():
+    """With A<0 the recurrence decays: zero input -> state shrinks."""
+    cfg = smoke_config("mamba2-780m")
+    p = _params(SSM.init_ssm, cfg)
+    B = 2
+    state = jnp.ones((B, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                     jnp.float32)
+    conv = jnp.zeros((B, cfg.ssm_conv - 1,
+                      cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state),
+                     jnp.float32)
+    h = jnp.zeros((B, 1, cfg.d_model), jnp.float32)
+    _, (new_state, _) = SSM.ssm_decode(p, h, cfg, state, conv)
+    assert float(jnp.max(jnp.abs(new_state))) <= 1.0 + 1e-5
+
+
+# ---------------------------------------------------------------- MoE ----
+
+
+def test_moe_router_weights_normalized():
+    cfg = smoke_config("phi3.5-moe-42b-a6.6b")
+    p = _params(MOE.init_moe, cfg)
+    x = jax.random.normal(jax.random.key(3), (2, 16, cfg.d_model),
+                          jnp.float32) * 0.3
+    y, aux = MOE.moe_forward(p, x, cfg)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y, np.float32)).all()
+    assert float(aux) >= 1.0 - 1e-3  # E*sum(me*ce) >= 1 at any routing
+
+
+def test_moe_single_expert_equals_dense():
+    """E=1, top-1, no drop -> exactly the expert MLP."""
+    cfg = smoke_config("phi3.5-moe-42b-a6.6b").replace(
+        n_experts=1, top_k=1, capacity_factor=4.0, n_shared_experts=0)
+    p = _params(MOE.init_moe, cfg)
+    x = jax.random.normal(jax.random.key(4), (1, 8, cfg.d_model),
+                          jnp.float32) * 0.3
+    y, _ = MOE.moe_forward(p, x, cfg)
+    c = cfg.cdtype()
+    xt = x.reshape(-1, cfg.d_model)
+    g = jnp.einsum("td,edf->tef", xt.astype(c), p["w1"].astype(c))[:, 0]
+    u = jnp.einsum("td,edf->tef", xt.astype(c), p["w3"].astype(c))[:, 0]
+    ref = jnp.einsum("tf,efd->ted", jax.nn.silu(g) * u,
+                     p["w2"].astype(c))[:, 0]
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, cfg.d_model),
+                                          np.float32),
+                               np.asarray(ref, np.float32), atol=3e-2)
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity_factor << 1 some token routes must be dropped (zeros)."""
+    cfg = smoke_config("phi3.5-moe-42b-a6.6b").replace(
+        n_experts=2, top_k=1, capacity_factor=0.05, n_shared_experts=0)
+    p = _params(MOE.init_moe, cfg)
+    x = jax.random.normal(jax.random.key(5), (4, 64, cfg.d_model),
+                          jnp.float32)
+    y, _ = MOE.moe_forward(p, x, cfg)
+    norms = np.linalg.norm(np.asarray(y, np.float32), axis=-1).reshape(-1)
+    assert (norms < 1e-6).sum() > 0  # dropped tokens contribute zero
+
+
+def test_moe_shared_expert_always_on():
+    cfg = smoke_config("deepseek-v2-lite-16b").replace(
+        n_experts=4, top_k=1, capacity_factor=0.01, n_shared_experts=1)
+    p = _params(MOE.init_moe, cfg)
+    x = jax.random.normal(jax.random.key(6), (2, 32, cfg.d_model),
+                          jnp.float32)
+    y, _ = MOE.moe_forward(p, x, cfg)
+    norms = np.linalg.norm(np.asarray(y, np.float32), axis=-1).reshape(-1)
+    assert (norms > 1e-6).all()  # shared expert output survives drops
+
+
+def test_moe_ep_matches_baseline_single_device():
+    """moe_ep flag is a no-op without a multi-way 'model' axis (CPU), and
+    the EP path itself is validated on a forced 8-device mesh in
+    tests/test_dryrun_lowering.py."""
+    import jax.numpy as jnp
+    cfg = smoke_config("phi3.5-moe-42b-a6.6b").replace(
+        moe_ep=True, compute_dtype="float32", capacity_factor=8.0)
+    p = _params(MOE.init_moe, cfg)
+    x = jax.random.normal(jax.random.key(9), (2, 16, cfg.d_model),
+                          jnp.float32) * 0.3
+    y_ep, _ = MOE.moe_forward(p, x, cfg)
+    y_base, _ = MOE.moe_forward(p, x, cfg.replace(moe_ep=False))
+    np.testing.assert_allclose(np.asarray(y_ep), np.asarray(y_base),
+                               atol=1e-5)

@@ -1,0 +1,51 @@
+"""End-to-end behaviour of the paper's system: generate the paper's
+workload, run the PIM pipeline, check exactness and the throughput-mode
+consistency (Fig. 1's Total vs Kernel decomposition)."""
+import numpy as np
+import pytest
+
+from repro.configs import wfa_paper
+from repro.core.aligner import WFAligner
+from repro.core.gotoh import gotoh_score_vec
+from repro.core.pim import PIMBatchAligner
+from repro.data.reads import ReadPairSpec, generate_pairs
+
+
+@pytest.mark.parametrize("edit_frac", [0.02, 0.04])
+def test_paper_regime_end_to_end(edit_frac):
+    """100bp reads at the paper's E thresholds: every score exact."""
+    spec = ReadPairSpec(n_pairs=48, read_len=100, edit_frac=edit_frac, seed=0)
+    P, plen, T, tlen = generate_pairs(spec)
+    al = WFAligner(wfa_paper.pen, backend="ring", edit_frac=edit_frac)
+    scores, stats = PIMBatchAligner(al).run_arrays(P, plen, T, tlen)
+    assert (scores >= 0).all()      # E-derived budget must cover the data
+    for i in range(48):
+        g = gotoh_score_vec(P[i, : plen[i]], T[i, : tlen[i]], wfa_paper.pen)
+        assert scores[i] == g, i
+    assert stats.t_total >= stats.t_kernel > 0
+
+
+def test_backends_agree_on_paper_regime():
+    spec = ReadPairSpec(n_pairs=24, read_len=100, edit_frac=0.04, seed=5)
+    P, plen, T, tlen = generate_pairs(spec)
+    results = {}
+    for backend in ("ref", "ring", "kernel"):
+        al = WFAligner(wfa_paper.pen, backend=backend, edit_frac=0.04)
+        res = al.align([P[i, : plen[i]] for i in range(24)],
+                       [T[i, : tlen[i]] for i in range(24)])
+        results[backend] = res.scores
+    np.testing.assert_array_equal(results["ref"], results["ring"])
+    np.testing.assert_array_equal(results["ref"], results["kernel"])
+
+
+def test_wfa_complexity_advantage():
+    """WFA score-loop trips scale with divergence (O(n*s)), not length
+    (O(n*m)) — the property that makes it the state of the art the paper
+    accelerates."""
+    al = WFAligner(wfa_paper.pen, backend="ring")
+    low = al.align(["A" * 200], ["A" * 200])       # identical: s=0
+    assert low.n_steps <= 2
+    spec = ReadPairSpec(n_pairs=1, read_len=200, edit_frac=0.03, seed=1)
+    P, plen, T, tlen = generate_pairs(spec)
+    mid = al.align([P[0, : plen[0]]], [T[0, : tlen[0]]])
+    assert mid.n_steps <= 80            # ~s_max trips, never ~n*m

@@ -1,0 +1,120 @@
+"""Unit tests for the WFA core: bounds, hand-checked alignments, batching."""
+import numpy as np
+import pytest
+
+from repro.core.aligner import AlignResult, WFAligner, pack_batch, problem_bounds
+from repro.core.gotoh import gotoh_score, score_cigar
+from repro.core.penalties import DEFAULT, Penalties, band_bound, score_bound
+
+
+def test_penalties_window():
+    assert DEFAULT.window == max(DEFAULT.x, DEFAULT.o + DEFAULT.e) + 1
+    assert Penalties(1, 0, 1).window == 2
+
+
+def test_score_bound_covers_regime():
+    # paper regime: 100bp reads, E=4% -> at most 4 edits
+    s = score_bound(DEFAULT, 100, 0.04)
+    assert s >= 4 * max(DEFAULT.x, DEFAULT.o + DEFAULT.e)
+
+
+def test_band_bound_monotone():
+    prev = 0
+    for s in range(1, 60, 7):
+        k = band_bound(DEFAULT, s)
+        assert k >= prev
+        prev = k
+
+
+@pytest.mark.parametrize("backend", ["ref", "ring", "kernel"])
+def test_identical_sequences(backend):
+    al = WFAligner(backend=backend)
+    res = al.align(["ACGTACGT"], ["ACGTACGT"])
+    assert res.scores[0] == 0
+
+
+@pytest.mark.parametrize("backend", ["ref", "ring"])
+def test_single_mismatch(backend):
+    al = WFAligner(backend=backend)
+    res = al.align(["ACGTACGT"], ["ACGAACGT"])
+    assert res.scores[0] == DEFAULT.x
+
+
+def test_single_insertion():
+    al = WFAligner(with_cigar=True, backend="ref")
+    res = al.align(["ACGT"], ["ACGGT"])
+    assert res.scores[0] == DEFAULT.o + DEFAULT.e
+    assert res.cigar_strings()[0].count("I") == 1
+
+
+def test_single_deletion():
+    al = WFAligner(with_cigar=True, backend="ref")
+    res = al.align(["ACGGT"], ["ACGT"])
+    assert res.scores[0] == DEFAULT.o + DEFAULT.e
+    assert res.cigar_strings()[0].count("D") == 1
+
+
+def test_affine_gap_preference():
+    # one 3-long gap (o+3e=12) must beat three isolated 1-gaps (3(o+e)=24)
+    al = WFAligner(with_cigar=True, backend="ref")
+    res = al.align(["AAAATTTTCCCC"], ["AAAATTTTCCCCGGG"])
+    assert res.scores[0] == DEFAULT.o + 3 * DEFAULT.e
+    assert res.cigar_strings()[0].endswith("3I")
+
+
+def test_empty_vs_nonempty():
+    al = WFAligner(backend="ref")
+    res = al.align([""], ["ACGT"])
+    assert res.scores[0] == DEFAULT.o + 4 * DEFAULT.e
+    res = al.align(["ACGT"], [""])
+    assert res.scores[0] == DEFAULT.o + 4 * DEFAULT.e
+    res = al.align([""], [""])
+    assert res.scores[0] == 0
+
+
+def test_score_cap_returns_minus_one():
+    al = WFAligner(s_max=3, backend="ring")  # too small for any edit
+    res = al.align(["AAAA"], ["TTTT"])
+    assert res.scores[0] == -1
+
+
+def test_batch_matches_individual(rng):
+    pats = ["".join(rng.choice(list("ACGT"), size=rng.integers(5, 30)))
+            for _ in range(17)]
+    txts = ["".join(rng.choice(list("ACGT"), size=rng.integers(5, 30)))
+            for _ in range(17)]
+    al = WFAligner(backend="ring")
+    batch = al.align(pats, txts)
+    for i in range(17):
+        single = al.align([pats[i]], [txts[i]])
+        assert batch.scores[i] == single.scores[0], i
+
+
+def test_pack_batch_pads_and_lengths():
+    codes, lens = pack_batch(["AC", "ACGTACG"], multiple=8)
+    assert codes.shape == (2, 8)
+    assert list(lens) == [2, 7]
+
+
+def test_cigar_matches_score_against_gotoh(rng):
+    pen = Penalties(x=3, o=4, e=1)
+    al = WFAligner(pen, backend="ref", with_cigar=True)
+    for _ in range(10):
+        p = rng.choice(list("ACGT"), size=rng.integers(1, 25))
+        t = rng.choice(list("ACGT"), size=rng.integers(1, 25))
+        p, t = "".join(p), "".join(t)
+        res = al.align([p], [t])
+        g = gotoh_score(np.frombuffer(p.encode(), np.uint8),
+                        np.frombuffer(t.encode(), np.uint8), pen)
+        assert res.scores[0] == g
+        cost, ci, cj, ok = score_cigar(
+            res.cigars[0], np.frombuffer(p.encode(), np.uint8),
+            np.frombuffer(t.encode(), np.uint8), pen)
+        assert ok and cost == g and ci == len(p) and cj == len(t)
+
+
+def test_problem_bounds_len_diff():
+    plens = np.array([10], np.int32)
+    tlens = np.array([30], np.int32)
+    s_max, k_max = problem_bounds(DEFAULT, plens, tlens, None)
+    assert k_max >= 20  # must reach the final diagonal

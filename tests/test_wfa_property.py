@@ -1,0 +1,85 @@
+"""Property-based tests: WFA is EXACT — its score must equal the dense
+Gotoh gap-affine DP on every input.  That equality (plus CIGAR re-scoring)
+is the paper's correctness contract, fuzzed here over sequences, lengths,
+alphabets and penalty settings."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aligner import WFAligner
+from repro.core.gotoh import gotoh_score, gotoh_score_vec, score_cigar
+from repro.core.penalties import Penalties
+
+# small alphabets maximize coincidental matches (the extension loop's
+# hardest case); singleton alphabet forces pure-indel alignments
+alphabet = st.sampled_from([("A",), ("A", "C"), ("A", "C", "G", "T")])
+penalties = st.sampled_from([
+    Penalties(4, 6, 2),   # WFA2-lib default (the paper's setting)
+    Penalties(1, 0, 1),   # edit distance
+    Penalties(2, 3, 1),
+    Penalties(5, 1, 1),
+    Penalties(1, 8, 4),
+])
+
+
+@st.composite
+def seq_pair(draw):
+    ab = draw(alphabet)
+    p = "".join(draw(st.lists(st.sampled_from(ab), min_size=0, max_size=40)))
+    t = "".join(draw(st.lists(st.sampled_from(ab), min_size=0, max_size=40)))
+    return p, t
+
+
+@settings(max_examples=120, deadline=None)
+@given(seq_pair(), penalties)
+def test_wfa_equals_gotoh(pair, pen):
+    p, t = pair
+    al = WFAligner(pen, backend="ref", with_cigar=True)
+    res = al.align([p], [t])
+    pa = np.frombuffer(p.encode(), np.uint8)
+    ta = np.frombuffer(t.encode(), np.uint8)
+    g = gotoh_score(pa, ta, pen)
+    assert res.scores[0] == g, (p, t, pen)
+    cost, ci, cj, ok = score_cigar(res.cigars[0], pa, ta, pen)
+    assert ok and cost == g and ci == len(p) and cj == len(t), (p, t, pen)
+
+
+@settings(max_examples=60, deadline=None)
+@given(seq_pair(), penalties)
+def test_ring_equals_ref(pair, pen):
+    p, t = pair
+    ref = WFAligner(pen, backend="ref").align([p], [t])
+    ring = WFAligner(pen, backend="ring").align([p], [t])
+    assert ref.scores[0] == ring.scores[0], (p, t, pen)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(seq_pair(), min_size=1, max_size=9), penalties)
+def test_batched_lockstep_isolation(pairs, pen):
+    """Pairs in one batch must not affect each other's scores."""
+    ps = [p for p, _ in pairs]
+    ts = [t for _, t in pairs]
+    al = WFAligner(pen, backend="ring")
+    batch = al.align(ps, ts)
+    for i, (p, t) in enumerate(pairs):
+        g = gotoh_score(np.frombuffer(p.encode(), np.uint8),
+                        np.frombuffer(t.encode(), np.uint8), pen)
+        assert batch.scores[i] == g, (i, p, t, pen)
+
+
+@settings(max_examples=60, deadline=None)
+@given(seq_pair(), penalties)
+def test_gotoh_vectorized_equals_naive(pair, pen):
+    p, t = pair
+    pa = np.frombuffer(p.encode(), np.uint8)
+    ta = np.frombuffer(t.encode(), np.uint8)
+    assert gotoh_score(pa, ta, pen) == gotoh_score_vec(pa, ta, pen)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seq_pair())
+def test_symmetry_insertion_deletion(pair):
+    """Swapping pattern/text swaps I<->D but keeps the optimal cost
+    (penalties here are symmetric in the two gap types)."""
+    p, t = pair
+    al = WFAligner(backend="ring")
+    assert al.align([p], [t]).scores[0] == al.align([t], [p]).scores[0]
