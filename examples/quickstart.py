@@ -1,17 +1,36 @@
-"""Quickstart: align sequence pairs with the WFA core, get scores + CIGARs.
+"""Quickstart: the unified AlignmentEngine API.
+
+One object covers every alignment scenario:
+
+* ``AlignmentEngine(backend=...)`` picks an execution strategy from the
+  backend registry — ``"ref"`` (full history, CIGARs), ``"ring"``
+  (score-only throughput), ``"kernel"`` (Pallas TPU kernel), ``"shardmap"``
+  (per-shard termination on a mesh) — and plug-ins can
+  ``register_backend`` their own without touching core code.
+* Mixed-length batches are split into power-of-two length buckets, so short
+  pairs never pay the longest pair's padded band; compiled executables are
+  cached per bucket shape, so serving-time calls re-trace nothing.
+* With ``edit_frac`` (the paper's E), buffers are sized optimistically and
+  the rare over-budget pair is transparently re-run with exact worst-case
+  bounds — every score is real, the common case stays fast.
 
     PYTHONPATH=src python examples/quickstart.py
+
+(The old ``WFAligner`` / ``PIMBatchAligner`` names still work as thin
+wrappers over the engine.)
 """
 import numpy as np
 
-from repro.core import DEFAULT, Penalties, WFAligner
+from repro.core import DEFAULT, AlignmentEngine, Penalties, available_backends
 from repro.core.gotoh import gotoh_score
 
+print("registered backends:", available_backends())
+
 # -- 1. score + CIGAR for a handful of pairs ------------------------------
-aligner = WFAligner(DEFAULT, backend="ref", with_cigar=True)
+engine = AlignmentEngine(DEFAULT, backend="ref", with_cigar=True)
 patterns = ["ACGTTAGCCA", "GATTACA", "TTTTTTTT"]
 texts = ["ACGTCAGCCA", "GATTTACA", "TTTT"]
-res = aligner.align(patterns, texts)
+res = engine.align(patterns, texts)
 
 print("gap-affine penalties:", DEFAULT)
 for p, t, s, c in zip(patterns, texts, res.scores, res.cigar_strings()):
@@ -24,17 +43,23 @@ for p, t, s in zip(patterns, texts, res.scores):
     assert s == g, (p, t, s, g)
 print("all scores match the dense DP oracle")
 
-# -- 3. throughput mode: batch of 1000 pairs, score-only ring buffers ------
+# -- 3. throughput mode: mixed-length batch, bucketed + cached -------------
 rng = np.random.default_rng(0)
 bases = np.frombuffer(b"ACGT", np.uint8)
-refs = ["".join(map(chr, bases[rng.integers(0, 4, 100)])) for _ in range(1000)]
-mates = [r[:50] + ("A" if r[50] != "A" else "C") + r[51:] for r in refs]
+refs = ["".join(map(chr, bases[rng.integers(0, 4, int(L))]))
+        for L in rng.integers(64, 512, size=1000)]
+mates = [r[:10] + ("A" if r[10] != "A" else "C") + r[11:] for r in refs]
 
-fast = WFAligner(DEFAULT, backend="ring", edit_frac=0.04)
+fast = AlignmentEngine(DEFAULT, backend="ring", edit_frac=0.04)
 res = fast.align(refs, mates)
-print(f"batch of {len(refs)}: mean cost {res.scores.mean():.2f}, "
-      f"{res.n_steps} lock-step score iterations")
+print(f"batch of {len(refs)}: mean cost {res.scores.mean():.2f} across "
+      f"{res.stats.n_buckets} length buckets "
+      f"({res.stats.n_overflow} overflow -> {res.stats.n_recovered} recovered)")
+
+res2 = fast.align(refs, mates)   # serving-time call: all executables cached
+print(f"second call: {res2.stats.cache_hits} cache hits, "
+      f"{res2.stats.n_traces} retraces")
 
 # -- 4. edit distance is just another penalty setting ----------------------
-ed = WFAligner(Penalties(x=1, o=0, e=1), backend="ring")
+ed = AlignmentEngine(Penalties(x=1, o=0, e=1), backend="ring")
 print("edit('kitten','sitting') =", ed.align(["kitten"], ["sitting"]).scores[0])

@@ -3,6 +3,9 @@ PIM-style (scatter / align-without-communication / gather), adapted to TPU.
 """
 from repro.core.penalties import DEFAULT, Penalties, band_bound, problem_dims, score_bound  # noqa: F401
 from repro.core.wavefront import WFAResult, wfa_forward, wfa_scores  # noqa: F401
-from repro.core.aligner import AlignResult, WFAligner, encode, pack_batch, problem_bounds  # noqa: F401
+from repro.core.backends import available_backends, get_backend, register_backend  # noqa: F401
+from repro.core.engine import (AlignmentEngine, EngineResult, EngineStats,  # noqa: F401
+                               encode, pack_batch, problem_bounds)
+from repro.core.aligner import AlignResult, WFAligner  # noqa: F401
 from repro.core.pim import PIMBatchAligner, PIMStats, pair_sharding  # noqa: F401
 from repro.core.gotoh import gotoh_score, gotoh_score_vec, score_cigar  # noqa: F401

@@ -1,47 +1,33 @@
-"""Public alignment API: encoding, padding/batching, backend selection.
+"""Legacy alignment API — thin wrappers over ``core.engine``.
 
-``WFAligner`` is the user-facing object: it takes python sequences
-(str/bytes/int arrays), pads them into rectangular device batches, sizes the
-static WFA buffers from the configured divergence regime, and dispatches to a
-backend:
+.. deprecated::
+    ``WFAligner`` predates the unified :class:`~repro.core.engine.
+    AlignmentEngine` and is kept as a compatibility shim.  New code should
+    construct an ``AlignmentEngine`` directly: it adds the backend registry
+    (``core.backends``), length-bucketed batching, executable caching and
+    adaptive two-pass overflow recovery that this wrapper only proxies.
 
-* ``"ref"``    — full-history pure-jnp WFA (supports CIGAR traceback)
-* ``"ring"``   — rolling-window pure-jnp WFA (score-only throughput mode)
-* ``"kernel"`` — the Pallas TPU kernel (score-only; interpret=True on CPU)
+``WFAligner.align`` delegates to an engine instance (so old call sites get
+bucketing + caching for free); ``align_arrays`` remains the raw array-level
+dispatch through the backend registry for code that manages its own bounds
+(benchmarks, the PIM executor's compile warm-ups).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple, Union
+from typing import List, Optional, Sequence
 
 import numpy as np
 
 from repro.core import cigar as cigar_mod
 from repro.core import wavefront as wf
-from repro.core.penalties import DEFAULT, Penalties, band_bound, score_bound
+from repro.core.backends import get_backend
+from repro.core.engine import (AlignmentEngine, Seq, encode, pack_batch,
+                               problem_bounds)
+from repro.core.penalties import DEFAULT, Penalties
 
-Seq = Union[str, bytes, np.ndarray]
-
-
-def encode(seq: Seq) -> np.ndarray:
-    if isinstance(seq, str):
-        return np.frombuffer(seq.encode("ascii"), dtype=np.uint8).astype(np.int32)
-    if isinstance(seq, bytes):
-        return np.frombuffer(seq, dtype=np.uint8).astype(np.int32)
-    return np.asarray(seq, dtype=np.int32)
-
-
-def pack_batch(seqs: Sequence[Seq], pad_to: Optional[int] = None,
-               multiple: int = 1):
-    """-> (codes [B, L] int32, lens [B] int32). Padding value 0 (never read)."""
-    enc = [encode(s) for s in seqs]
-    lens = np.asarray([len(e) for e in enc], np.int32)
-    L = max(1, pad_to if pad_to is not None else int(lens.max(initial=1)))
-    L = ((L + multiple - 1) // multiple) * multiple
-    out = np.zeros((len(enc), L), np.int32)
-    for i, e in enumerate(enc):
-        out[i, : len(e)] = e
-    return out, lens
+__all__ = ["AlignResult", "WFAligner", "Seq", "encode", "pack_batch",
+           "problem_bounds"]
 
 
 @dataclasses.dataclass
@@ -57,76 +43,60 @@ class AlignResult:
         return [cigar_mod.cigar_string(c) for c in self.cigars]
 
 
-def problem_bounds(pen: Penalties, plens: np.ndarray, tlens: np.ndarray,
-                   edit_frac: Optional[float], s_max: Optional[int] = None,
-                   k_max: Optional[int] = None) -> Tuple[int, int]:
-    """Static (s_max, k_max) for a batch.
-
-    With ``edit_frac`` (the paper's E): score_bound over the batch max length.
-    Without it: the exact worst case (all-mismatch diagonal + one gap), which
-    guarantees every pair terminates with a real score.
-    """
-    max_len = int(max(plens.max(initial=1), tlens.max(initial=1)))
-    max_diff = int(np.abs(tlens - plens).max(initial=0))
-    if s_max is None:
-        if edit_frac is not None:
-            s_max = score_bound(pen, max_len, edit_frac, len_diff=max_diff)
-        else:
-            # exact per-pair worst case (all-mismatch diagonal + one gap),
-            # maxed over the batch so every pair is guaranteed to terminate
-            worst = (pen.x * np.minimum(plens, tlens)
-                     + np.where(plens != tlens,
-                                pen.o + pen.e * np.abs(tlens - plens), 0))
-            s_max = int(worst.max(initial=0)) + 1
-    if k_max is None:
-        k_max = min(band_bound(pen, s_max), max_len)
-    k_max = max(k_max, max_diff, 1)
-    return int(s_max), int(k_max)
-
-
 class WFAligner:
+    """Compatibility façade over :class:`AlignmentEngine` (see module doc)."""
+
     def __init__(self, pen: Penalties = DEFAULT, *, backend: str = "ring",
                  edit_frac: Optional[float] = None,
                  s_max: Optional[int] = None, k_max: Optional[int] = None,
                  with_cigar: bool = False):
-        assert backend in ("ref", "ring", "kernel"), backend
-        if with_cigar and backend != "ref":
-            raise ValueError("CIGAR traceback needs backend='ref' "
-                             "(full wavefront history)")
-        self.pen = pen
-        self.backend = backend
-        self.edit_frac = edit_frac
-        self._s_max = s_max
-        self._k_max = k_max
-        self.with_cigar = with_cigar
+        self._engine = AlignmentEngine(pen, backend=backend,
+                                       edit_frac=edit_frac, s_max=s_max,
+                                       k_max=k_max, with_cigar=with_cigar)
+
+    @property
+    def engine(self) -> AlignmentEngine:
+        return self._engine
+
+    # Config lives on the engine (single source of truth): align() and
+    # align_arrays() always see the same settings.
+    @property
+    def pen(self):
+        return self._engine.pen
+
+    @property
+    def backend(self):
+        return self._engine.backend
+
+    @property
+    def edit_frac(self):
+        return self._engine.edit_frac
+
+    @property
+    def with_cigar(self):
+        return self._engine.with_cigar
+
+    @property
+    def _s_max(self):
+        return self._engine._s_max
+
+    @property
+    def _k_max(self):
+        return self._engine._k_max
 
     # -- array-level entry point (jit-compatible batches) --------------------
     def align_arrays(self, pattern, text, plen, tlen, *, s_max: int,
                      k_max: int) -> wf.WFAResult:
-        if self.backend == "ref":
-            return wf.wfa_forward(pattern, text, plen, tlen, pen=self.pen,
-                                  s_max=s_max, k_max=k_max, keep_history=True)
-        if self.backend == "ring":
-            return wf.wfa_scores(pattern, text, plen, tlen, pen=self.pen,
-                                 s_max=s_max, k_max=k_max)
-        from repro.kernels.wfa import ops as kops
-        score = kops.wfa_align(pattern, text, plen, tlen, pen=self.pen,
-                               s_max=s_max, k_max=k_max)
-        return wf.WFAResult(score, None, None, None, np.int32(s_max))
+        spec = get_backend(self.backend)
+        return spec.fn(pattern, text, plen, tlen, pen=self.pen,
+                       s_max=s_max, k_max=k_max)
 
     # -- sequence-level entry point -------------------------------------------
     def align(self, patterns: Sequence[Seq], texts: Sequence[Seq]) -> AlignResult:
         assert len(patterns) == len(texts)
-        p, plen = pack_batch(patterns)
-        t, tlen = pack_batch(texts)
-        s_max, k_max = problem_bounds(self.pen, plen, tlen, self.edit_frac,
-                                      self._s_max, self._k_max)
-        res = self.align_arrays(p, t, plen, tlen, s_max=s_max, k_max=k_max)
-        cigars = None
-        if self.with_cigar:
-            cigars = cigar_mod.traceback_batch(res, self.pen, plen, tlen, k_max)
-        return AlignResult(np.asarray(res.score), cigars, int(res.n_steps),
-                           s_max, k_max)
+        res = self._engine.align(patterns, texts)
+        return AlignResult(res.scores, res.cigars, res.n_steps,
+                           res.s_max, res.k_max)
 
     def align_pair(self, pattern: Seq, text: Seq) -> AlignResult:
         return self.align([pattern], [text])

@@ -1,0 +1,120 @@
+"""Alignment backend registry.
+
+A *backend* is one way to evaluate a batch of WFA problems on device.  The
+engine (``core.engine``) is backend-agnostic: it plans buckets, sizes the
+static ``(s_max, k_max)`` buffers, caches executables and recovers overflow
+pairs, then hands each rectangular batch to whatever backend the user named.
+New strategies (bidirectional, banded, a new kernel) plug in with
+:func:`register_backend` and never touch the engine.
+
+Contract — a backend callable has the signature::
+
+    fn(pattern, text, plen, tlen, *, pen, s_max, k_max, **extra) -> WFAResult
+
+with ``pattern``/``text`` ``[B, L]`` int32 device/host arrays, ``plen``/
+``tlen`` ``[B]`` int32, and static ``pen``/``s_max``/``k_max``.  It must be
+jit-traceable (the engine compiles one executable per bucket shape around
+it).  Backends that keep the full wavefront history set ``supports_cigar``;
+backends that shard over a device mesh set ``needs_mesh`` and receive the
+engine's ``mesh`` as a keyword.
+
+Built-ins:
+
+* ``"ref"``      — full-history pure-jnp WFA (CIGAR traceback capable)
+* ``"ring"``     — rolling-window pure-jnp WFA (score-only throughput mode)
+* ``"kernel"``   — the Pallas TPU kernel (score-only; interpret=True on CPU)
+* ``"shardmap"`` — ring solver inside ``shard_map`` (per-shard termination,
+  zero collectives — the paper's "no inter-DPU communication")
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax.numpy as jnp
+
+from repro.core import wavefront as wf
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    name: str
+    fn: Callable[..., wf.WFAResult]
+    supports_cigar: bool = False
+    needs_mesh: bool = False
+    doc: str = ""
+
+
+_REGISTRY: Dict[str, BackendSpec] = {}
+
+
+def register_backend(name: str, fn: Optional[Callable] = None, *,
+                     supports_cigar: bool = False, needs_mesh: bool = False,
+                     doc: str = ""):
+    """Register an alignment backend (usable as a decorator).
+
+    Re-registering a name replaces the previous entry (useful for tests and
+    for swapping in tuned variants).
+    """
+    def _add(f):
+        _REGISTRY[name] = BackendSpec(name=name, fn=f,
+                                      supports_cigar=supports_cigar,
+                                      needs_mesh=needs_mesh,
+                                      doc=doc or (f.__doc__ or "").strip())
+        return f
+
+    if fn is not None:
+        return _add(fn)
+    return _add
+
+
+def unregister_backend(name: str) -> None:
+    _REGISTRY.pop(name, None)
+
+
+def get_backend(name: str) -> BackendSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown alignment backend {name!r}; "
+                       f"available: {available_backends()}") from None
+
+
+def available_backends() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# Built-in backends.
+
+
+@register_backend("ref", supports_cigar=True,
+                  doc="full-history pure-jnp WFA (CIGAR traceback)")
+def _ref_backend(pattern, text, plen, tlen, *, pen, s_max, k_max):
+    return wf.wfa_forward(pattern, text, plen, tlen, pen=pen,
+                          s_max=s_max, k_max=k_max, keep_history=True)
+
+
+@register_backend("ring",
+                  doc="rolling-window pure-jnp WFA (score-only)")
+def _ring_backend(pattern, text, plen, tlen, *, pen, s_max, k_max):
+    return wf.wfa_scores(pattern, text, plen, tlen, pen=pen,
+                         s_max=s_max, k_max=k_max)
+
+
+@register_backend("kernel",
+                  doc="Pallas TPU kernel (score-only; interpret on CPU)")
+def _kernel_backend(pattern, text, plen, tlen, *, pen, s_max, k_max):
+    from repro.kernels.wfa import ops as kops  # lazy: pallas import is heavy
+    score = kops.wfa_align(pattern, text, plen, tlen, pen=pen,
+                           s_max=s_max, k_max=k_max)
+    return wf.WFAResult(score, None, None, None, jnp.int32(s_max))
+
+
+@register_backend("shardmap", needs_mesh=True,
+                  doc="ring solver in shard_map: per-shard termination, "
+                      "zero collectives")
+def _shardmap_backend(pattern, text, plen, tlen, *, pen, s_max, k_max, mesh):
+    score = wf.wfa_scores_shardmap(pattern, text, plen, tlen, pen=pen,
+                                   s_max=s_max, k_max=k_max, mesh=mesh)
+    return wf.WFAResult(score, None, None, None, jnp.int32(s_max))

@@ -1,0 +1,501 @@
+"""`AlignmentEngine` — the unified alignment façade.
+
+The paper's throughput comes from keeping thousands of independent WFA
+problems saturating the hardware with minimal host<->device overhead.  This
+module owns every policy decision on that path, in one place:
+
+* **backend registry** (``core.backends``) — ``ref`` / ``ring`` / ``kernel``
+  / ``shardmap`` (and user plug-ins via ``register_backend``) are looked up
+  by name; the engine never hard-codes a dispatch chain.
+* **length-bucketed batching** — pairs are grouped by the power of two of
+  ``max(plen, tlen)``, so short reads stop paying the longest pair's padded
+  ``K`` band and score loop.  Each bucket gets its own static
+  ``(L, s_max, k_max)`` problem shape.
+* **executable caching** — compiled executables are cached per
+  ``(backend, penalties, batch-shape, bounds)``.  Bucket dims are quantized
+  (power-of-two lengths and pair counts, ``s_max`` rounded up) precisely so
+  that serving-time traffic keeps hitting the same few shapes: repeated
+  ``align()`` calls re-trace nothing.
+* **adaptive two-pass bounds** — pass 1 runs with the optimistic
+  ``edit_frac``-derived ``s_max`` (the paper's E-threshold regime); pairs
+  that come back unresolved (``score == -1``) are re-run with the exact
+  worst-case bound (the BIMSA "CPU recovery" analogue), so the common case
+  stays fast while every pair still terminates with a true score.
+
+The engine also owns the PIM phase accounting (scatter / kernel / gather
+bytes and seconds — Fig. 1's *Total vs Kernel* decomposition) that used to
+live in ``core.pim``.  ``WFAligner`` and ``PIMBatchAligner`` are thin
+wrappers kept for compatibility.
+
+Quickstart::
+
+    from repro.core.engine import AlignmentEngine
+
+    eng = AlignmentEngine(backend="ring", edit_frac=0.04)
+    res = eng.align(["ACGT...", ...], ["ACGA...", ...])
+    res.scores        # [B] exact gap-affine costs (Gotoh-identical)
+    res.stats         # buckets, cache hits, overflow recoveries, PIM phases
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import cigar as cigar_mod
+from repro.core.backends import BackendSpec, get_backend
+from repro.core.penalties import DEFAULT, Penalties, band_bound, score_bound
+
+Seq = Union[str, bytes, np.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Encoding / packing (canonical home; ``core.aligner`` re-exports).
+
+
+def encode(seq: Seq) -> np.ndarray:
+    if isinstance(seq, str):
+        return np.frombuffer(seq.encode("ascii"), dtype=np.uint8).astype(np.int32)
+    if isinstance(seq, bytes):
+        return np.frombuffer(seq, dtype=np.uint8).astype(np.int32)
+    return np.asarray(seq, dtype=np.int32)
+
+
+def pack_batch(seqs: Sequence[Seq], pad_to: Optional[int] = None,
+               multiple: int = 1):
+    """-> (codes [B, L] int32, lens [B] int32). Padding value 0 (never read)."""
+    enc = [encode(s) for s in seqs]
+    lens = np.asarray([len(e) for e in enc], np.int32)
+    L = max(1, pad_to if pad_to is not None else int(lens.max(initial=1)))
+    L = ((L + multiple - 1) // multiple) * multiple
+    out = np.zeros((len(enc), L), np.int32)
+    for i, e in enumerate(enc):
+        out[i, : len(e)] = e
+    return out, lens
+
+
+def problem_bounds(pen: Penalties, plens: np.ndarray, tlens: np.ndarray,
+                   edit_frac: Optional[float], s_max: Optional[int] = None,
+                   k_max: Optional[int] = None) -> Tuple[int, int]:
+    """Static (s_max, k_max) for a batch.
+
+    With ``edit_frac`` (the paper's E): score_bound over the batch max length.
+    Without it: the exact worst case (all-mismatch diagonal + one gap), which
+    guarantees every pair terminates with a real score.
+    """
+    max_len = int(max(plens.max(initial=1), tlens.max(initial=1)))
+    max_diff = int(np.abs(tlens - plens).max(initial=0))
+    if s_max is None:
+        if edit_frac is not None:
+            s_max = score_bound(pen, max_len, edit_frac, len_diff=max_diff)
+        else:
+            s_max = _exact_worst_score(pen, plens, tlens)
+    if k_max is None:
+        k_max = min(band_bound(pen, s_max), max_len)
+    k_max = max(k_max, max_diff, 1)
+    return int(s_max), int(k_max)
+
+
+def _exact_worst_score(pen: Penalties, plens, tlens) -> int:
+    """Exact per-pair worst case (all-mismatch diagonal + one gap), maxed
+    over the batch — the bound under which every pair terminates."""
+    worst = (pen.x * np.minimum(plens, tlens)
+             + np.where(plens != tlens,
+                        pen.o + pen.e * np.abs(tlens - plens), 0))
+    return int(worst.max(initial=0)) + 1
+
+
+def pair_sharding(mesh: Optional[Mesh]) -> Optional[NamedSharding]:
+    """Pair axis over ALL mesh axes — every chip is a 'DPU'."""
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, P(tuple(mesh.axis_names)))
+
+
+def _next_pow2(n: int) -> int:
+    n = max(1, int(n))
+    return 1 << (n - 1).bit_length()
+
+
+def _round_up(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m
+
+
+def _quantize_rows(n: int, multiple: int) -> int:
+    """Smallest 'round' pair count >= n — a power of two or 1.5x one
+    (bounds padding waste at 25% while keeping the set of distinct batch
+    shapes, and so the executable cache, small) — then rounded up to
+    ``multiple`` (the worker count)."""
+    p = _next_pow2(n)
+    if p > 1 and 3 * p // 4 >= n:
+        p = 3 * p // 4
+    return _round_up(p, multiple)
+
+
+def _fit_width(arr: np.ndarray, width: int) -> np.ndarray:
+    """Pad or trim the column axis to ``width`` (padding never read)."""
+    if arr.shape[1] == width:
+        return arr
+    if arr.shape[1] > width:
+        return arr[:, :width]
+    out = np.zeros((arr.shape[0], width), arr.dtype)
+    out[:, : arr.shape[1]] = arr
+    return out
+
+
+def _pad_rows(arr: np.ndarray, to: int) -> np.ndarray:
+    if arr.shape[0] == to:
+        return arr
+    pad = np.zeros((to - arr.shape[0],) + arr.shape[1:], arr.dtype)
+    return np.concatenate([arr, pad], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Stats / results.
+
+
+@dataclasses.dataclass
+class PIMStats:
+    """Phase accounting of the paper's host<->device pipeline (Fig. 1)."""
+    n_pairs: int
+    n_workers: int
+    bytes_in: int
+    bytes_out: int
+    t_scatter: float
+    t_kernel: float
+    t_gather: float
+
+    @property
+    def t_total(self) -> float:
+        return self.t_scatter + self.t_kernel + self.t_gather
+
+    def throughput_total(self) -> float:
+        return self.n_pairs / max(self.t_total, 1e-12)
+
+    def throughput_kernel(self) -> float:
+        return self.n_pairs / max(self.t_kernel, 1e-12)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketInfo:
+    """One executed problem shape: quantized length + static WFA bounds."""
+    lmax: int
+    s_max: int
+    k_max: int
+    n_pairs: int
+    recovery: bool = False     # True for adaptive second-pass buckets
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Telemetry for one ``align`` call."""
+    n_pairs: int = 0
+    n_workers: int = 1
+    buckets: List[BucketInfo] = dataclasses.field(default_factory=list)
+    n_overflow: int = 0        # pairs unresolved after pass 1
+    n_recovered: int = 0       # of those, resolved by the exact-bound pass
+    cache_hits: int = 0
+    cache_misses: int = 0
+    n_traces: int = 0          # fresh XLA traces triggered by this call
+    bytes_in: int = 0
+    bytes_out: int = 0
+    t_scatter: float = 0.0
+    t_kernel: float = 0.0
+    t_gather: float = 0.0
+
+    @property
+    def n_buckets(self) -> int:
+        return len([b for b in self.buckets if not b.recovery])
+
+    @property
+    def pim(self) -> PIMStats:
+        return PIMStats(n_pairs=self.n_pairs, n_workers=self.n_workers,
+                        bytes_in=self.bytes_in, bytes_out=self.bytes_out,
+                        t_scatter=self.t_scatter, t_kernel=self.t_kernel,
+                        t_gather=self.t_gather)
+
+
+@dataclasses.dataclass
+class EngineResult:
+    scores: np.ndarray                      # [B] int32; -1 = exceeded s_max
+    cigars: Optional[List[np.ndarray]]      # per-pair op arrays, or None
+    n_steps: int                            # score-loop trips (telemetry)
+    s_max: int                              # largest bound used
+    k_max: int
+    stats: EngineStats = dataclasses.field(default_factory=EngineStats)
+
+    def cigar_strings(self) -> List[str]:
+        assert self.cigars is not None, "align with with_cigar=True"
+        return [cigar_mod.cigar_string(c) for c in self.cigars]
+
+
+class _Executable:
+    """One compiled backend entry point for a fixed problem shape.
+
+    Tracing happens at most once per (shape, bounds) key; ``n_traces``
+    counts actual XLA traces so callers can assert cache effectiveness.
+    """
+
+    def __init__(self, spec: BackendSpec, pen: Penalties, s_max: int,
+                 k_max: int, mesh: Optional[Mesh]):
+        self.s_max = s_max
+        self.k_max = k_max
+        self._traces = [0]
+        traces = self._traces
+        backend_fn = spec.fn
+        extra = {"mesh": mesh} if spec.needs_mesh else {}
+
+        def _run(pattern, text, plen, tlen):
+            traces[0] += 1            # trace-time side effect only
+            return backend_fn(pattern, text, plen, tlen, pen=pen,
+                              s_max=s_max, k_max=k_max, **extra)
+
+        self.fn = jax.jit(_run)
+
+    @property
+    def n_traces(self) -> int:
+        return self._traces[0]
+
+
+class AlignmentEngine:
+    """Bucketed, cached, overflow-recovering batch aligner.
+
+    Parameters
+    ----------
+    pen : gap-affine penalties (match 0 / mismatch x / gap o + L*e).
+    backend : registry name (``available_backends()``); plug-ins welcome.
+    edit_frac : the paper's E — optimistic score budget for pass 1.  ``None``
+        sizes buffers for the exact worst case up front (single pass).
+    s_max / k_max : explicit static bounds; setting ``s_max`` pins the score
+        cap (no adaptive recovery — unresolved pairs stay ``-1``).
+    with_cigar : keep wavefront history and emit CIGARs (needs a backend
+        with ``supports_cigar``, i.e. ``"ref"``).
+    mesh : device mesh for scatter/gather (and for ``needs_mesh`` backends).
+    chunk_pairs : max pairs per device wave (the MRAM-capacity analogue).
+    bucket_by_length : sort pairs into power-of-two length buckets.
+    min_bucket_len : floor for bucket lengths (avoids tiny-shape churn).
+    adaptive : enable the exact-bound recovery pass for overflow pairs.
+    """
+
+    def __init__(self, pen: Penalties = DEFAULT, *, backend: str = "ring",
+                 edit_frac: Optional[float] = None,
+                 s_max: Optional[int] = None, k_max: Optional[int] = None,
+                 with_cigar: bool = False, mesh: Optional[Mesh] = None,
+                 chunk_pairs: int = 1 << 16, bucket_by_length: bool = True,
+                 min_bucket_len: int = 16, adaptive: bool = True):
+        spec = get_backend(backend)
+        if with_cigar and not spec.supports_cigar:
+            raise ValueError(
+                f"CIGAR traceback needs a full-history backend "
+                f"(e.g. 'ref'); {backend!r} is score-only")
+        if spec.needs_mesh and mesh is None:
+            raise ValueError(f"backend {backend!r} needs a device mesh")
+        self.pen = pen
+        self.backend = backend
+        self.edit_frac = edit_frac
+        self._s_max = s_max
+        self._k_max = k_max
+        self.with_cigar = with_cigar
+        self.mesh = mesh
+        self.chunk_pairs = int(chunk_pairs)
+        self.bucket_by_length = bucket_by_length
+        self.min_bucket_len = int(min_bucket_len)
+        self.adaptive = adaptive
+        self.n_workers = (int(np.prod(list(mesh.shape.values())))
+                          if mesh is not None else jax.device_count())
+        self._cache: Dict[tuple, _Executable] = {}
+
+    # -- cache introspection -------------------------------------------------
+
+    @property
+    def cache_size(self) -> int:
+        return len(self._cache)
+
+    def cache_traces(self) -> int:
+        """Total XLA traces across all cached executables."""
+        return sum(e.n_traces for e in self._cache.values())
+
+    # -- bounds --------------------------------------------------------------
+
+    def _bounds_for_bucket(self, lmax: int, plen_b: np.ndarray,
+                           tlen_b: np.ndarray, exact: bool) -> Tuple[int, int]:
+        """Static (s_max, k_max) for one bucket.
+
+        Pass-1 bounds depend only on (pen, lmax, edit_frac) — never on the
+        data — so identical buckets across calls share one executable.  The
+        exact path quantizes s_max up to a multiple of 32 for the same
+        reason (the score loop exits early regardless).
+        """
+        pen = self.pen
+        if self._s_max is not None:
+            s = int(self._s_max)
+            max_diff = int(np.abs(tlen_b - plen_b).max(initial=0))
+            k = self._k_max if self._k_max is not None else \
+                min(band_bound(pen, s), lmax)
+            return s, max(int(k), max_diff, 1)
+        if not exact and self.edit_frac is not None:
+            # regime bound: at most ceil(E*L) edits, so the length diff is
+            # at most that many bases too — fully data-independent (no
+            # max_diff bump: the band provably covers any within-budget
+            # pair, and over-budget pairs go to the recovery pass anyway)
+            n_err = int(math.ceil(self.edit_frac * lmax))
+            s = score_bound(pen, lmax, self.edit_frac, len_diff=n_err)
+            k = self._k_max if self._k_max is not None else \
+                min(band_bound(pen, s), lmax)
+            return int(s), max(int(k), 1)
+        s = _round_up(_exact_worst_score(pen, plen_b, tlen_b), 32)
+        max_diff = int(np.abs(tlen_b - plen_b).max(initial=0))
+        k = self._k_max if self._k_max is not None else \
+            min(band_bound(pen, s), lmax)
+        return int(s), max(int(k), max_diff, 1)
+
+    # -- bucket planning -----------------------------------------------------
+
+    def _plan_buckets(self, plen: np.ndarray, tlen: np.ndarray,
+                      idx: np.ndarray) -> List[Tuple[int, np.ndarray]]:
+        """-> [(bucket_len, original-row indices)] sorted by length."""
+        lmax = np.maximum(plen[idx], tlen[idx])
+        if not self.bucket_by_length:
+            width = _next_pow2(max(int(lmax.max(initial=1)),
+                                   self.min_bucket_len))
+            return [(width, idx)]
+        widths = np.maximum(lmax, self.min_bucket_len)
+        widths = 2 ** np.ceil(np.log2(np.maximum(widths, 1))).astype(np.int64)
+        out = []
+        for w in np.unique(widths):
+            out.append((int(w), idx[widths == w]))
+        return out
+
+    # -- execution -----------------------------------------------------------
+
+    def _device_put(self, *arrays):
+        sh = pair_sharding(self.mesh)
+        if sh is not None:
+            return tuple(jax.device_put(a, sh) for a in arrays)
+        return tuple(jnp.asarray(a) for a in arrays)
+
+    def _run_rect(self, pc, tc, plc, tlc, s_max: int, k_max: int,
+                  stats: EngineStats):
+        """Run one rectangular padded chunk through the cached executable."""
+        spec = get_backend(self.backend)
+        # spec.fn in the key: re-registering a backend name must not serve
+        # stale executables compiled against the old implementation
+        key = (spec.name, spec.fn, self.pen, pc.shape, tc.shape, s_max, k_max)
+        exe = self._cache.get(key)
+        if exe is None:
+            exe = _Executable(spec, self.pen, s_max, k_max, self.mesh)
+            self._cache[key] = exe
+            stats.cache_misses += 1
+        else:
+            stats.cache_hits += 1
+        stats.bytes_in += pc.nbytes + tc.nbytes + plc.nbytes + tlc.nbytes
+
+        pre = exe.n_traces
+        t0 = time.perf_counter()
+        dp, dt_, dpl, dtl = self._device_put(pc, tc, plc, tlc)
+        jax.block_until_ready((dp, dt_, dpl, dtl))
+        t1 = time.perf_counter()
+        res = exe.fn(dp, dt_, dpl, dtl)
+        res.score.block_until_ready()
+        t2 = time.perf_counter()
+        scores = np.asarray(res.score)
+        t3 = time.perf_counter()
+
+        stats.n_traces += exe.n_traces - pre
+        stats.bytes_out += scores.nbytes
+        stats.t_scatter += t1 - t0
+        stats.t_kernel += t2 - t1
+        stats.t_gather += t3 - t2
+        return res, scores
+
+    def _run_pass(self, p, t, plen, tlen, idx: np.ndarray, exact: bool,
+                  scores: np.ndarray, cigars: Optional[dict],
+                  stats: EngineStats, recovery: bool = False
+                  ) -> Tuple[int, int, int]:
+        """Align the pairs in ``idx``; scatter results into ``scores``.
+
+        Returns (total score-loop steps, max s_max, max k_max) over buckets.
+        """
+        steps = s_hi = k_hi = 0
+        for width, bidx in self._plan_buckets(plen, tlen, idx):
+            s_max, k_max = self._bounds_for_bucket(
+                width, plen[bidx], tlen[bidx], exact)
+            s_hi, k_hi = max(s_hi, s_max), max(k_hi, k_max)
+            stats.buckets.append(BucketInfo(width, s_max, k_max,
+                                            len(bidx), recovery=recovery))
+            for lo in range(0, len(bidx), self.chunk_pairs):
+                hi = min(len(bidx), lo + self.chunk_pairs)
+                rows = bidx[lo:hi]     # host copies stay chunk-sized
+                # quantized for cache reuse, but never above the user's
+                # per-wave memory cap (chunk_pairs is the MRAM analogue)
+                nb = min(_quantize_rows(hi - lo, self.n_workers),
+                         _round_up(self.chunk_pairs, self.n_workers))
+                pc = _pad_rows(_fit_width(p[rows], width), nb)
+                tc = _pad_rows(_fit_width(t[rows], width), nb)
+                plc, tlc = (_pad_rows(plen[rows], nb),
+                            _pad_rows(tlen[rows], nb))
+                res, out = self._run_rect(pc, tc, plc, tlc, s_max, k_max,
+                                          stats)
+                scores[bidx[lo:hi]] = out[: hi - lo]
+                steps += int(res.n_steps)
+                if cigars is not None:
+                    t0 = time.perf_counter()
+                    ops = cigar_mod.traceback_batch(res, self.pen, plc, tlc,
+                                                    k_max)
+                    stats.t_gather += time.perf_counter() - t0
+                    for j, orig in enumerate(bidx[lo:hi]):
+                        cigars[int(orig)] = ops[j]
+        return steps, s_hi, k_hi
+
+    # -- public entry points -------------------------------------------------
+
+    def align(self, patterns: Sequence[Seq],
+              texts: Sequence[Seq]) -> EngineResult:
+        """Align python sequences (str/bytes/int arrays), pairwise."""
+        assert len(patterns) == len(texts)
+        p, plen = pack_batch(patterns)
+        t, tlen = pack_batch(texts)
+        return self.align_packed(p, plen, t, tlen)
+
+    def align_packed(self, p: np.ndarray, plen: np.ndarray, t: np.ndarray,
+                     tlen: np.ndarray) -> EngineResult:
+        """Align pre-packed rectangular batches ([B, L] codes + [B] lens)."""
+        n = p.shape[0]
+        plen = np.asarray(plen, np.int32)
+        tlen = np.asarray(tlen, np.int32)
+        stats = EngineStats(n_pairs=n, n_workers=self.n_workers)
+        scores = np.full((n,), -1, np.int32)
+        cigars: Optional[dict] = {} if self.with_cigar else None
+        if n == 0:
+            return EngineResult(scores, [] if self.with_cigar else None,
+                                0, 0, 0, stats)
+
+        optimistic = self.edit_frac is not None and self._s_max is None
+        steps, s_hi, k_hi = self._run_pass(
+            p, t, plen, tlen, np.arange(n), not optimistic, scores, cigars,
+            stats)
+
+        if optimistic:
+            overflow = np.nonzero(scores < 0)[0]
+            stats.n_overflow = len(overflow)
+            if len(overflow) and self.adaptive:
+                st2, s2, k2 = self._run_pass(p, t, plen, tlen, overflow,
+                                             True, scores, cigars, stats,
+                                             recovery=True)
+                steps += st2
+                s_hi, k_hi = max(s_hi, s2), max(k_hi, k2)
+                stats.n_recovered = int((scores[overflow] >= 0).sum())
+
+        cig_list = None
+        if cigars is not None:
+            cig_list = [cigars[i] for i in range(n)]
+        return EngineResult(scores, cig_list, steps, s_hi, k_hi, stats)
+
+    def align_pair(self, pattern: Seq, text: Seq) -> EngineResult:
+        return self.align([pattern], [text])

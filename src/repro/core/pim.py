@@ -1,71 +1,38 @@
-"""PIM-style distributed batch executor — the paper's host<->device pipeline.
+"""PIM-style distributed batch executor — compatibility shim.
 
-Paper (UPMEM): one CPU thread scatters 5M read pairs across 2560 DPU MRAMs
-with parallel transfers; DPUs align independently (no inter-DPU comm); the
-CPU gathers results back.  Fig. 1 reports both *Total* (with transfers) and
-*Kernel* (alignment only).
+.. deprecated::
+    The scatter -> align -> gather pipeline, wave chunking, and Fig. 1 phase
+    accounting now live in :class:`repro.core.engine.AlignmentEngine`, which
+    adds length-bucketed batching, executable caching and adaptive overflow
+    recovery on the same path.  ``PIMBatchAligner`` wraps an engine and
+    returns the familiar ``(scores, PIMStats)`` tuple.
 
-TPU mapping: the pair batch is device_put with a NamedSharding that spreads
-the pair axis across **every** mesh axis (pure data parallelism — the "no
-inter-DPU communication" property becomes "the lowered HLO contains no
-collectives", which the dry-run asserts).  The executor times and accounts
-the three phases exactly like the paper: scatter bytes in, kernel, gather
-bytes out.
+Paper mapping (unchanged): one CPU thread scatters read pairs across the
+device mesh with the pair axis spread over **every** mesh axis (pure data
+parallelism — the "no inter-DPU communication" property becomes "the lowered
+HLO contains no collectives", which the dry-run asserts); devices align
+independently; the host gathers results.  *Total* vs *Kernel* throughput is
+reported exactly like Fig. 1.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
 from typing import Optional, Sequence
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.core.aligner import WFAligner, pack_batch, problem_bounds
+# Canonical homes moved to core.engine; re-exported for compatibility.
+from repro.core.aligner import WFAligner, pack_batch
+from repro.core.engine import AlignmentEngine, PIMStats, pair_sharding  # noqa: F401
 
-
-@dataclasses.dataclass
-class PIMStats:
-    n_pairs: int
-    n_workers: int
-    bytes_in: int
-    bytes_out: int
-    t_scatter: float
-    t_kernel: float
-    t_gather: float
-
-    @property
-    def t_total(self) -> float:
-        return self.t_scatter + self.t_kernel + self.t_gather
-
-    def throughput_total(self) -> float:
-        return self.n_pairs / max(self.t_total, 1e-12)
-
-    def throughput_kernel(self) -> float:
-        return self.n_pairs / max(self.t_kernel, 1e-12)
-
-
-def pair_sharding(mesh: Optional[Mesh]) -> Optional[NamedSharding]:
-    """Pair axis over ALL mesh axes — every chip is a 'DPU'."""
-    if mesh is None:
-        return None
-    return NamedSharding(mesh, P(tuple(mesh.axis_names)))
-
-
-def _pad_pairs(arr: np.ndarray, to: int) -> np.ndarray:
-    if arr.shape[0] == to:
-        return arr
-    pad = np.zeros((to - arr.shape[0],) + arr.shape[1:], arr.dtype)
-    return np.concatenate([arr, pad], axis=0)
+__all__ = ["PIMBatchAligner", "PIMStats", "pair_sharding"]
 
 
 class PIMBatchAligner:
-    """Scatter -> align -> gather over a device mesh.
+    """Scatter -> align -> gather over a device mesh (engine-backed).
 
-    ``chunk_pairs`` bounds device memory per wave (the MRAM-capacity analogue:
-    a DPU holds only so many pairs at once); large batches stream in waves.
+    ``chunk_pairs`` bounds device memory per wave (the MRAM-capacity
+    analogue: a DPU holds only so many pairs at once); large batches stream
+    in waves.
     """
 
     def __init__(self, aligner: WFAligner, mesh: Optional[Mesh] = None,
@@ -73,64 +40,31 @@ class PIMBatchAligner:
         self.aligner = aligner
         self.mesh = mesh
         self.chunk_pairs = chunk_pairs
-        self.n_workers = (int(np.prod(list(mesh.shape.values())))
-                          if mesh is not None else jax.device_count())
-
-    def _align_shard(self, p, t, plen, tlen, s_max, k_max):
-        sh = pair_sharding(self.mesh)
-        if sh is not None:
-            p, t, plen, tlen = (jax.device_put(x, sh)
-                                for x in (p, t, plen, tlen))
+        if mesh is None:
+            # reuse the aligner's engine (and its warm executable cache);
+            # this executor's per-wave cap is applied only while running
+            self._engine = aligner.engine
         else:
-            p, t, plen, tlen = map(jnp.asarray, (p, t, plen, tlen))
-        return (p, t, plen, tlen)
+            self._engine = AlignmentEngine(
+                aligner.pen, backend=aligner.backend,
+                edit_frac=aligner.edit_frac, s_max=aligner._s_max,
+                k_max=aligner._k_max, mesh=mesh, chunk_pairs=chunk_pairs)
+        self.n_workers = self._engine.n_workers
+
+    @property
+    def engine(self) -> AlignmentEngine:
+        return self._engine
 
     def run(self, patterns: Sequence, texts: Sequence):
         p, plen = pack_batch(patterns)
         t, tlen = pack_batch(texts)
         return self.run_arrays(p, plen, t, tlen)
 
-    def run_arrays(self, p: np.ndarray, plen: np.ndarray, t: np.ndarray,
-                   tlen: np.ndarray) -> tuple[np.ndarray, PIMStats]:
-        n = p.shape[0]
-        s_max, k_max = problem_bounds(self.aligner.pen, plen, tlen,
-                                      self.aligner.edit_frac,
-                                      self.aligner._s_max,
-                                      self.aligner._k_max)
-        mult = self.n_workers
-        scores = np.empty((n,), np.int32)
-        bytes_in = bytes_out = 0
-        t_scatter = t_kernel = t_gather = 0.0
-
-        for lo in range(0, n, self.chunk_pairs):
-            hi = min(n, lo + self.chunk_pairs)
-            nb = ((hi - lo + mult - 1) // mult) * mult
-            pc = _pad_pairs(p[lo:hi], nb)
-            tc = _pad_pairs(t[lo:hi], nb)
-            plc = _pad_pairs(plen[lo:hi], nb)
-            tlc = _pad_pairs(tlen[lo:hi], nb)
-            # ensure padded pairs terminate instantly (empty vs empty)
-            bytes_in += pc.nbytes + tc.nbytes + plc.nbytes + tlc.nbytes
-
-            t0 = time.perf_counter()
-            dp, dt_, dpl, dtl = self._align_shard(pc, tc, plc, tlc, s_max, k_max)
-            jax.block_until_ready((dp, dt_, dpl, dtl))
-            t1 = time.perf_counter()
-            res = self.aligner.align_arrays(dp, dt_, dpl, dtl,
-                                            s_max=s_max, k_max=k_max)
-            jax.block_until_ready(res.score)
-            t2 = time.perf_counter()
-            out = np.asarray(res.score)
-            t3 = time.perf_counter()
-
-            scores[lo:hi] = out[: hi - lo]
-            bytes_out += out.nbytes
-            t_scatter += t1 - t0
-            t_kernel += t2 - t1
-            t_gather += t3 - t2
-
-        stats = PIMStats(n_pairs=n, n_workers=self.n_workers,
-                         bytes_in=bytes_in, bytes_out=bytes_out,
-                         t_scatter=t_scatter, t_kernel=t_kernel,
-                         t_gather=t_gather)
-        return scores, stats
+    def run_arrays(self, p, plen, t, tlen):
+        prev = self._engine.chunk_pairs
+        self._engine.chunk_pairs = int(self.chunk_pairs)
+        try:
+            res = self._engine.align_packed(p, plen, t, tlen)
+        finally:
+            self._engine.chunk_pairs = prev
+        return res.scores, res.stats.pim

@@ -283,6 +283,12 @@ def wfa_scores_shardmap(pattern, text, plen, tlen, *, pen: Penalties,
         return wfa_scores(p, t, pl, tl, pen=pen, s_max=s_max,
                           k_max=k_max).score
 
-    fn = shard_map(local, mesh=mesh,
-                   in_specs=(spec2, spec2, spec1, spec1), out_specs=spec1)
+    kwargs = dict(mesh=mesh, in_specs=(spec2, spec2, spec1, spec1),
+                  out_specs=spec1)
+    try:
+        # older jax has no replication rule for while_loop; the per-shard
+        # score loop is replication-safe by construction, so opt out
+        fn = shard_map(local, check_rep=False, **kwargs)
+    except TypeError:  # newer jax dropped the check_rep kwarg
+        fn = shard_map(local, **kwargs)
     return fn(pattern, text, plen, tlen)

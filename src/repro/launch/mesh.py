@@ -11,20 +11,18 @@ from typing import Optional, Tuple
 import jax
 from jax.sharding import Mesh
 
-
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+from repro.distributed.compat import make_mesh as _compat_make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(shape)))
+    return _compat_make_mesh(shape, axes)
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(shape)))
+    return _compat_make_mesh(shape, axes)
 
 
 def make_host_mesh(model_parallel: Optional[int] = None) -> Mesh:
@@ -32,7 +30,7 @@ def make_host_mesh(model_parallel: Optional[int] = None) -> Mesh:
     n = jax.device_count()
     mp = model_parallel or 1
     assert n % mp == 0, (n, mp)
-    return jax.make_mesh((n // mp, mp), ("data", "model"), axis_types=_auto(2))
+    return _compat_make_mesh((n // mp, mp), ("data", "model"))
 
 
 def mesh_devices(mesh: Mesh) -> int:

@@ -6,6 +6,16 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import numpy as np
 import pytest
 
+# Modules whose tests form the <60s pre-commit smoke tier (run with
+# ``-m quick``); anything marked ``slow`` is excluded even within these.
+QUICK_MODULES = {
+    "test_wfa_core",
+    "test_engine",
+    "test_wfa_property",
+    "test_analysis",
+    "test_fault_dist",
+}
+
 
 @pytest.fixture
 def rng():
@@ -14,3 +24,12 @@ def rng():
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running end-to-end drills")
+    config.addinivalue_line(
+        "markers", "quick: <60s smoke subset (pre-commit tier; -m quick)")
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        if (item.module.__name__ in QUICK_MODULES
+                and "slow" not in item.keywords):
+            item.add_marker(pytest.mark.quick)

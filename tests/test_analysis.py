@@ -6,6 +6,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.analysis.hlo import collective_bytes, hlo_op_histogram
+from repro.distributed.compat import make_mesh as compat_make_mesh
 from repro.analysis.roofline import attn_s2_traffic, fmt_seconds, terms
 from repro.distributed.sharding import ann, split_annotations, zero_shardings
 
@@ -73,8 +74,7 @@ def test_fmt_seconds():
 
 def test_zero_shardings_sharding():
     n = jax.device_count()
-    mesh = jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((n, 1), ("data", "model"))
     tree = {"big": ann(jnp.zeros((4 * n, 8 * n)), None, "ff"),
             "small": ann(jnp.zeros((4,)), None)}
     params, axes = split_annotations(tree)

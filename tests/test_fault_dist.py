@@ -7,6 +7,7 @@ import pytest
 
 from repro.data.reads import ReadPairSpec, generate_pairs, generate_shard
 from repro.data.tokens import TokenStreamSpec, batch_for_step
+from repro.distributed.compat import make_mesh as compat_make_mesh
 from repro.distributed.fault import (HeartbeatRegistry, StragglerMonitor,
                                      plan_elastic_mesh)
 from repro.distributed.sharding import (constrain, sharding_for, spec_entry,
@@ -67,8 +68,7 @@ def test_elastic_mesh_plans():
 
 def _mesh2():
     n = jax.device_count()
-    return jax.make_mesh((1, n), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_make_mesh((1, n), ("data", "model"))
 
 
 def test_spec_entry_drops_nondividing_axes():

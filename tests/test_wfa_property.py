@@ -3,7 +3,10 @@ Gotoh gap-affine DP on every input.  That equality (plus CIGAR re-scoring)
 is the paper's correctness contract, fuzzed here over sequences, lengths,
 alphabets and penalty settings."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.aligner import WFAligner
 from repro.core.gotoh import gotoh_score, gotoh_score_vec, score_cigar
