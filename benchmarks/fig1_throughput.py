@@ -23,9 +23,11 @@ import time
 
 import numpy as np
 
+import jax
+
 from benchmarks.common import Row, time_fn
 from repro.configs import wfa_paper
-from repro.core.aligner import WFAligner
+from repro.core.backends import get_backend
 from repro.core.engine import AlignmentEngine
 from repro.core.gotoh import gotoh_score_vec
 from repro.data.reads import ReadPairSpec, generate_pairs
@@ -51,16 +53,17 @@ def run(pairs: int = 8192, read_len: int = 100) -> list[Row]:
         # --- WFA one pair at a time (1-thread CPU role) -------------------
         # fixed-width padded rows so the jit cache is hit (recompiling per
         # read length would not be a fair single-pair cost)
-        al1 = WFAligner(wfa_paper.pen, backend="ring", edit_frac=ef)
-        from repro.core.aligner import problem_bounds
+        from repro.core.engine import problem_bounds
         s_max, k_max = problem_bounds(wfa_paper.pen, plen, tlen, ef)
+        ring = get_backend("ring").fn
+        one_fn = jax.jit(lambda p, t, pl, tl: ring(
+            p, t, pl, tl, pen=wfa_paper.pen, s_max=s_max, k_max=k_max))
         n_one = min(32, pairs)
-        al1.align_arrays(P[:1], T[:1], plen[:1], tlen[:1],
-                         s_max=s_max, k_max=k_max)  # compile
+        one_fn(P[:1], T[:1], plen[:1], tlen[:1])  # compile
         t0 = time.perf_counter()
         for i in range(n_one):
-            al1.align_arrays(P[i:i+1], T[i:i+1], plen[i:i+1], tlen[i:i+1],
-                             s_max=s_max, k_max=k_max).score.block_until_ready()
+            one_fn(P[i:i+1], T[i:i+1], plen[i:i+1],
+                   tlen[i:i+1]).score.block_until_ready()
         one_per_pair = (time.perf_counter() - t0) / n_one
         rows.append((f"fig1/E{ef:.0%}/wfa-host-1pair",
                      one_per_pair * 1e6,

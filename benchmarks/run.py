@@ -1,14 +1,51 @@
 """Benchmark driver: one module per paper table/figure + substrate benches.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only fig1,scaling,...]
-Prints ``name,us_per_call,derived`` CSV (one row per measurement)."""
+Prints ``name,us_per_call,derived`` CSV (one row per measurement).
+``--json [PATH]`` additionally writes a machine-readable snapshot (default
+``results/perf/BENCH_<utc-timestamp>.json``) so per-commit runs accumulate
+a perf trajectory."""
 from __future__ import annotations
 
 import argparse
+import datetime
+import json
+import os
+import platform
+import subprocess
 import sys
 import traceback
 
 from benchmarks.common import emit
+
+
+def _write_json(path: str, rows, argv, failed) -> str:
+    if path == "auto":
+        stamp = datetime.datetime.now(datetime.timezone.utc).strftime(
+            "%Y%m%dT%H%M%SZ")
+        path = os.path.join("results", "perf", f"BENCH_{stamp}.json")
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    try:
+        commit = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                                capture_output=True, text=True,
+                                timeout=10).stdout.strip() or None
+    except Exception:
+        commit = None
+    payload = {
+        "created_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(),
+        "commit": commit,
+        "argv": list(argv) if argv is not None else sys.argv[1:],
+        "host": {"platform": platform.platform(),
+                 "python": platform.python_version()},
+        "failed_suites": failed,
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, d in rows],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return path
 
 
 def main(argv=None) -> int:
@@ -17,6 +54,10 @@ def main(argv=None) -> int:
                     help="comma-separated subset: fig1,scaling,transfer,"
                          "wfa_ops,lm")
     ap.add_argument("--pairs", type=int, default=8192)
+    ap.add_argument("--json", nargs="?", const="auto", default=None,
+                    metavar="PATH",
+                    help="also write a JSON snapshot (default "
+                         "results/perf/BENCH_<timestamp>.json)")
     args = ap.parse_args(argv)
     want = set(args.only.split(",")) if args.only else None
 
@@ -39,6 +80,7 @@ def main(argv=None) -> int:
         suites.append(("lm", lm_substrate.run))
 
     rows = []
+    failed = []
     rc = 0
     for name, fn in suites:
         try:
@@ -46,8 +88,12 @@ def main(argv=None) -> int:
         except Exception:
             print(f"# suite {name} FAILED:", file=sys.stderr)
             traceback.print_exc()
+            failed.append(name)
             rc = 1
     emit(rows)
+    if args.json is not None:
+        path = _write_json(args.json, rows, argv, failed)
+        print(f"# wrote {path}", file=sys.stderr)
     return rc
 
 

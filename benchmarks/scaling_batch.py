@@ -2,16 +2,17 @@
 
 On UPMEM, throughput scales with DPU count because each DPU owns its
 bandwidth; on TPU the analogue axis is the *lock-step batch width* (how many
-pairs advance per vector op).  This benchmark sweeps the batch width and
-reports pairs/s — the knee shows where the vector units saturate, the
-plateau is the single-chip equivalent of the paper's full-scale PIM bar."""
+pairs advance per vector op).  This benchmark sweeps the batch width through
+the unified :class:`AlignmentEngine` (bucketing off: one rectangular wave
+per call, so the width under test is exactly the device batch) and reports
+pairs/s — the knee shows where the vector units saturate, the plateau is
+the single-chip equivalent of the paper's full-scale PIM bar."""
 from __future__ import annotations
 
 from benchmarks.common import Row, time_fn
 from repro.configs import wfa_paper
-from repro.core.aligner import WFAligner, problem_bounds
-from repro.core.wavefront import wfa_scores
 from repro.data.reads import ReadPairSpec, generate_pairs
+from repro.core.engine import AlignmentEngine
 
 
 def run(max_pairs: int = 4096, read_len: int = 100,
@@ -19,16 +20,17 @@ def run(max_pairs: int = 4096, read_len: int = 100,
     spec = ReadPairSpec(n_pairs=max_pairs, read_len=read_len,
                         edit_frac=edit_frac, seed=1)
     P, plen, T, tlen = generate_pairs(spec)
-    s_max, k_max = problem_bounds(wfa_paper.pen, plen, tlen, edit_frac)
+    eng = AlignmentEngine(wfa_paper.pen, backend="ring",
+                          edit_frac=edit_frac, bucket_by_length=False,
+                          adaptive=False)
 
     rows: list[Row] = []
     width = 64
     base = None
     while width <= max_pairs:
         sec = time_fn(
-            lambda w=width: wfa_scores(P[:w], T[:w], plen[:w], tlen[:w],
-                                       pen=wfa_paper.pen, s_max=s_max,
-                                       k_max=k_max).score,
+            lambda w=width: eng.align_packed(P[:w], plen[:w], T[:w],
+                                             tlen[:w]).scores,
             warmup=1, iters=3)
         thr = width / sec
         if base is None:

@@ -1,9 +1,10 @@
 """The paper's scenario end-to-end: generate read pairs at an edit threshold,
-run them through the unified AlignmentEngine (scatter PIM-style over every
-device, length-bucketed, executable-cached, overflow-recovering), and report
-Total vs Kernel throughput (Fig. 1's decomposition).
+stream them through the engine's AlignmentSession (async submits, pipelined
+waves, out-of-order gather — the paper's transfer/compute overlap), and
+report Total vs Kernel throughput (Fig. 1's decomposition).
 
     PYTHONPATH=src python examples/align_reads.py --pairs 20000 --edit-frac 0.02
+    PYTHONPATH=src python examples/align_reads.py --mode both --pairs 8192
     PYTHONPATH=src python examples/align_reads.py --backend kernel --pairs 512
     PYTHONPATH=src python examples/align_reads.py --no-bucket --no-adaptive
 """

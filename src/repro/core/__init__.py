@@ -6,6 +6,7 @@ from repro.core.wavefront import WFAResult, wfa_forward, wfa_scores  # noqa: F40
 from repro.core.backends import available_backends, get_backend, register_backend  # noqa: F401
 from repro.core.engine import (AlignmentEngine, EngineResult, EngineStats,  # noqa: F401
                                encode, pack_batch, problem_bounds)
+from repro.core.session import AlignmentSession, SessionStats, Ticket  # noqa: F401
 from repro.core.aligner import AlignResult, WFAligner  # noqa: F401
 from repro.core.pim import PIMBatchAligner, PIMStats, pair_sharding  # noqa: F401
 from repro.core.gotoh import gotoh_score, gotoh_score_vec, score_cigar  # noqa: F401

@@ -15,6 +15,7 @@ dispatch through the backend registry for code that manages its own bounds
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import List, Optional, Sequence
 
 import numpy as np
@@ -50,6 +51,11 @@ class WFAligner:
                  edit_frac: Optional[float] = None,
                  s_max: Optional[int] = None, k_max: Optional[int] = None,
                  with_cigar: bool = False):
+        warnings.warn(
+            "WFAligner is deprecated; use repro.core.engine.AlignmentEngine "
+            "(blocking align()) or AlignmentEngine.stream() for pipelined "
+            "submission via repro.core.session.AlignmentSession",
+            DeprecationWarning, stacklevel=2)
         self._engine = AlignmentEngine(pen, backend=backend,
                                        edit_frac=edit_frac, s_max=s_max,
                                        k_max=k_max, with_cigar=with_cigar)

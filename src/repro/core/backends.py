@@ -18,6 +18,19 @@ it).  Backends that keep the full wavefront history set ``supports_cigar``;
 backends that shard over a device mesh set ``needs_mesh`` and receive the
 engine's ``mesh`` as a keyword.
 
+Two hooks tune how the engine *drives* a backend (both optional):
+
+* ``donate_args`` — positional indices of ``(pattern, text, plen, tlen)``
+  whose device buffers may be donated to the executable
+  (``jit(donate_argnums=...)``).  On GPU/TPU this lets XLA alias the
+  ``[B]`` int32 score output onto a spent input buffer, so a streaming
+  session's double-buffered waves don't accumulate dead input allocations.
+  Ignored on CPU (donation is unsupported there).
+* ``dispatch`` — ``dispatch(exe_fn, *arrays) -> WFAResult`` intercepts the
+  jitted call itself.  The engine and the streaming session route every
+  wave through it, so a backend can split a wave across streams, add
+  tracing, or stage inputs its own way without touching engine code.
+
 Built-ins:
 
 * ``"ref"``      — full-history pure-jnp WFA (CIGAR traceback capable)
@@ -29,7 +42,7 @@ Built-ins:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -42,6 +55,8 @@ class BackendSpec:
     fn: Callable[..., wf.WFAResult]
     supports_cigar: bool = False
     needs_mesh: bool = False
+    donate_args: Tuple[int, ...] = ()
+    dispatch: Optional[Callable[..., wf.WFAResult]] = None
     doc: str = ""
 
 
@@ -50,6 +65,8 @@ _REGISTRY: Dict[str, BackendSpec] = {}
 
 def register_backend(name: str, fn: Optional[Callable] = None, *,
                      supports_cigar: bool = False, needs_mesh: bool = False,
+                     donate_args: Tuple[int, ...] = (),
+                     dispatch: Optional[Callable] = None,
                      doc: str = ""):
     """Register an alignment backend (usable as a decorator).
 
@@ -60,6 +77,8 @@ def register_backend(name: str, fn: Optional[Callable] = None, *,
         _REGISTRY[name] = BackendSpec(name=name, fn=f,
                                       supports_cigar=supports_cigar,
                                       needs_mesh=needs_mesh,
+                                      donate_args=tuple(donate_args),
+                                      dispatch=dispatch,
                                       doc=doc or (f.__doc__ or "").strip())
         return f
 
@@ -95,14 +114,16 @@ def _ref_backend(pattern, text, plen, tlen, *, pen, s_max, k_max):
                           s_max=s_max, k_max=k_max, keep_history=True)
 
 
-@register_backend("ring",
+# The [B] int32 length buffers are donatable: the [B] int32 score output
+# can alias one of them, so streamed waves recycle device memory.
+@register_backend("ring", donate_args=(2, 3),
                   doc="rolling-window pure-jnp WFA (score-only)")
 def _ring_backend(pattern, text, plen, tlen, *, pen, s_max, k_max):
     return wf.wfa_scores(pattern, text, plen, tlen, pen=pen,
                          s_max=s_max, k_max=k_max)
 
 
-@register_backend("kernel",
+@register_backend("kernel", donate_args=(2, 3),
                   doc="Pallas TPU kernel (score-only; interpret on CPU)")
 def _kernel_backend(pattern, text, plen, tlen, *, pen, s_max, k_max):
     from repro.kernels.wfa import ops as kops  # lazy: pallas import is heavy

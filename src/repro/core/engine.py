@@ -27,6 +27,13 @@ bytes and seconds — Fig. 1's *Total vs Kernel* decomposition) that used to
 live in ``core.pim``.  ``WFAligner`` and ``PIMBatchAligner`` are thin
 wrappers kept for compatibility.
 
+Execution itself lives in ``core.session``: every ``align()`` call is one
+blocking pass through an :class:`~repro.core.session.AlignmentSession`, and
+``engine.stream()`` opens the same session in pipelined mode — async
+``submit()``, host packing overlapped with in-flight device kernels, and
+out-of-order ``as_completed()`` gather (the paper's transfer/compute
+overlap, the 4.87x-vs-37.4x gap).
+
 Quickstart::
 
     from repro.core.engine import AlignmentEngine
@@ -35,12 +42,16 @@ Quickstart::
     res = eng.align(["ACGT...", ...], ["ACGA...", ...])
     res.scores        # [B] exact gap-affine costs (Gotoh-identical)
     res.stats         # buckets, cache hits, overflow recoveries, PIM phases
+
+    with eng.stream(max_inflight_waves=2) as sess:   # pipelined serving
+        tickets = [sess.submit(ps, ts) for ps, ts in request_chunks]
+        for ticket in sess.as_completed():           # out-of-order gather
+            consume(ticket.result().scores)
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-import time
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -240,6 +251,10 @@ class _Executable:
 
     Tracing happens at most once per (shape, bounds) key; ``n_traces``
     counts actual XLA traces so callers can assert cache effectiveness.
+    ``call`` is the dispatch point shared by the sync path and the
+    streaming session: it honors the backend's ``dispatch`` hook and is
+    *non-blocking* — the returned ``WFAResult`` holds in-flight device
+    arrays (JAX async dispatch), so callers choose when to synchronize.
     """
 
     def __init__(self, spec: BackendSpec, pen: Penalties, s_max: int,
@@ -249,6 +264,7 @@ class _Executable:
         self._traces = [0]
         traces = self._traces
         backend_fn = spec.fn
+        self._dispatch = spec.dispatch
         extra = {"mesh": mesh} if spec.needs_mesh else {}
 
         def _run(pattern, text, plen, tlen):
@@ -256,7 +272,16 @@ class _Executable:
             return backend_fn(pattern, text, plen, tlen, pen=pen,
                               s_max=s_max, k_max=k_max, **extra)
 
-        self.fn = jax.jit(_run)
+        # Donation is a no-op (with a warning) on CPU; only apply it where
+        # XLA can actually alias the buffers.
+        donate = (spec.donate_args
+                  if jax.default_backend() in ("gpu", "tpu") else ())
+        self.fn = jax.jit(_run, donate_argnums=donate)
+
+    def call(self, pattern, text, plen, tlen):
+        if self._dispatch is not None:
+            return self._dispatch(self.fn, pattern, text, plen, tlen)
+        return self.fn(pattern, text, plen, tlen)
 
     @property
     def n_traces(self) -> int:
@@ -380,80 +405,37 @@ class AlignmentEngine:
             return tuple(jax.device_put(a, sh) for a in arrays)
         return tuple(jnp.asarray(a) for a in arrays)
 
-    def _run_rect(self, pc, tc, plc, tlc, s_max: int, k_max: int,
-                  stats: EngineStats):
-        """Run one rectangular padded chunk through the cached executable."""
+    def _executable_for(self, pshape: tuple, tshape: tuple, s_max: int,
+                        k_max: int) -> Tuple["_Executable", bool]:
+        """Cached executable for one rectangular problem shape -> (exe, hit)."""
         spec = get_backend(self.backend)
-        # spec.fn in the key: re-registering a backend name must not serve
-        # stale executables compiled against the old implementation
-        key = (spec.name, spec.fn, self.pen, pc.shape, tc.shape, s_max, k_max)
+        # the whole spec in the key: re-registering a backend name (new fn,
+        # donation or dispatch hooks) must not serve stale executables
+        key = (spec, self.pen, pshape, tshape, s_max, k_max)
         exe = self._cache.get(key)
-        if exe is None:
-            exe = _Executable(spec, self.pen, s_max, k_max, self.mesh)
-            self._cache[key] = exe
-            stats.cache_misses += 1
-        else:
-            stats.cache_hits += 1
-        stats.bytes_in += pc.nbytes + tc.nbytes + plc.nbytes + tlc.nbytes
-
-        pre = exe.n_traces
-        t0 = time.perf_counter()
-        dp, dt_, dpl, dtl = self._device_put(pc, tc, plc, tlc)
-        jax.block_until_ready((dp, dt_, dpl, dtl))
-        t1 = time.perf_counter()
-        res = exe.fn(dp, dt_, dpl, dtl)
-        res.score.block_until_ready()
-        t2 = time.perf_counter()
-        scores = np.asarray(res.score)
-        t3 = time.perf_counter()
-
-        stats.n_traces += exe.n_traces - pre
-        stats.bytes_out += scores.nbytes
-        stats.t_scatter += t1 - t0
-        stats.t_kernel += t2 - t1
-        stats.t_gather += t3 - t2
-        return res, scores
-
-    def _run_pass(self, p, t, plen, tlen, idx: np.ndarray, exact: bool,
-                  scores: np.ndarray, cigars: Optional[dict],
-                  stats: EngineStats, recovery: bool = False
-                  ) -> Tuple[int, int, int]:
-        """Align the pairs in ``idx``; scatter results into ``scores``.
-
-        Returns (total score-loop steps, max s_max, max k_max) over buckets.
-        """
-        steps = s_hi = k_hi = 0
-        for width, bidx in self._plan_buckets(plen, tlen, idx):
-            s_max, k_max = self._bounds_for_bucket(
-                width, plen[bidx], tlen[bidx], exact)
-            s_hi, k_hi = max(s_hi, s_max), max(k_hi, k_max)
-            stats.buckets.append(BucketInfo(width, s_max, k_max,
-                                            len(bidx), recovery=recovery))
-            for lo in range(0, len(bidx), self.chunk_pairs):
-                hi = min(len(bidx), lo + self.chunk_pairs)
-                rows = bidx[lo:hi]     # host copies stay chunk-sized
-                # quantized for cache reuse, but never above the user's
-                # per-wave memory cap (chunk_pairs is the MRAM analogue)
-                nb = min(_quantize_rows(hi - lo, self.n_workers),
-                         _round_up(self.chunk_pairs, self.n_workers))
-                pc = _pad_rows(_fit_width(p[rows], width), nb)
-                tc = _pad_rows(_fit_width(t[rows], width), nb)
-                plc, tlc = (_pad_rows(plen[rows], nb),
-                            _pad_rows(tlen[rows], nb))
-                res, out = self._run_rect(pc, tc, plc, tlc, s_max, k_max,
-                                          stats)
-                scores[bidx[lo:hi]] = out[: hi - lo]
-                steps += int(res.n_steps)
-                if cigars is not None:
-                    t0 = time.perf_counter()
-                    ops = cigar_mod.traceback_batch(res, self.pen, plc, tlc,
-                                                    k_max)
-                    stats.t_gather += time.perf_counter() - t0
-                    for j, orig in enumerate(bidx[lo:hi]):
-                        cigars[int(orig)] = ops[j]
-        return steps, s_hi, k_hi
+        if exe is not None:
+            return exe, True
+        exe = _Executable(spec, self.pen, s_max, k_max, self.mesh)
+        self._cache[key] = exe
+        return exe, False
 
     # -- public entry points -------------------------------------------------
+
+    def stream(self, *, max_inflight_waves: int = 2,
+               wave_pairs: Optional[int] = None):
+        """Open a pipelined :class:`~repro.core.session.AlignmentSession`.
+
+        The session is the canonical submission path: ``submit()`` returns a
+        :class:`~repro.core.session.Ticket` immediately, host-side packing of
+        the next wave overlaps the in-flight device kernel (JAX async
+        dispatch), at most ``max_inflight_waves`` waves are in flight
+        (backpressure), and tickets complete out of order via
+        ``as_completed()``.  ``wave_pairs`` defaults to the engine's
+        ``chunk_pairs`` (the MRAM-capacity analogue).
+        """
+        from repro.core.session import AlignmentSession
+        return AlignmentSession(self, max_inflight_waves=max_inflight_waves,
+                                wave_pairs=wave_pairs)
 
     def align(self, patterns: Sequence[Seq],
               texts: Sequence[Seq]) -> EngineResult:
@@ -465,37 +447,18 @@ class AlignmentEngine:
 
     def align_packed(self, p: np.ndarray, plen: np.ndarray, t: np.ndarray,
                      tlen: np.ndarray) -> EngineResult:
-        """Align pre-packed rectangular batches ([B, L] codes + [B] lens)."""
-        n = p.shape[0]
-        plen = np.asarray(plen, np.int32)
-        tlen = np.asarray(tlen, np.int32)
-        stats = EngineStats(n_pairs=n, n_workers=self.n_workers)
-        scores = np.full((n,), -1, np.int32)
-        cigars: Optional[dict] = {} if self.with_cigar else None
-        if n == 0:
-            return EngineResult(scores, [] if self.with_cigar else None,
-                                0, 0, 0, stats)
+        """Align pre-packed rectangular batches ([B, L] codes + [B] lens).
 
-        optimistic = self.edit_frac is not None and self._s_max is None
-        steps, s_hi, k_hi = self._run_pass(
-            p, t, plen, tlen, np.arange(n), not optimistic, scores, cigars,
-            stats)
-
-        if optimistic:
-            overflow = np.nonzero(scores < 0)[0]
-            stats.n_overflow = len(overflow)
-            if len(overflow) and self.adaptive:
-                st2, s2, k2 = self._run_pass(p, t, plen, tlen, overflow,
-                                             True, scores, cigars, stats,
-                                             recovery=True)
-                steps += st2
-                s_hi, k_hi = max(s_hi, s2), max(k_hi, k2)
-                stats.n_recovered = int((scores[overflow] >= 0).sum())
-
-        cig_list = None
-        if cigars is not None:
-            cig_list = [cigars[i] for i in range(n)]
-        return EngineResult(scores, cig_list, steps, s_hi, k_hi, stats)
+        Thin blocking wrapper over one streaming session: a single
+        ``submit`` followed by ``drain``, with per-phase (scatter / kernel /
+        gather) blocking so the Fig. 1 decomposition stays measurable.
+        """
+        from repro.core.session import AlignmentSession
+        sess = AlignmentSession(self, max_inflight_waves=1,
+                                _sync_timing=True)
+        ticket = sess.submit_packed(p, plen, t, tlen)
+        sess.drain()
+        return ticket.result()
 
     def align_pair(self, pattern: Seq, text: Seq) -> EngineResult:
         return self.align([pattern], [text])

@@ -16,6 +16,7 @@ reported exactly like Fig. 1.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional, Sequence
 
 from jax.sharding import Mesh
@@ -28,21 +29,27 @@ __all__ = ["PIMBatchAligner", "PIMStats", "pair_sharding"]
 
 
 class PIMBatchAligner:
-    """Scatter -> align -> gather over a device mesh (engine-backed).
+    """Scatter -> align -> gather over a device mesh (session-backed).
 
     ``chunk_pairs`` bounds device memory per wave (the MRAM-capacity
     analogue: a DPU holds only so many pairs at once); large batches stream
-    in waves.
+    in waves.  ``run_arrays`` is one blocking pass through an
+    :class:`~repro.core.session.AlignmentSession`.
     """
 
     def __init__(self, aligner: WFAligner, mesh: Optional[Mesh] = None,
                  chunk_pairs: int = 1 << 16):
+        warnings.warn(
+            "PIMBatchAligner is deprecated; use repro.core.engine."
+            "AlignmentEngine (blocking align()) or AlignmentEngine.stream() "
+            "/ repro.core.session.AlignmentSession (pipelined submission)",
+            DeprecationWarning, stacklevel=2)
         self.aligner = aligner
         self.mesh = mesh
         self.chunk_pairs = chunk_pairs
         if mesh is None:
             # reuse the aligner's engine (and its warm executable cache);
-            # this executor's per-wave cap is applied only while running
+            # this executor's per-wave cap applies via the session
             self._engine = aligner.engine
         else:
             self._engine = AlignmentEngine(
@@ -61,10 +68,11 @@ class PIMBatchAligner:
         return self.run_arrays(p, plen, t, tlen)
 
     def run_arrays(self, p, plen, t, tlen):
-        prev = self._engine.chunk_pairs
-        self._engine.chunk_pairs = int(self.chunk_pairs)
-        try:
-            res = self._engine.align_packed(p, plen, t, tlen)
-        finally:
-            self._engine.chunk_pairs = prev
+        from repro.core.session import AlignmentSession
+        sess = AlignmentSession(self._engine, max_inflight_waves=1,
+                                wave_pairs=int(self.chunk_pairs),
+                                _sync_timing=True)
+        ticket = sess.submit_packed(p, plen, t, tlen)
+        sess.drain()
+        res = ticket.result()
         return res.scores, res.stats.pim

@@ -1,0 +1,480 @@
+"""Streaming alignment sessions — async submission, pipelined dispatch,
+out-of-order gather.
+
+The paper's second headline number is the transfer gap: 4.87x speedup with
+CPU<->DPU transfers vs 37.4x without (E=2%), closed on UPMEM by overlapping
+parallel transfers with kernel execution.  The blocking ``align()`` path
+cannot overlap anything: it packs, copies, runs and gathers one wave at a
+time.  :class:`AlignmentSession` is the pipelined execution model behind
+:meth:`AlignmentEngine.stream`:
+
+* ``submit(patterns, texts) -> Ticket`` returns immediately.  Pairs are
+  bucketed and cut into *waves* (``wave_pairs`` — the MRAM-capacity
+  analogue); each wave is packed on the host and dispatched without
+  blocking, so JAX async dispatch runs the device kernel of wave *N* while
+  the host packs and enqueues wave *N+1* (double-buffered ``device_put``).
+* at most ``max_inflight_waves`` waves are in flight — **backpressure**:
+  when the pipeline is full, the oldest wave is retired (gathered) before
+  the next is packed, bounding host and device memory.
+* waves retire **out of order** across buckets and submissions; a
+  :class:`Ticket` completes as soon as its own waves (and any recovery
+  re-runs) have retired.  ``as_completed()`` yields tickets in completion
+  order, ``results()`` in submission order, ``drain()`` flushes everything.
+* pairs that overflow the optimistic ``edit_frac`` bound are **recycled
+  into a recovery queue** instead of stalling their wave — they re-run with
+  exact worst-case bounds when a full recovery wave accumulates or at
+  drain, exactly like the engine's two-pass scheme (BIMSA's CPU recovery).
+
+The sync ``engine.align()`` is itself one blocking pass through this class
+(``max_inflight_waves=1`` + per-phase blocking for the Fig. 1 scatter /
+kernel / gather decomposition), so there is a single execution path to
+test, profile and extend.
+
+Quickstart::
+
+    eng = AlignmentEngine(backend="ring", edit_frac=0.02)
+    with eng.stream(max_inflight_waves=2) as sess:
+        tickets = [sess.submit(ps, ts) for ps, ts in chunks]
+        for t in sess.as_completed():        # completion order
+            consume(t.result().scores)
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, Iterator, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core import cigar as cigar_mod
+from repro.core.engine import (AlignmentEngine, BucketInfo, EngineResult,
+                               EngineStats, Seq, _fit_width, _pad_rows,
+                               _quantize_rows, _round_up, pack_batch)
+
+__all__ = ["AlignmentSession", "SessionStats", "Ticket", "run_streamed"]
+
+
+@dataclasses.dataclass
+class SessionStats(EngineStats):
+    """Aggregate telemetry across every submit of one session."""
+    n_submits: int = 0
+    n_waves: int = 0
+    max_inflight: int = 0      # configured backpressure bound
+    peak_inflight: int = 0     # highest observed in-flight wave count
+
+
+class Ticket:
+    """Handle for one ``submit()`` call.
+
+    Fills in as its waves retire (possibly interleaved with other tickets'
+    waves); ``done()`` is non-blocking, ``result()`` drives the session
+    until this ticket is complete and returns its :class:`EngineResult`
+    (scores in submission row order, per-ticket stats).
+    """
+
+    def __init__(self, session: "AlignmentSession", index: int, n_pairs: int):
+        eng = session.engine
+        self.index = index
+        self.n_pairs = n_pairs
+        self.stats = EngineStats(n_pairs=n_pairs, n_workers=eng.n_workers)
+        self._session = session
+        self._scores = np.full((n_pairs,), -1, np.int32)
+        self._cigars: Optional[dict] = {} if eng.with_cigar else None
+        self._p = self._t = self._plen = self._tlen = None
+        self._outstanding = n_pairs      # rows without a final score yet
+        self._recovery_rows: List[np.ndarray] = []   # overflow awaiting re-run
+        self._steps = 0
+        self._s_hi = 0
+        self._k_hi = 0
+        self._done = False
+        self._result: Optional[EngineResult] = None
+
+    def done(self) -> bool:
+        return self._done
+
+    def result(self) -> EngineResult:
+        if not self._done:
+            self._session._wait_for(self)
+        return self._result
+
+
+@dataclasses.dataclass
+class _Wave:
+    """One dispatched rectangular chunk whose device result is in flight."""
+    ticket: Ticket
+    rows: np.ndarray            # ticket-local row indices (un-padded count)
+    res: object                 # WFAResult of in-flight device arrays
+    plc: np.ndarray             # padded lens kept for CIGAR traceback
+    tlc: np.ndarray
+    k_max: int
+    recovery: bool
+
+
+class AlignmentSession:
+    """Pipelined submit/drain front-end over one :class:`AlignmentEngine`.
+
+    Created via :meth:`AlignmentEngine.stream` (or directly).  Shares the
+    engine's executable cache, so a warm engine streams with zero retraces.
+    Not thread-safe: one session is one logical submission stream (open
+    several sessions over the same engine for concurrent producers).
+
+    ``_sync_timing`` is the engine-internal blocking mode used by
+    ``align()``: each wave blocks per phase so scatter/kernel/gather stay
+    separable (the streaming default instead attributes host dispatch time
+    to scatter and wait-time at retirement to kernel).
+    """
+
+    def __init__(self, engine: AlignmentEngine, *,
+                 max_inflight_waves: int = 2,
+                 wave_pairs: Optional[int] = None,
+                 _sync_timing: bool = False):
+        if max_inflight_waves < 1:
+            raise ValueError("max_inflight_waves must be >= 1")
+        self.engine = engine
+        self.max_inflight = int(max_inflight_waves)
+        self.wave_pairs = int(wave_pairs if wave_pairs is not None
+                              else engine.chunk_pairs)
+        if self.wave_pairs < 1:
+            raise ValueError("wave_pairs must be >= 1")
+        self._sync = bool(_sync_timing)
+        self.stats = SessionStats(n_workers=engine.n_workers,
+                                  max_inflight=self.max_inflight)
+        self._tickets: List[Ticket] = []
+        self._inflight: Deque[_Wave] = collections.deque()
+        self._completed: Deque[Ticket] = collections.deque()
+        self._error: Optional[BaseException] = None
+        self._closed = False
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def __enter__(self) -> "AlignmentSession":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if exc_type is None:
+            self.close()
+        else:
+            # don't drain a failing block, but settle dispatched waves so
+            # no in-flight computation outlives the session
+            self._abandon_inflight()
+            self._closed = True
+        return False
+
+    def close(self) -> None:
+        """Drain outstanding work and refuse further submissions."""
+        if not self._closed:
+            try:
+                self.drain()
+            finally:
+                self._closed = True
+
+    @property
+    def n_inflight(self) -> int:
+        return len(self._inflight)
+
+    @property
+    def tickets(self) -> List[Ticket]:
+        return list(self._tickets)
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("session is closed")
+        if self._error is not None:
+            raise RuntimeError(
+                "session failed; no further submissions") from self._error
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, patterns: Sequence[Seq],
+               texts: Sequence[Seq]) -> Ticket:
+        """Enqueue one batch of python sequences; returns immediately."""
+        assert len(patterns) == len(texts)
+        p, plen = pack_batch(patterns)
+        t, tlen = pack_batch(texts)
+        return self.submit_packed(p, plen, t, tlen)
+
+    def submit_packed(self, p: np.ndarray, plen: np.ndarray, t: np.ndarray,
+                      tlen: np.ndarray) -> Ticket:
+        """Enqueue pre-packed [B, L] codes + [B] lens; returns immediately."""
+        self._check_open()
+        n = int(p.shape[0])
+        ticket = Ticket(self, len(self._tickets), n)
+        self._tickets.append(ticket)
+        self.stats.n_submits += 1
+        self.stats.n_pairs += n
+        if n == 0:
+            self._finalize(ticket)
+            return ticket
+        ticket._p = np.asarray(p)
+        ticket._t = np.asarray(t)
+        ticket._plen = np.asarray(plen, np.int32)
+        ticket._tlen = np.asarray(tlen, np.int32)
+        eng = self.engine
+        optimistic = eng.edit_frac is not None and eng._s_max is None
+        self._enqueue_pass(ticket, np.arange(n), exact=not optimistic,
+                           recovery=False)
+        return ticket
+
+    def _enqueue_pass(self, ticket: Ticket, idx: np.ndarray, *, exact: bool,
+                      recovery: bool) -> None:
+        """Bucket ``idx`` rows of ``ticket`` and dispatch them as waves."""
+        eng = self.engine
+        for width, bidx in eng._plan_buckets(ticket._plen, ticket._tlen, idx):
+            s_max, k_max = eng._bounds_for_bucket(
+                width, ticket._plen[bidx], ticket._tlen[bidx], exact)
+            ticket._s_hi = max(ticket._s_hi, s_max)
+            ticket._k_hi = max(ticket._k_hi, k_max)
+            info = BucketInfo(width, s_max, k_max, len(bidx),
+                              recovery=recovery)
+            ticket.stats.buckets.append(info)
+            self.stats.buckets.append(info)
+            for lo in range(0, len(bidx), self.wave_pairs):
+                self._dispatch(ticket, bidx[lo:lo + self.wave_pairs], width,
+                               s_max, k_max, recovery)
+
+    def _dispatch(self, ticket: Ticket, rows: np.ndarray, width: int,
+                  s_max: int, k_max: int, recovery: bool) -> None:
+        """Pack one wave and launch it without waiting for the result."""
+        # Backpressure first: retiring *before* packing keeps the remaining
+        # in-flight kernels running under this wave's host-side work.
+        while len(self._inflight) >= self.max_inflight:
+            self._retire_one()
+        eng = self.engine
+        t0 = time.perf_counter()
+        # quantized for cache reuse, but never above the per-wave memory cap
+        nb = min(_quantize_rows(len(rows), eng.n_workers),
+                 _round_up(self.wave_pairs, eng.n_workers))
+        pc = _pad_rows(_fit_width(ticket._p[rows], width), nb)
+        tc = _pad_rows(_fit_width(ticket._t[rows], width), nb)
+        plc = _pad_rows(ticket._plen[rows], nb)
+        tlc = _pad_rows(ticket._tlen[rows], nb)
+        exe, hit = eng._executable_for(pc.shape, tc.shape, s_max, k_max)
+        for st in (ticket.stats, self.stats):
+            if hit:
+                st.cache_hits += 1
+            else:
+                st.cache_misses += 1
+            st.bytes_in += pc.nbytes + tc.nbytes + plc.nbytes + tlc.nbytes
+        pre = exe.n_traces
+        try:
+            dp, dt_, dpl, dtl = eng._device_put(pc, tc, plc, tlc)
+            if self._sync:
+                jax.block_until_ready((dp, dt_, dpl, dtl))
+                t1 = time.perf_counter()
+                for st in (ticket.stats, self.stats):
+                    st.t_scatter += t1 - t0
+            res = exe.call(dp, dt_, dpl, dtl)
+            if self._sync:
+                res.score.block_until_ready()
+                t2 = time.perf_counter()
+                for st in (ticket.stats, self.stats):
+                    st.t_kernel += t2 - t1
+            else:
+                # async: pack + enqueue cost only; the copy and kernel are
+                # both still in flight behind this wave
+                t1 = time.perf_counter()
+                for st in (ticket.stats, self.stats):
+                    st.t_scatter += t1 - t0
+        except Exception as e:
+            self._error = e
+            self._abandon_inflight()
+            raise
+        n_tr = exe.n_traces - pre
+        for st in (ticket.stats, self.stats):
+            st.n_traces += n_tr
+        self._inflight.append(_Wave(ticket, rows, res, plc, tlc, k_max,
+                                    recovery))
+        self.stats.n_waves += 1
+        self.stats.peak_inflight = max(self.stats.peak_inflight,
+                                       len(self._inflight))
+        if self._sync:
+            self._retire_one()
+
+    # -- retirement ----------------------------------------------------------
+
+    def _retire_one(self) -> None:
+        """Gather the oldest in-flight wave and scatter its results."""
+        wave = self._inflight.popleft()
+        ticket = wave.ticket
+        t0 = time.perf_counter()
+        try:
+            wave.res.score.block_until_ready()
+        except Exception as e:
+            self._error = e
+            self._abandon_inflight()
+            raise
+        t1 = time.perf_counter()
+        full = np.asarray(wave.res.score)
+        out = full[: len(wave.rows)]
+        steps = int(wave.res.n_steps)
+        t2 = time.perf_counter()
+        if not self._sync:       # sync mode billed the kernel at dispatch
+            for st in (ticket.stats, self.stats):
+                st.t_kernel += t1 - t0
+        for st in (ticket.stats, self.stats):
+            st.t_gather += t2 - t1
+            st.bytes_out += full.nbytes
+        ticket._scores[wave.rows] = out
+        ticket._steps += steps
+        if ticket._cigars is not None:
+            t3 = time.perf_counter()
+            ops = cigar_mod.traceback_batch(wave.res, self.engine.pen,
+                                            wave.plc, wave.tlc, wave.k_max)
+            dt = time.perf_counter() - t3
+            for st in (ticket.stats, self.stats):
+                st.t_gather += dt
+            for j, orig in enumerate(wave.rows):
+                ticket._cigars[int(orig)] = ops[j]
+
+        eng = self.engine
+        optimistic = eng.edit_frac is not None and eng._s_max is None
+        settled = len(wave.rows)     # rows this wave resolved for good
+        if wave.recovery:
+            n_rec = int((out >= 0).sum())
+            for st in (ticket.stats, self.stats):
+                st.n_recovered += n_rec
+        elif optimistic:
+            overflow = wave.rows[out < 0]
+            if len(overflow):
+                for st in (ticket.stats, self.stats):
+                    st.n_overflow += len(overflow)
+                if eng.adaptive:
+                    # recycle into the recovery queue rather than blocking
+                    # the pipeline for one straggler
+                    ticket._recovery_rows.append(overflow)
+                    settled -= len(overflow)
+        ticket._outstanding -= settled
+        self._maybe_finish(ticket)
+        if (ticket._recovery_rows and
+                sum(len(r) for r in ticket._recovery_rows)
+                >= self.wave_pairs):
+            self._flush_recovery(ticket)    # a full recovery wave is ready
+
+    def _abandon_inflight(self) -> None:
+        """Settle and drop every in-flight wave after the session failed.
+
+        The first error poisons the session; the remaining dispatched waves
+        are synchronized (their errors swallowed — the first one is the one
+        reported) so no in-flight computation outlives the session to raise
+        at interpreter exit.
+        """
+        while self._inflight:
+            wave = self._inflight.popleft()
+            try:
+                wave.res.score.block_until_ready()
+            except Exception:
+                pass
+        try:
+            # drain runtime-token errors too (e.g. a failed callback inside
+            # a backend) so nothing re-raises at interpreter exit
+            jax.effects_barrier()
+        except Exception:
+            # a poisoned token makes effects_barrier raise *before* it
+            # clears the token set, so jax's atexit barrier would re-raise
+            # the same error; every wave is already settled above, so the
+            # tokens are safe to drop
+            try:
+                from jax._src import dispatch as _dispatch
+                _dispatch.runtime_tokens.clear()
+            except Exception:            # pragma: no cover - jax internals
+                pass
+
+    def _maybe_finish(self, ticket: Ticket) -> None:
+        if not ticket._done and ticket._outstanding == 0:
+            self._finalize(ticket)
+
+    def _finalize(self, ticket: Ticket) -> None:
+        cig = None
+        if ticket._cigars is not None:
+            cig = [ticket._cigars[i] for i in range(ticket.n_pairs)]
+        ticket._result = EngineResult(ticket._scores, cig, ticket._steps,
+                                      ticket._s_hi, ticket._k_hi,
+                                      ticket.stats)
+        ticket._p = ticket._t = ticket._plen = ticket._tlen = None
+        ticket._done = True
+        self._completed.append(ticket)
+
+    def _flush_recovery(self, ticket: Optional[Ticket] = None) -> None:
+        """Re-run queued overflow pairs with exact worst-case bounds."""
+        for t in ([ticket] if ticket is not None else list(self._tickets)):
+            if t._recovery_rows:
+                rows = np.concatenate(t._recovery_rows)
+                t._recovery_rows = []
+                self._enqueue_pass(t, rows, exact=True, recovery=True)
+
+    # -- gather --------------------------------------------------------------
+
+    def _step(self, ticket: Optional[Ticket] = None) -> None:
+        """Make one unit of progress (retire a wave or launch recovery)."""
+        if self._error is not None:
+            raise RuntimeError("session failed") from self._error
+        if self._inflight:
+            self._retire_one()
+        elif ticket is not None and ticket._recovery_rows:
+            self._flush_recovery(ticket)
+        elif any(t._recovery_rows for t in self._tickets):
+            self._flush_recovery()
+        else:
+            raise RuntimeError("session stalled: incomplete tickets with "
+                               "no in-flight waves")        # pragma: no cover
+
+    def _wait_for(self, ticket: Ticket) -> None:
+        """Drive the pipeline until ``ticket`` is complete."""
+        while not ticket._done:
+            self._step(ticket)
+
+    def as_completed(self) -> Iterator[Ticket]:
+        """Yield tickets as they finish — out of order, minimal latency.
+
+        Keeps driving the pipeline between yields; tickets submitted while
+        iterating are picked up too.  Each completed ticket is yielded
+        exactly once per session.
+        """
+        while True:
+            while self._completed:
+                yield self._completed.popleft()
+            if all(t._done for t in self._tickets):
+                return
+            self._step()
+
+    def results(self) -> Iterator[EngineResult]:
+        """Yield each submit's :class:`EngineResult` in submission order."""
+        i = 0
+        while i < len(self._tickets):
+            yield self._tickets[i].result()
+            i += 1
+
+    def drain(self) -> SessionStats:
+        """Block until every submitted pair (incl. recovery) has a result."""
+        while (self._inflight
+               or any(t._recovery_rows for t in self._tickets)):
+            self._step()
+        return self.stats
+
+
+def run_streamed(engine: AlignmentEngine, p: np.ndarray, plen: np.ndarray,
+                 t: np.ndarray, tlen: np.ndarray, *, submit_pairs: int,
+                 max_inflight_waves: int = 4):
+    """Stream one packed batch through a fresh session in ``submit_pairs``
+    chunks with out-of-order gather -> (scores, SessionStats, wall_seconds).
+
+    The shared harness behind the launcher's ``--mode stream`` and the
+    transfer-overhead benchmark's streamed column.
+    """
+    n = int(p.shape[0])
+    scores = np.empty((n,), np.int32)
+    t0 = time.perf_counter()
+    with engine.stream(max_inflight_waves=max_inflight_waves) as sess:
+        offset = {}
+        for lo in range(0, n, submit_pairs):
+            hi = min(n, lo + submit_pairs)
+            ticket = sess.submit_packed(p[lo:hi], plen[lo:hi],
+                                        t[lo:hi], tlen[lo:hi])
+            offset[ticket.index] = lo
+        for ticket in sess.as_completed():
+            lo = offset[ticket.index]
+            scores[lo:lo + ticket.n_pairs] = ticket.result().scores
+        stats = sess.stats
+    return scores, stats, time.perf_counter() - t0

@@ -11,6 +11,7 @@ import pytest
 QUICK_MODULES = {
     "test_wfa_core",
     "test_engine",
+    "test_session",
     "test_wfa_property",
     "test_analysis",
     "test_fault_dist",
@@ -20,6 +21,37 @@ QUICK_MODULES = {
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+def random_pairs(rng, n, lo=5, hi=200, drift=4):
+    """n read pairs whose mate drifts by < ``drift`` edits (shared helper)."""
+    pats, txts = [], []
+    for _ in range(n):
+        L = int(rng.integers(lo, hi))
+        p = "".join(rng.choice(list("ACGT"), size=L))
+        t = list(p)
+        for _ in range(int(rng.integers(0, drift))):
+            pos = int(rng.integers(0, max(1, len(t))))
+            r = rng.random()
+            if r < 0.5 and t:
+                t[pos] = rng.choice(list("ACGT"))
+            elif r < 0.8:
+                t.insert(pos, rng.choice(list("ACGT")))
+            elif t:
+                del t[pos]
+        pats.append(p)
+        txts.append("".join(t))
+    return pats, txts
+
+
+def gotoh_oracle(pats, txts, pen=None):
+    """Exact dense-DP scores for string pairs (the correctness contract)."""
+    from repro.core.gotoh import gotoh_score_vec
+    from repro.core.penalties import DEFAULT
+    return np.asarray([
+        gotoh_score_vec(np.frombuffer(p.encode(), np.uint8),
+                        np.frombuffer(t.encode(), np.uint8), pen or DEFAULT)
+        for p, t in zip(pats, txts)], np.int32)
 
 
 def pytest_configure(config):

@@ -2,41 +2,14 @@
 adaptive two-pass overflow recovery — all against the Gotoh oracle."""
 import numpy as np
 import pytest
+from conftest import gotoh_oracle as _oracle
+from conftest import random_pairs as _random_pairs
 
 from repro.core.backends import (available_backends, get_backend,
                                  register_backend, unregister_backend)
 from repro.core.engine import AlignmentEngine, pack_batch
-from repro.core.gotoh import gotoh_score_vec
 from repro.core.penalties import DEFAULT, Penalties
 from repro.core.wavefront import WFAResult, wfa_scores
-
-
-def _random_pairs(rng, n, lo=5, hi=200, drift=4):
-    pats, txts = [], []
-    for _ in range(n):
-        L = int(rng.integers(lo, hi))
-        p = "".join(rng.choice(list("ACGT"), size=L))
-        # mate drifts a little so most pairs stay within a small edit budget
-        t = list(p)
-        for _ in range(int(rng.integers(0, drift))):
-            pos = int(rng.integers(0, max(1, len(t))))
-            r = rng.random()
-            if r < 0.5 and t:
-                t[pos] = rng.choice(list("ACGT"))
-            elif r < 0.8:
-                t.insert(pos, rng.choice(list("ACGT")))
-            elif t:
-                del t[pos]
-        pats.append(p)
-        txts.append("".join(t))
-    return pats, txts
-
-
-def _oracle(pats, txts, pen=DEFAULT):
-    return np.asarray([
-        gotoh_score_vec(np.frombuffer(p.encode(), np.uint8),
-                        np.frombuffer(t.encode(), np.uint8), pen)
-        for p, t in zip(pats, txts)], np.int32)
 
 
 # ------------------------------------------------------------ registry ----
