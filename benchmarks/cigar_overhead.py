@@ -1,0 +1,70 @@
+"""Score-vs-CIGAR throughput: what full alignments cost on each backend.
+
+The paper's numbers are score-only; the follow-up framework paper
+(arXiv:2208.01243) makes the case that a usable aligner must emit full
+alignments at comparable throughput.  This suite runs the identical
+workload through ``output="score"`` and ``output="cigar"`` per backend and
+reports the ratio, plus the trace-memory ratio of the packed backtrace
+(ring/kernel) against the full offset history (ref) — the reason the fast
+backends can serve CIGARs at all.  Rows land in the ``--json`` snapshot,
+so the traceback overhead is tracked per push.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs import wfa_paper
+from repro.core import cigar as cigar_mod
+from repro.core.backends import get_backend
+from repro.core.engine import AlignmentEngine, problem_bounds
+from repro.data.reads import ReadPairSpec, generate_pairs
+
+
+def _best_of(fn, n=2):
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(pairs: int = 2048, read_len: int = 100,
+        edit_frac: float = 0.02) -> list[Row]:
+    spec = ReadPairSpec(n_pairs=pairs, read_len=read_len,
+                        edit_frac=edit_frac, seed=4)
+    P, plen, T, tlen = generate_pairs(spec)
+
+    rows: list[Row] = []
+    for backend in ("ring", "kernel", "ref"):
+        eng = AlignmentEngine(wfa_paper.pen, backend=backend,
+                              edit_frac=edit_frac, chunk_pairs=pairs)
+        for output in ("score", "cigar"):      # warm both executables
+            eng.align_packed(P, plen, T, tlen, output=output)
+        t_score = _best_of(
+            lambda: eng.align_packed(P, plen, T, tlen, output="score"))
+        t_cigar = _best_of(
+            lambda: eng.align_packed(P, plen, T, tlen, output="cigar"))
+        rows.append((f"cigar/{backend}",
+                     t_cigar / pairs * 1e6,
+                     f"score={pairs / t_score:,.0f}pairs/s "
+                     f"cigar={pairs / t_cigar:,.0f}pairs/s "
+                     f"overhead={t_cigar / t_score:.2f}x"))
+
+    # trace-memory ratio: packed words vs full offset history, one bucket
+    s_max, k_max = problem_bounds(wfa_paper.pen, plen, tlen, edit_frac)
+    n = min(pairs, 256)
+    full = get_backend("ref").variant("cigar")(
+        P[:n], T[:n], plen[:n], tlen[:n], pen=wfa_paper.pen,
+        s_max=s_max, k_max=k_max)
+    packed = get_backend("ring").variant("cigar")(
+        P[:n], T[:n], plen[:n], tlen[:n], pen=wfa_paper.pen,
+        s_max=s_max, k_max=k_max)
+    fb, pb = cigar_mod.trace_nbytes(full), cigar_mod.trace_nbytes(packed)
+    rows.append(("cigar/trace_memory", 0.0,
+                 f"full={fb / 1e6:.2f}MB packed={pb / 1e6:.3f}MB "
+                 f"ratio={fb / pb:.1f}x"))
+    return rows

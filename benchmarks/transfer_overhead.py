@@ -48,14 +48,14 @@ def run(pairs: int = 8192, read_len: int = 100,
         # otherwise swamps the few-percent overlap signal.  The reported
         # stats come from the best sync run so kernel_frac matches sync=.
         scores, stats, t_sync = _sync(eng, P, plen, T, tlen)
-        streamed, _, t_stream = run_streamed(eng, P, plen, T, tlen,
-                                             submit_pairs=wave)
+        streamed, _, _, t_stream = run_streamed(eng, P, plen, T, tlen,
+                                                submit_pairs=wave)
         _, stats2, t_sync2 = _sync(eng, P, plen, T, tlen)
         if t_sync2 < t_sync:
             t_sync, stats = t_sync2, stats2
         t_stream = min(t_stream,
                        run_streamed(eng, P, plen, T, tlen,
-                                    submit_pairs=wave)[2])
+                                    submit_pairs=wave)[3])
         assert np.array_equal(scores, streamed), "sync/stream score mismatch"
         frac = stats.t_kernel / max(stats.pim.t_total, 1e-12)
         rows.append((f"transfer/wave{wave}",

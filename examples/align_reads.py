@@ -1,11 +1,15 @@
 """The paper's scenario end-to-end: generate read pairs at an edit threshold,
 stream them through the engine's AlignmentSession (async submits, pipelined
 waves, out-of-order gather — the paper's transfer/compute overlap), and
-report Total vs Kernel throughput (Fig. 1's decomposition).
+report Total vs Kernel throughput (Fig. 1's decomposition).  ``--output
+cigar`` streams full alignments (packed backtrace + identity stats);
+``--output sam`` writes SAM-style records.
 
     PYTHONPATH=src python examples/align_reads.py --pairs 20000 --edit-frac 0.02
     PYTHONPATH=src python examples/align_reads.py --mode both --pairs 8192
     PYTHONPATH=src python examples/align_reads.py --backend kernel --pairs 512
+    PYTHONPATH=src python examples/align_reads.py --output cigar --verify 128
+    PYTHONPATH=src python examples/align_reads.py --output sam --sam-out out.sam
     PYTHONPATH=src python examples/align_reads.py --no-bucket --no-adaptive
 """
 import sys

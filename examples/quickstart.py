@@ -3,10 +3,14 @@
 One object covers every alignment scenario:
 
 * ``AlignmentEngine(backend=...)`` picks an execution strategy from the
-  backend registry — ``"ref"`` (full history, CIGARs), ``"ring"``
-  (score-only throughput), ``"kernel"`` (Pallas TPU kernel), ``"shardmap"``
-  (per-shard termination on a mesh) — and plug-ins can
+  backend registry — ``"ref"`` (pure-jnp reference), ``"ring"``
+  (rolling-window throughput), ``"kernel"`` (Pallas TPU kernel),
+  ``"shardmap"`` (per-shard termination on a mesh) — and plug-ins can
   ``register_backend`` their own without touching core code.
+* Every call picks an output mode: ``output="score"`` (default) or
+  ``output="cigar"`` — full alignments on *any* built-in backend, via the
+  packed 2-bit backtrace (``ring``/``kernel``/``shardmap``) or the full
+  history (``ref``).
 * Mixed-length batches are split into power-of-two length buckets, so short
   pairs never pay the longest pair's padded band; compiled executables are
   cached per bucket shape, so serving-time calls re-trace nothing.
@@ -32,14 +36,17 @@ from repro.core.gotoh import gotoh_score
 print("registered backends:", available_backends())
 
 # -- 1. score + CIGAR for a handful of pairs ------------------------------
-engine = AlignmentEngine(DEFAULT, backend="ref", with_cigar=True)
+# output="cigar" works on every built-in backend: "ring"/"kernel" record a
+# packed 2-bit backtrace (~16x smaller than "ref"'s full history)
+engine = AlignmentEngine(DEFAULT, backend="ring")
 patterns = ["ACGTTAGCCA", "GATTACA", "TTTTTTTT"]
 texts = ["ACGTCAGCCA", "GATTTACA", "TTTT"]
-res = engine.align(patterns, texts)
+res = engine.align(patterns, texts, output="cigar")
 
 print("gap-affine penalties:", DEFAULT)
-for p, t, s, c in zip(patterns, texts, res.scores, res.cigar_strings()):
-    print(f"  {p:12s} vs {t:12s} -> cost {s:3d}  cigar {c}")
+for p, t, s, c, cc in zip(patterns, texts, res.scores, res.cigar_strings(),
+                          res.cigar_strings("classic")):
+    print(f"  {p:12s} vs {t:12s} -> cost {s:3d}  cigar {c}  ({cc})")
 
 # -- 2. exactness: WFA == dense Gotoh DP (the paper's correctness contract)
 for p, t, s in zip(patterns, texts, res.scores):

@@ -2,8 +2,9 @@
 PIM-style (scatter / align-without-communication / gather), adapted to TPU.
 """
 from repro.core.penalties import DEFAULT, Penalties, band_bound, problem_dims, score_bound  # noqa: F401
-from repro.core.wavefront import WFAResult, wfa_forward, wfa_scores  # noqa: F401
-from repro.core.backends import available_backends, get_backend, register_backend  # noqa: F401
+from repro.core.wavefront import WFAResult, wfa_forward, wfa_scores, wfa_scores_packed  # noqa: F401
+from repro.core.backends import available_backends, cigar_backends, get_backend, register_backend  # noqa: F401
+from repro.core.cigar import TracebackError, cigar_identity, cigar_string  # noqa: F401
 from repro.core.engine import (AlignmentEngine, EngineResult, EngineStats,  # noqa: F401
                                encode, pack_batch, problem_bounds)
 from repro.core.session import AlignmentSession, SessionStats, Ticket  # noqa: F401

@@ -31,6 +31,13 @@ __all__ = ["AlignResult", "WFAligner", "Seq", "encode", "pack_batch",
            "problem_bounds"]
 
 
+# The char map this deprecated API always emitted ('M' = match only, 'X' =
+# mismatch) — frozen here so legacy callers' output never shifts under
+# them; new code uses EngineResult.cigar_strings(mode="extended"|"classic").
+_LEGACY_CHARS = {cigar_mod.OP_M: "M", cigar_mod.OP_X: "X",
+                 cigar_mod.OP_I: "I", cigar_mod.OP_D: "D"}
+
+
 @dataclasses.dataclass
 class AlignResult:
     scores: np.ndarray                      # [B] int32; -1 = exceeded s_max
@@ -40,8 +47,10 @@ class AlignResult:
     k_max: int
 
     def cigar_strings(self) -> List[str]:
-        assert self.cigars is not None, "align with with_cigar=True"
-        return [cigar_mod.cigar_string(c) for c in self.cigars]
+        if self.cigars is None:
+            raise ValueError("align with with_cigar=True")
+        return [cigar_mod.run_length_string(c, _LEGACY_CHARS)
+                for c in self.cigars]
 
 
 class WFAligner:

@@ -14,11 +14,22 @@ Contract — a backend callable has the signature::
 with ``pattern``/``text`` ``[B, L]`` int32 device/host arrays, ``plen``/
 ``tlen`` ``[B]`` int32, and static ``pen``/``s_max``/``k_max``.  It must be
 jit-traceable (the engine compiles one executable per bucket shape around
-it).  Backends that keep the full wavefront history set ``supports_cigar``;
-backends that shard over a device mesh set ``needs_mesh`` and receive the
-engine's ``mesh`` as a keyword.
+it).
 
-Two hooks tune how the engine *drives* a backend (both optional):
+Every backend serves two *output modes* (the engine's
+``output="score" | "cigar"``):
+
+* ``fn`` — the score-only throughput path;
+* ``trace_variant`` — same signature, but the returned ``WFAResult`` also
+  carries a trace that ``core.cigar`` can turn into exact CIGARs: either
+  the full ``[s_max+1, B, K]`` offset history (``m_hist``/``i_hist``/
+  ``d_hist``) or the ~16x smaller packed 2-bit provenance words
+  (``m_bt``/``i_bt``/``d_bt``).  ``supports_cigar`` is simply "has a
+  trace variant"; score-only plug-ins may omit it.
+
+Backends that shard over a device mesh set ``needs_mesh`` and receive the
+engine's ``mesh`` as a keyword.  Two further hooks tune how the engine
+*drives* a backend (both optional):
 
 * ``donate_args`` — positional indices of ``(pattern, text, plen, tlen)``
   whose device buffers may be donated to the executable
@@ -31,13 +42,18 @@ Two hooks tune how the engine *drives* a backend (both optional):
   wave through it, so a backend can split a wave across streams, add
   tracing, or stage inputs its own way without touching engine code.
 
-Built-ins:
+Built-ins (all CIGAR-capable):
 
-* ``"ref"``      — full-history pure-jnp WFA (CIGAR traceback capable)
-* ``"ring"``     — rolling-window pure-jnp WFA (score-only throughput mode)
-* ``"kernel"``   — the Pallas TPU kernel (score-only; interpret=True on CPU)
+* ``"ref"``      — pure-jnp WFA; trace variant keeps the full offset
+                   history (the memory-hungry oracle path)
+* ``"ring"``     — rolling-window pure-jnp WFA; trace variant records the
+                   packed backtrace alongside the rings
+* ``"kernel"``   — the Pallas TPU kernel (interpret=True on CPU); trace
+                   variant OR-accumulates packed words in VMEM
 * ``"shardmap"`` — ring solver inside ``shard_map`` (per-shard termination,
-  zero collectives — the paper's "no inter-DPU communication")
+                   zero collectives — the paper's "no inter-DPU
+                   communication"); trace variant runs the packed solver
+                   per shard
 """
 from __future__ import annotations
 
@@ -53,29 +69,55 @@ from repro.core import wavefront as wf
 class BackendSpec:
     name: str
     fn: Callable[..., wf.WFAResult]
-    supports_cigar: bool = False
+    trace_variant: Optional[Callable[..., wf.WFAResult]] = None
     needs_mesh: bool = False
     donate_args: Tuple[int, ...] = ()
     dispatch: Optional[Callable[..., wf.WFAResult]] = None
     doc: str = ""
+
+    @property
+    def supports_cigar(self) -> bool:
+        return self.trace_variant is not None
+
+    def variant(self, output: str) -> Callable[..., wf.WFAResult]:
+        """The callable serving one output mode ('score' or 'cigar')."""
+        if output == "score":
+            return self.fn
+        if output == "cigar":
+            if self.trace_variant is None:
+                raise ValueError(
+                    f"backend {self.name!r} is score-only (no trace "
+                    f"variant); CIGAR-capable backends: "
+                    f"{cigar_backends()}")
+            return self.trace_variant
+        raise ValueError(f"unknown output mode {output!r}; "
+                         "use 'score' or 'cigar'")
 
 
 _REGISTRY: Dict[str, BackendSpec] = {}
 
 
 def register_backend(name: str, fn: Optional[Callable] = None, *,
-                     supports_cigar: bool = False, needs_mesh: bool = False,
+                     trace_variant: Optional[Callable] = None,
+                     supports_cigar: bool = False,
+                     needs_mesh: bool = False,
                      donate_args: Tuple[int, ...] = (),
                      dispatch: Optional[Callable] = None,
                      doc: str = ""):
     """Register an alignment backend (usable as a decorator).
 
     Re-registering a name replaces the previous entry (useful for tests and
-    for swapping in tuned variants).
+    for swapping in tuned variants).  ``supports_cigar=True`` is the
+    deprecated pre-output-mode spelling for backends whose ``fn`` itself
+    returns a traceback-capable ``WFAResult`` (full history, like the old
+    ``ref``): it makes ``fn`` double as the trace variant.
     """
     def _add(f):
+        tv = trace_variant
+        if tv is None and supports_cigar:
+            tv = f
         _REGISTRY[name] = BackendSpec(name=name, fn=f,
-                                      supports_cigar=supports_cigar,
+                                      trace_variant=tv,
                                       needs_mesh=needs_mesh,
                                       donate_args=tuple(donate_args),
                                       dispatch=dispatch,
@@ -103,28 +145,52 @@ def available_backends() -> List[str]:
     return sorted(_REGISTRY)
 
 
+def cigar_backends() -> List[str]:
+    """Backends with a trace variant (serve ``output='cigar'``)."""
+    return sorted(n for n, s in _REGISTRY.items() if s.supports_cigar)
+
+
 # ---------------------------------------------------------------------------
 # Built-in backends.
 
 
-@register_backend("ref", supports_cigar=True,
-                  doc="full-history pure-jnp WFA (CIGAR traceback)")
-def _ref_backend(pattern, text, plen, tlen, *, pen, s_max, k_max):
+def _ref_trace(pattern, text, plen, tlen, *, pen, s_max, k_max):
     return wf.wfa_forward(pattern, text, plen, tlen, pen=pen,
                           s_max=s_max, k_max=k_max, keep_history=True)
 
 
+@register_backend("ref", trace_variant=_ref_trace,
+                  doc="pure-jnp WFA; full-history CIGAR traceback")
+def _ref_backend(pattern, text, plen, tlen, *, pen, s_max, k_max):
+    return wf.wfa_forward(pattern, text, plen, tlen, pen=pen,
+                          s_max=s_max, k_max=k_max, keep_history=False)
+
+
+def _ring_trace(pattern, text, plen, tlen, *, pen, s_max, k_max):
+    return wf.wfa_scores_packed(pattern, text, plen, tlen, pen=pen,
+                                s_max=s_max, k_max=k_max)
+
+
 # The [B] int32 length buffers are donatable: the [B] int32 score output
 # can alias one of them, so streamed waves recycle device memory.
-@register_backend("ring", donate_args=(2, 3),
-                  doc="rolling-window pure-jnp WFA (score-only)")
+@register_backend("ring", donate_args=(2, 3), trace_variant=_ring_trace,
+                  doc="rolling-window pure-jnp WFA; packed backtrace")
 def _ring_backend(pattern, text, plen, tlen, *, pen, s_max, k_max):
     return wf.wfa_scores(pattern, text, plen, tlen, pen=pen,
                          s_max=s_max, k_max=k_max)
 
 
-@register_backend("kernel", donate_args=(2, 3),
-                  doc="Pallas TPU kernel (score-only; interpret on CPU)")
+def _kernel_trace(pattern, text, plen, tlen, *, pen, s_max, k_max):
+    from repro.kernels.wfa import ops as kops  # lazy: pallas import is heavy
+    score, m_bt, i_bt, d_bt = kops.wfa_align_trace(
+        pattern, text, plen, tlen, pen=pen, s_max=s_max, k_max=k_max)
+    return wf.WFAResult(score, None, None, None, jnp.int32(s_max),
+                        m_bt, i_bt, d_bt)
+
+
+@register_backend("kernel", donate_args=(2, 3), trace_variant=_kernel_trace,
+                  doc="Pallas TPU kernel (interpret on CPU); packed "
+                      "backtrace in VMEM")
 def _kernel_backend(pattern, text, plen, tlen, *, pen, s_max, k_max):
     from repro.kernels.wfa import ops as kops  # lazy: pallas import is heavy
     score = kops.wfa_align(pattern, text, plen, tlen, pen=pen,
@@ -132,9 +198,17 @@ def _kernel_backend(pattern, text, plen, tlen, *, pen, s_max, k_max):
     return wf.WFAResult(score, None, None, None, jnp.int32(s_max))
 
 
-@register_backend("shardmap", needs_mesh=True,
+def _shardmap_trace(pattern, text, plen, tlen, *, pen, s_max, k_max, mesh):
+    score, m_bt, i_bt, d_bt = wf.wfa_trace_shardmap(
+        pattern, text, plen, tlen, pen=pen, s_max=s_max, k_max=k_max,
+        mesh=mesh)
+    return wf.WFAResult(score, None, None, None, jnp.int32(s_max),
+                        m_bt, i_bt, d_bt)
+
+
+@register_backend("shardmap", needs_mesh=True, trace_variant=_shardmap_trace,
                   doc="ring solver in shard_map: per-shard termination, "
-                      "zero collectives")
+                      "zero collectives; per-shard packed backtrace")
 def _shardmap_backend(pattern, text, plen, tlen, *, pen, s_max, k_max, mesh):
     score = wf.wfa_scores_shardmap(pattern, text, plen, tlen, pen=pen,
                                    s_max=s_max, k_max=k_max, mesh=mesh)

@@ -1,22 +1,67 @@
-"""WFA traceback: wavefront history -> CIGAR op sequences.
+"""WFA traceback: wavefront provenance -> CIGAR op sequences.
 
-Traceback is pointer-chasing over the [s_max+1, B, K] M/I/D history — an
-inherently sequential, data-dependent walk, so (like the reference WFA2-lib,
-and like the paper's host-side result handling) it runs on the host in numpy.
-The throughput path (scores) never needs it; tests and the alignment examples
-do.
+Two trace encodings come off the device (``core.wavefront``):
+
+* **full history** — three ``[s_max+1, B, K]`` int32 offset arrays
+  (``wfa_forward(keep_history=True)``, the ``ref`` backend).  Traceback is
+  the classic pointer chase over stored offsets.
+* **packed backtrace** — three ``[n_trace_words, B, K]`` int32 arrays of
+  2-bit per-cell provenance codes (``wfa_scores_packed`` / the Pallas trace
+  kernel), ~16x smaller.  Traceback decodes the packed words into the edit
+  chain (phase A: walk codes from the end cell back to the origin), then
+  replays that chain forward, re-deriving every match run by greedy
+  extension against the sequences (phase B).  This is exact: each stored M
+  wavefront value is the *maximal* extension, so replaying maximal LCP
+  extension at every M-cell entry reproduces the forward offsets bit for
+  bit.
+
+Traceback is a data-dependent walk, so (like the reference WFA2-lib, and
+like the paper's host-side result handling) it runs on the host in numpy.
+Malformed provenance (a bug, or corrupted words) raises
+:class:`TracebackError` carrying the failing coordinates — never a bare
+``assert`` (those are stripped under ``python -O``).
 
 Op codes match ``core.gotoh.score_cigar``: 0=M(match) 1=X(mismatch)
 2=I(insert, consumes text) 3=D(delete, consumes pattern); -1 = padding.
 """
 from __future__ import annotations
 
+from typing import List, Optional
+
 import numpy as np
 
 from repro.core.penalties import Penalties
-from repro.core.wavefront import NEG, _VALID_THRESH
+from repro.core.wavefront import (BT_GAP_EXT, BT_GAP_OPEN, BT_M_FROM_D,
+                                  BT_M_FROM_I, BT_M_FROM_X, NEG,
+                                  TRACE_CELLS_PER_WORD, _VALID_THRESH)
 
 OP_M, OP_X, OP_I, OP_D = 0, 1, 2, 3
+
+_OP_CHARS_EXT = {OP_M: "=", OP_X: "X", OP_I: "I", OP_D: "D"}   # SAM 1.4
+_OP_CHARS_CLASSIC = {OP_M: "M", OP_X: "M", OP_I: "I", OP_D: "D"}
+
+
+class TracebackError(RuntimeError):
+    """Inconsistent wavefront provenance during traceback.
+
+    Carries the failing coordinates: ``pair`` (batch row), ``s`` (score),
+    ``k`` (diagonal) and ``h`` (text offset, when known) so a corrupted
+    trace pinpoints the cell instead of dying in a bare assert (which
+    ``python -O`` would strip entirely).
+    """
+
+    def __init__(self, msg: str, *, pair: Optional[int] = None,
+                 s: Optional[int] = None, k: Optional[int] = None,
+                 h: Optional[int] = None):
+        self.pair, self.s, self.k, self.h = pair, s, k, h
+        where = ", ".join(f"{n}={v}" for n, v in
+                          (("pair", pair), ("s", s), ("k", k), ("h", h))
+                          if v is not None)
+        super().__init__(f"{msg} ({where})" if where else msg)
+
+
+# ---------------------------------------------------------------------------
+# Full-history traceback (ref backend): pointer chase over stored offsets.
 
 
 def _get(hist, s, k, k_max):
@@ -28,7 +73,8 @@ def _get(hist, s, k, k_max):
 
 
 def traceback_one(m_hist, i_hist, d_hist, pen: Penalties, score: int,
-                  plen: int, tlen: int, k_max: int) -> np.ndarray:
+                  plen: int, tlen: int, k_max: int,
+                  pair: Optional[int] = None) -> np.ndarray:
     """Traceback for one pair. hist arrays are [s_max+1, K] for this pair."""
     if score < 0:
         return np.empty((0,), np.int8)
@@ -43,7 +89,9 @@ def traceback_one(m_hist, i_hist, d_hist, pen: Penalties, score: int,
         guard -= 1
         if state == "M":
             if s == 0:
-                assert k == 0, (s, k, h)
+                if k != 0:
+                    raise TracebackError("origin cell off diagonal 0",
+                                         pair=pair, s=s, k=k, h=h)
                 ops.extend([OP_M] * h)
                 break
             cand_x = _get(m_hist, s - x, k, k_max)
@@ -51,7 +99,9 @@ def traceback_one(m_hist, i_hist, d_hist, pen: Penalties, score: int,
             i_val = _get(i_hist, s, k, k_max)
             d_val = _get(d_hist, s, k, k_max)
             pre = max(cand_x, i_val, d_val)
-            assert pre > _VALID_THRESH and h >= pre, (s, k, h, pre)
+            if pre <= _VALID_THRESH or h < pre:
+                raise TracebackError("no valid M predecessor",
+                                     pair=pair, s=s, k=k, h=h)
             ops.extend([OP_M] * (h - pre))
             h = pre
             if pre == cand_x:
@@ -74,7 +124,9 @@ def traceback_one(m_hist, i_hist, d_hist, pen: Penalties, score: int,
                 # stay in I (gap extension)
             else:
                 opn = _get(m_hist, s - o - e, k - 1, k_max)
-                assert opn > _VALID_THRESH and h == opn + 1, (s, k, h, opn)
+                if opn <= _VALID_THRESH or h != opn + 1:
+                    raise TracebackError("no valid I predecessor",
+                                         pair=pair, s=s, k=k, h=h)
                 s -= o + e
                 k -= 1
                 h -= 1
@@ -88,12 +140,15 @@ def traceback_one(m_hist, i_hist, d_hist, pen: Penalties, score: int,
                 # stay in D
             else:
                 opn = _get(m_hist, s - o - e, k + 1, k_max)
-                assert opn > _VALID_THRESH and h == opn, (s, k, h, opn)
+                if opn <= _VALID_THRESH or h != opn:
+                    raise TracebackError("no valid D predecessor",
+                                         pair=pair, s=s, k=k, h=h)
                 s -= o + e
                 k += 1
                 state = "M"
     else:
-        raise RuntimeError("traceback did not terminate")
+        raise TracebackError("traceback did not terminate",
+                             pair=pair, s=s, k=k, h=h)
     return np.asarray(ops[::-1], np.int8)
 
 
@@ -107,18 +162,217 @@ def traceback_batch(result, pen: Penalties, plen, tlen, k_max: int):
     tlen = np.asarray(tlen)
     return [
         traceback_one(m_h[:, b], i_h[:, b], d_h[:, b], pen, int(scores[b]),
-                      int(plen[b]), int(tlen[b]), k_max)
+                      int(plen[b]), int(tlen[b]), k_max, pair=b)
         for b in range(scores.shape[0])
     ]
 
 
-def cigar_string(ops: np.ndarray) -> str:
-    """Run-length encode ops to a CIGAR-like string (M/X/I/D)."""
-    chars = {OP_M: "M", OP_X: "X", OP_I: "I", OP_D: "D"}
+# ---------------------------------------------------------------------------
+# Packed-backtrace traceback: decode 2-bit provenance words, replay forward.
+
+
+def unpack_codes(words: np.ndarray, s_max: int) -> np.ndarray:
+    """[n_words, ..., K] packed int32 -> [s_max+1, ..., K] uint8 codes.
+
+    Vectorized word decode (tests and tooling; the traceback walk below
+    decodes per-access instead, touching only the O(score) cells it visits).
+    """
+    words = np.asarray(words)
+    s = np.arange(s_max + 1)
+    w, off = s // TRACE_CELLS_PER_WORD, 2 * (s % TRACE_CELLS_PER_WORD)
+    shaped = (slice(None),) + (None,) * (words.ndim - 1)
+    return ((words[w] >> off[shaped]) & 3).astype(np.uint8)
+
+
+def _code_at(words: np.ndarray, s: int, k: int, k_center: int) -> int:
+    """2-bit code of cell (s, k) from one pair's [n_words, K] packed words."""
+    j = k + k_center
+    if s < 0 or j < 0 or j >= words.shape[-1] \
+            or s // TRACE_CELLS_PER_WORD >= words.shape[0]:
+        return 0
+    return (int(words[s // TRACE_CELLS_PER_WORD, j])
+            >> (2 * (s % TRACE_CELLS_PER_WORD))) & 3
+
+
+def _lcp(p: np.ndarray, t: np.ndarray, v: int, h: int) -> int:
+    """Greedy match run length of pattern[v:] vs text[h:] (vectorized)."""
+    n = min(len(p) - v, len(t) - h)
+    if n <= 0:
+        return 0
+    neq = np.flatnonzero(p[v:v + n] != t[h:h + n])
+    return n if neq.size == 0 else int(neq[0])
+
+
+def traceback_packed_one(m_bt, i_bt, d_bt, pen: Penalties, score: int,
+                         pattern, text, plen: int, tlen: int,
+                         pair: Optional[int] = None) -> np.ndarray:
+    """Traceback for one pair from packed provenance words.
+
+    ``m_bt/i_bt/d_bt`` are this pair's ``[n_words, K]`` int32 code words;
+    ``pattern``/``text`` the (padded) integer code rows — needed because
+    match runs are *replayed*, not stored.  The diagonal center is
+    ``K // 2`` (true for both the jnp layout ``K = 2*k_max+1`` and the
+    kernel's lane-padded layout).
+    """
+    if score < 0:
+        return np.empty((0,), np.int8)
+    x, o, e = pen.x, pen.o, pen.e
+    kc = m_bt.shape[-1] // 2
+    p = np.asarray(pattern)[:plen]
+    t = np.asarray(text)[:tlen]
+
+    # Phase A: walk provenance codes from the end cell to the origin.
+    # Emits the *edit* chain only (no match runs) back-to-front; each op is
+    # tagged with whether forward replay re-enters an M cell after it (and
+    # so must re-extend matches there).
+    s, k, state = int(score), tlen - plen, "M"
+    rev: list[tuple[int, bool]] = []          # (op, extend_after)
+    close = False                             # next gap op folds into M
+    guard = 4 * (plen + tlen) + 4 * (s + 1) + 8
+    while guard > 0:
+        guard -= 1
+        if state == "M":
+            if s == 0:
+                if k != 0:
+                    raise TracebackError("origin cell off diagonal 0",
+                                         pair=pair, s=s, k=k)
+                break
+            c = _code_at(m_bt, s, k, kc)
+            if c == BT_M_FROM_X:
+                rev.append((OP_X, True))
+                s -= x
+            elif c == BT_M_FROM_I:
+                state, close = "I", True
+            elif c == BT_M_FROM_D:
+                state, close = "D", True
+            else:
+                raise TracebackError("invalid M provenance code",
+                                     pair=pair, s=s, k=k)
+        elif state == "I":
+            c = _code_at(i_bt, s, k, kc)
+            if c == 0:
+                raise TracebackError("invalid I provenance code",
+                                     pair=pair, s=s, k=k)
+            rev.append((OP_I, close))
+            close = False
+            k -= 1
+            if c == BT_GAP_EXT:
+                s -= e
+            else:
+                s -= o + e
+                state = "M"
+        else:  # "D"
+            c = _code_at(d_bt, s, k, kc)
+            if c == 0:
+                raise TracebackError("invalid D provenance code",
+                                     pair=pair, s=s, k=k)
+            rev.append((OP_D, close))
+            close = False
+            k += 1
+            if c == BT_GAP_EXT:
+                s -= e
+            else:
+                s -= o + e
+                state = "M"
+    else:
+        raise TracebackError("packed traceback did not terminate",
+                             pair=pair, s=s, k=k)
+
+    # Phase B: replay the edit chain forward, re-deriving each match run by
+    # maximal extension (exactly the forward pass's extend step).
+    ops: list[int] = []
+    v = h = 0
+    r = _lcp(p, t, v, h)
+    ops.extend([OP_M] * r)
+    v += r
+    h += r
+    for op, extend_after in reversed(rev):
+        if op == OP_X:
+            if v >= plen or h >= tlen:
+                raise TracebackError("mismatch op past sequence end",
+                                     pair=pair, h=h)
+            v += 1
+            h += 1
+        elif op == OP_I:
+            if h >= tlen:
+                raise TracebackError("insertion op past text end",
+                                     pair=pair, h=h)
+            h += 1
+        else:  # OP_D
+            if v >= plen:
+                raise TracebackError("deletion op past pattern end",
+                                     pair=pair, h=h)
+            v += 1
+        ops.append(op)
+        if extend_after:
+            r = _lcp(p, t, v, h)
+            ops.extend([OP_M] * r)
+            v += r
+            h += r
+    if v != plen or h != tlen:
+        raise TracebackError(
+            f"replay consumed ({v}, {h}) of ({plen}, {tlen})",
+            pair=pair, h=h)
+    return np.asarray(ops, np.int8)
+
+
+def traceback_packed_batch(result, pen: Penalties, pattern, text,
+                           plen, tlen):
+    """-> list of per-pair op arrays (ragged) from packed provenance."""
+    m_bt = np.asarray(result.m_bt)
+    i_bt = np.asarray(result.i_bt)
+    d_bt = np.asarray(result.d_bt)
+    scores = np.asarray(result.score)
+    pattern = np.asarray(pattern)
+    text = np.asarray(text)
+    plen = np.asarray(plen).reshape(-1)
+    tlen = np.asarray(tlen).reshape(-1)
+    return [
+        traceback_packed_one(m_bt[:, b], i_bt[:, b], d_bt[:, b], pen,
+                             int(scores[b]), pattern[b], text[b],
+                             int(plen[b]), int(tlen[b]), pair=b)
+        for b in range(scores.shape[0])
+    ]
+
+
+def traceback_result(result, pen: Penalties, *, pattern, text, plen, tlen,
+                     k_max: int):
+    """Dispatch on the trace encoding a ``WFAResult`` carries.
+
+    Full offset history (``ref``) -> pointer-chase traceback; packed
+    provenance words (``ring``/``kernel``/``shardmap``) -> decode + replay.
+    """
+    if getattr(result, "m_hist", None) is not None:
+        return traceback_batch(result, pen, plen, tlen, k_max)
+    if getattr(result, "m_bt", None) is not None:
+        return traceback_packed_batch(result, pen, pattern, text, plen, tlen)
+    raise ValueError("result carries no trace (score-only backend output); "
+                     "run the backend's trace variant (output='cigar')")
+
+
+def trace_nbytes(result) -> int:
+    """Host-visible bytes of whichever trace encoding ``result`` carries."""
+    total = 0
+    for f in ("m_hist", "i_hist", "d_hist", "m_bt", "i_bt", "d_bt"):
+        arr = getattr(result, f, None)
+        if arr is not None:
+            total += arr.size * arr.dtype.itemsize
+    return total
+
+
+# ---------------------------------------------------------------------------
+# CIGAR formatting / summary helpers.
+
+
+def run_length_string(ops: np.ndarray, chars: dict) -> str:
+    """Run-length encode ops (-1 padding skipped) under an op->char map."""
     out = []
     run_c, run_n = None, 0
     for op in ops:
-        c = chars[int(op)]
+        op = int(op)
+        if op < 0:
+            continue
+        c = chars[op]
         if c == run_c:
             run_n += 1
         else:
@@ -128,3 +382,33 @@ def cigar_string(ops: np.ndarray) -> str:
     if run_c is not None:
         out.append(f"{run_n}{run_c}")
     return "".join(out)
+
+
+def cigar_string(ops: np.ndarray, mode: str = "extended") -> str:
+    """Run-length encode ops to a CIGAR string.
+
+    ``mode="extended"`` (default) distinguishes matches and mismatches the
+    SAM 1.4 way (``=`` / ``X``); ``mode="classic"`` folds both into ``M``
+    (pre-1.4 CIGAR, what most downstream tools expect).
+    """
+    if mode == "extended":
+        chars = _OP_CHARS_EXT
+    elif mode == "classic":
+        chars = _OP_CHARS_CLASSIC
+    else:
+        raise ValueError(f"unknown cigar mode {mode!r}; "
+                         "use 'extended' or 'classic'")
+    return run_length_string(ops, chars)
+
+
+def cigar_identity(ops: np.ndarray) -> float:
+    """Fraction of alignment columns that are matches (gaps count as
+    columns; the read-mapping 'BLAST identity').  Empty alignments (both
+    sequences empty) are identical by convention — callers must mask
+    *unresolved* pairs (``score == -1``, also empty ops) themselves, as
+    :meth:`EngineResult.cigar_identities` does (NaN)."""
+    ops = np.asarray(ops)
+    ops = ops[ops >= 0]
+    if ops.size == 0:
+        return 1.0
+    return float((ops == OP_M).sum()) / float(ops.size)

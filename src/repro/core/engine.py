@@ -34,6 +34,14 @@ blocking pass through an :class:`~repro.core.session.AlignmentSession`, and
 out-of-order ``as_completed()`` gather (the paper's transfer/compute
 overlap, the 4.87x-vs-37.4x gap).
 
+Every entry point takes an **output mode** — ``output="score"`` (the
+default; throughput path) or ``output="cigar"`` (full alignments).  CIGAR
+mode compiles each backend's *trace variant* (``core.backends``): ``ref``
+keeps the full offset history, while ``ring``/``kernel``/``shardmap``
+record the ~16x smaller packed 2-bit backtrace, so every backend emits
+exact CIGARs — including pairs that overflow the optimistic bound and
+re-run through the exact-bound recovery pass.
+
 Quickstart::
 
     from repro.core.engine import AlignmentEngine
@@ -43,10 +51,14 @@ Quickstart::
     res.scores        # [B] exact gap-affine costs (Gotoh-identical)
     res.stats         # buckets, cache hits, overflow recoveries, PIM phases
 
+    full = eng.align(patterns, texts, output="cigar")
+    full.cigar_strings()             # SAM 1.4 "="/"X" run-length CIGARs
+    full.cigar_strings("classic")    # pre-1.4 "M" CIGARs
+
     with eng.stream(max_inflight_waves=2) as sess:   # pipelined serving
-        tickets = [sess.submit(ps, ts) for ps, ts in request_chunks]
+        tickets = [sess.submit(ps, ts, output="cigar") for ps, ts in chunks]
         for ticket in sess.as_completed():           # out-of-order gather
-            consume(ticket.result().scores)
+            consume(ticket.result().cigars)
 """
 from __future__ import annotations
 
@@ -241,9 +253,25 @@ class EngineResult:
     k_max: int
     stats: EngineStats = dataclasses.field(default_factory=EngineStats)
 
-    def cigar_strings(self) -> List[str]:
-        assert self.cigars is not None, "align with with_cigar=True"
-        return [cigar_mod.cigar_string(c) for c in self.cigars]
+    def cigar_strings(self, mode: str = "extended") -> List[str]:
+        """Run-length CIGAR strings (``mode``: SAM 1.4 'extended' ``=``/``X``
+        or 'classic' ``M``)."""
+        if self.cigars is None:
+            raise ValueError("no CIGARs: align with output='cigar'")
+        return [cigar_mod.cigar_string(c, mode) for c in self.cigars]
+
+    def cigar_identities(self) -> np.ndarray:
+        """[B] float fraction of matching alignment columns per pair.
+
+        Unresolved pairs (``score == -1``: no alignment was produced) are
+        NaN, not 1.0 — an empty op array only means "identical" when the
+        pair actually resolved (both sequences empty).
+        """
+        if self.cigars is None:
+            raise ValueError("no CIGARs: align with output='cigar'")
+        return np.asarray([
+            cigar_mod.cigar_identity(c) if s >= 0 else np.nan
+            for s, c in zip(self.scores, self.cigars)])
 
 
 class _Executable:
@@ -258,12 +286,12 @@ class _Executable:
     """
 
     def __init__(self, spec: BackendSpec, pen: Penalties, s_max: int,
-                 k_max: int, mesh: Optional[Mesh]):
+                 k_max: int, mesh: Optional[Mesh], output: str = "score"):
         self.s_max = s_max
         self.k_max = k_max
         self._traces = [0]
         traces = self._traces
-        backend_fn = spec.fn
+        backend_fn = spec.variant(output)
         self._dispatch = spec.dispatch
         extra = {"mesh": mesh} if spec.needs_mesh else {}
 
@@ -299,8 +327,12 @@ class AlignmentEngine:
         sizes buffers for the exact worst case up front (single pass).
     s_max / k_max : explicit static bounds; setting ``s_max`` pins the score
         cap (no adaptive recovery — unresolved pairs stay ``-1``).
-    with_cigar : keep wavefront history and emit CIGARs (needs a backend
-        with ``supports_cigar``, i.e. ``"ref"``).
+    output : default output mode for calls that don't name one —
+        ``"score"`` (throughput) or ``"cigar"`` (full alignments via the
+        backend's trace variant).  Every ``align``/``submit`` can override
+        per call.
+    with_cigar : deprecated spelling of ``output="cigar"`` (kept for
+        compatibility; per-call ``output=`` is the API).
     mesh : device mesh for scatter/gather (and for ``needs_mesh`` backends).
     chunk_pairs : max pairs per device wave (the MRAM-capacity analogue).
     bucket_by_length : sort pairs into power-of-two length buckets.
@@ -311,14 +343,20 @@ class AlignmentEngine:
     def __init__(self, pen: Penalties = DEFAULT, *, backend: str = "ring",
                  edit_frac: Optional[float] = None,
                  s_max: Optional[int] = None, k_max: Optional[int] = None,
-                 with_cigar: bool = False, mesh: Optional[Mesh] = None,
+                 output: str = "score", with_cigar: bool = False,
+                 mesh: Optional[Mesh] = None,
                  chunk_pairs: int = 1 << 16, bucket_by_length: bool = True,
                  min_bucket_len: int = 16, adaptive: bool = True):
         spec = get_backend(backend)
-        if with_cigar and not spec.supports_cigar:
+        if with_cigar:
+            output = "cigar"
+        if output not in ("score", "cigar"):
+            raise ValueError(f"unknown output mode {output!r}; "
+                             "use 'score' or 'cigar'")
+        if output == "cigar" and not spec.supports_cigar:
             raise ValueError(
-                f"CIGAR traceback needs a full-history backend "
-                f"(e.g. 'ref'); {backend!r} is score-only")
+                f"CIGAR output needs a backend with a trace variant; "
+                f"{backend!r} is score-only")
         if spec.needs_mesh and mesh is None:
             raise ValueError(f"backend {backend!r} needs a device mesh")
         self.pen = pen
@@ -326,7 +364,7 @@ class AlignmentEngine:
         self.edit_frac = edit_frac
         self._s_max = s_max
         self._k_max = k_max
-        self.with_cigar = with_cigar
+        self.default_output = output
         self.mesh = mesh
         self.chunk_pairs = int(chunk_pairs)
         self.bucket_by_length = bucket_by_length
@@ -335,6 +373,21 @@ class AlignmentEngine:
         self.n_workers = (int(np.prod(list(mesh.shape.values())))
                           if mesh is not None else jax.device_count())
         self._cache: Dict[tuple, _Executable] = {}
+
+    @property
+    def with_cigar(self) -> bool:
+        """Deprecated: whether the *default* output mode emits CIGARs."""
+        return self.default_output == "cigar"
+
+    def resolve_output(self, output: Optional[str]) -> str:
+        """Validate a per-call output mode (None -> the engine default)."""
+        out = self.default_output if output is None else output
+        if out not in ("score", "cigar"):
+            raise ValueError(f"unknown output mode {output!r}; "
+                             "use 'score' or 'cigar'")
+        if out == "cigar":
+            get_backend(self.backend).variant("cigar")  # raises if score-only
+        return out
 
     # -- cache introspection -------------------------------------------------
 
@@ -406,16 +459,18 @@ class AlignmentEngine:
         return tuple(jnp.asarray(a) for a in arrays)
 
     def _executable_for(self, pshape: tuple, tshape: tuple, s_max: int,
-                        k_max: int) -> Tuple["_Executable", bool]:
+                        k_max: int,
+                        output: str = "score") -> Tuple["_Executable", bool]:
         """Cached executable for one rectangular problem shape -> (exe, hit)."""
         spec = get_backend(self.backend)
         # the whole spec in the key: re-registering a backend name (new fn,
-        # donation or dispatch hooks) must not serve stale executables
-        key = (spec, self.pen, pshape, tshape, s_max, k_max)
+        # donation or dispatch hooks) must not serve stale executables.
+        # output mode too: score and trace variants compile differently.
+        key = (spec, self.pen, pshape, tshape, s_max, k_max, output)
         exe = self._cache.get(key)
         if exe is not None:
             return exe, True
-        exe = _Executable(spec, self.pen, s_max, k_max, self.mesh)
+        exe = _Executable(spec, self.pen, s_max, k_max, self.mesh, output)
         self._cache[key] = exe
         return exe, False
 
@@ -437,16 +492,22 @@ class AlignmentEngine:
         return AlignmentSession(self, max_inflight_waves=max_inflight_waves,
                                 wave_pairs=wave_pairs)
 
-    def align(self, patterns: Sequence[Seq],
-              texts: Sequence[Seq]) -> EngineResult:
-        """Align python sequences (str/bytes/int arrays), pairwise."""
+    def align(self, patterns: Sequence[Seq], texts: Sequence[Seq], *,
+              output: Optional[str] = None) -> EngineResult:
+        """Align python sequences (str/bytes/int arrays), pairwise.
+
+        ``output="cigar"`` additionally emits exact per-pair CIGAR op
+        arrays (``EngineResult.cigars``) via the backend's trace variant;
+        ``None`` uses the engine's default mode.
+        """
         assert len(patterns) == len(texts)
         p, plen = pack_batch(patterns)
         t, tlen = pack_batch(texts)
-        return self.align_packed(p, plen, t, tlen)
+        return self.align_packed(p, plen, t, tlen, output=output)
 
     def align_packed(self, p: np.ndarray, plen: np.ndarray, t: np.ndarray,
-                     tlen: np.ndarray) -> EngineResult:
+                     tlen: np.ndarray, *,
+                     output: Optional[str] = None) -> EngineResult:
         """Align pre-packed rectangular batches ([B, L] codes + [B] lens).
 
         Thin blocking wrapper over one streaming session: a single
@@ -456,9 +517,10 @@ class AlignmentEngine:
         from repro.core.session import AlignmentSession
         sess = AlignmentSession(self, max_inflight_waves=1,
                                 _sync_timing=True)
-        ticket = sess.submit_packed(p, plen, t, tlen)
+        ticket = sess.submit_packed(p, plen, t, tlen, output=output)
         sess.drain()
         return ticket.result()
 
-    def align_pair(self, pattern: Seq, text: Seq) -> EngineResult:
-        return self.align([pattern], [text])
+    def align_pair(self, pattern: Seq, text: Seq, *,
+                   output: Optional[str] = None) -> EngineResult:
+        return self.align([pattern], [text], output=output)

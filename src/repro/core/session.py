@@ -24,6 +24,13 @@ time.  :class:`AlignmentSession` is the pipelined execution model behind
   into a recovery queue** instead of stalling their wave — they re-run with
   exact worst-case bounds when a full recovery wave accumulates or at
   drain, exactly like the engine's two-pass scheme (BIMSA's CPU recovery).
+* each submit carries its own **output mode**: ``submit(..., output=
+  "cigar")`` dispatches the backend's trace variant for that ticket's
+  waves (packed backtrace on ``ring``/``kernel``/``shardmap``, full
+  history on ``ref``), tracebacks run at retirement (host-side, under the
+  in-flight kernels), and recovery re-runs go through the traced path too
+  — so out-of-order gather and overflow recycling hand back full
+  alignments, not just scores.
 
 The sync ``engine.align()`` is itself one blocking pass through this class
 (``max_inflight_waves=1`` + per-phase blocking for the Fig. 1 scatter /
@@ -74,14 +81,16 @@ class Ticket:
     (scores in submission row order, per-ticket stats).
     """
 
-    def __init__(self, session: "AlignmentSession", index: int, n_pairs: int):
+    def __init__(self, session: "AlignmentSession", index: int, n_pairs: int,
+                 output: str = "score"):
         eng = session.engine
         self.index = index
         self.n_pairs = n_pairs
+        self.output = output
         self.stats = EngineStats(n_pairs=n_pairs, n_workers=eng.n_workers)
         self._session = session
         self._scores = np.full((n_pairs,), -1, np.int32)
-        self._cigars: Optional[dict] = {} if eng.with_cigar else None
+        self._cigars: Optional[dict] = {} if output == "cigar" else None
         self._p = self._t = self._plen = self._tlen = None
         self._outstanding = n_pairs      # rows without a final score yet
         self._recovery_rows: List[np.ndarray] = []   # overflow awaiting re-run
@@ -110,6 +119,8 @@ class _Wave:
     tlc: np.ndarray
     k_max: int
     recovery: bool
+    pc: Optional[np.ndarray] = None   # padded codes, kept only for CIGAR
+    tc: Optional[np.ndarray] = None   # waves (packed-backtrace replay)
 
 
 class AlignmentSession:
@@ -187,20 +198,27 @@ class AlignmentSession:
 
     # -- submission ----------------------------------------------------------
 
-    def submit(self, patterns: Sequence[Seq],
-               texts: Sequence[Seq]) -> Ticket:
-        """Enqueue one batch of python sequences; returns immediately."""
+    def submit(self, patterns: Sequence[Seq], texts: Sequence[Seq], *,
+               output: Optional[str] = None) -> Ticket:
+        """Enqueue one batch of python sequences; returns immediately.
+
+        ``output="cigar"`` makes this ticket's waves run the backend's
+        trace variant and its result carry per-pair CIGAR op arrays;
+        ``None`` uses the engine's default mode.
+        """
         assert len(patterns) == len(texts)
         p, plen = pack_batch(patterns)
         t, tlen = pack_batch(texts)
-        return self.submit_packed(p, plen, t, tlen)
+        return self.submit_packed(p, plen, t, tlen, output=output)
 
     def submit_packed(self, p: np.ndarray, plen: np.ndarray, t: np.ndarray,
-                      tlen: np.ndarray) -> Ticket:
+                      tlen: np.ndarray, *,
+                      output: Optional[str] = None) -> Ticket:
         """Enqueue pre-packed [B, L] codes + [B] lens; returns immediately."""
         self._check_open()
         n = int(p.shape[0])
-        ticket = Ticket(self, len(self._tickets), n)
+        ticket = Ticket(self, len(self._tickets), n,
+                        self.engine.resolve_output(output))
         self._tickets.append(ticket)
         self.stats.n_submits += 1
         self.stats.n_pairs += n
@@ -250,7 +268,8 @@ class AlignmentSession:
         tc = _pad_rows(_fit_width(ticket._t[rows], width), nb)
         plc = _pad_rows(ticket._plen[rows], nb)
         tlc = _pad_rows(ticket._tlen[rows], nb)
-        exe, hit = eng._executable_for(pc.shape, tc.shape, s_max, k_max)
+        exe, hit = eng._executable_for(pc.shape, tc.shape, s_max, k_max,
+                                       ticket.output)
         for st in (ticket.stats, self.stats):
             if hit:
                 st.cache_hits += 1
@@ -284,8 +303,11 @@ class AlignmentSession:
         n_tr = exe.n_traces - pre
         for st in (ticket.stats, self.stats):
             st.n_traces += n_tr
+        keep = ticket.output == "cigar"
         self._inflight.append(_Wave(ticket, rows, res, plc, tlc, k_max,
-                                    recovery))
+                                    recovery,
+                                    pc=pc if keep else None,
+                                    tc=tc if keep else None))
         self.stats.n_waves += 1
         self.stats.peak_inflight = max(self.stats.peak_inflight,
                                        len(self._inflight))
@@ -320,11 +342,13 @@ class AlignmentSession:
         ticket._steps += steps
         if ticket._cigars is not None:
             t3 = time.perf_counter()
-            ops = cigar_mod.traceback_batch(wave.res, self.engine.pen,
-                                            wave.plc, wave.tlc, wave.k_max)
+            ops = cigar_mod.traceback_result(
+                wave.res, self.engine.pen, pattern=wave.pc, text=wave.tc,
+                plen=wave.plc, tlen=wave.tlc, k_max=wave.k_max)
             dt = time.perf_counter() - t3
             for st in (ticket.stats, self.stats):
                 st.t_gather += dt
+                st.bytes_out += cigar_mod.trace_nbytes(wave.res)
             for j, orig in enumerate(wave.rows):
                 ticket._cigars[int(orig)] = ops[j]
 
@@ -456,25 +480,35 @@ class AlignmentSession:
 
 def run_streamed(engine: AlignmentEngine, p: np.ndarray, plen: np.ndarray,
                  t: np.ndarray, tlen: np.ndarray, *, submit_pairs: int,
-                 max_inflight_waves: int = 4):
+                 max_inflight_waves: int = 4,
+                 output: Optional[str] = None):
     """Stream one packed batch through a fresh session in ``submit_pairs``
-    chunks with out-of-order gather -> (scores, SessionStats, wall_seconds).
+    chunks with out-of-order gather
+    -> (scores, cigars-or-None, SessionStats, wall_seconds).
 
     The shared harness behind the launcher's ``--mode stream`` and the
-    transfer-overhead benchmark's streamed column.
+    transfer-overhead benchmark's streamed column.  ``output="cigar"``
+    gathers per-pair op arrays (in submission row order) alongside scores.
     """
     n = int(p.shape[0])
+    out_mode = engine.resolve_output(output)
     scores = np.empty((n,), np.int32)
+    cigars: Optional[List[np.ndarray]] = \
+        [None] * n if out_mode == "cigar" else None
     t0 = time.perf_counter()
     with engine.stream(max_inflight_waves=max_inflight_waves) as sess:
         offset = {}
         for lo in range(0, n, submit_pairs):
             hi = min(n, lo + submit_pairs)
             ticket = sess.submit_packed(p[lo:hi], plen[lo:hi],
-                                        t[lo:hi], tlen[lo:hi])
+                                        t[lo:hi], tlen[lo:hi],
+                                        output=out_mode)
             offset[ticket.index] = lo
         for ticket in sess.as_completed():
             lo = offset[ticket.index]
-            scores[lo:lo + ticket.n_pairs] = ticket.result().scores
+            res = ticket.result()
+            scores[lo:lo + ticket.n_pairs] = res.scores
+            if cigars is not None:
+                cigars[lo:lo + ticket.n_pairs] = res.cigars
         stats = sess.stats
-    return scores, stats, time.perf_counter() - t0
+    return scores, cigars, stats, time.perf_counter() - t0

@@ -22,12 +22,27 @@ and the alignment is found at the first ``s`` with
 against the rectangle ``0 <= h <= m, 0 <= v <= n`` so out-of-board offsets
 never propagate.
 
-Two modes:
+Three modes:
 
 * ``wfa_forward(..., keep_history=True)`` — full ``[s_max+1, B, K]`` M/I/D
   history, enabling exact traceback (``core.cigar``).
 * ``wfa_scores`` — ring buffer of depth ``window = max(x, o+e) + 1``
   (the paper's WRAM-resident working set), score-only throughput mode.
+* ``wfa_scores_packed`` — the ring buffer *plus* a packed backtrace: 2-bit
+  per-cell provenance codes for M/I/D (which predecessor produced each
+  furthest-reaching offset) packed 16 cells to an int32 word along the
+  score axis.  ``core.cigar.traceback_packed_batch`` re-derives the exact
+  alignment from the codes alone by replaying the provenance chain forward
+  and re-extending matches against the sequences, so full CIGARs cost
+  ``3 * ceil((s_max+1)/16) * B * K`` int32 words — ~16x less memory than
+  the full history, small enough for bucketed batches on-device.
+
+Provenance code values (2 bits each, 0 = invalid/never-written):
+
+    M cell: 1 = from mismatch (M_{s-x}[k]+1), 2 = folded I_s[k],
+            3 = folded D_s[k]
+    I cell: 1 = gap open  (M_{s-o-e}[k-1]+1), 2 = gap extend (I_{s-e}[k-1]+1)
+    D cell: 1 = gap open  (M_{s-o-e}[k+1]),   2 = gap extend (D_{s-e}[k+1])
 """
 from __future__ import annotations
 
@@ -43,6 +58,17 @@ from repro.core.penalties import Penalties
 NEG = -(1 << 20)  # invalid-cell sentinel; survives +1 arithmetic harmlessly
 _VALID_THRESH = NEG // 2
 
+# Packed-backtrace provenance codes (2 bits per cell; 0 = invalid).
+BT_NONE = 0
+BT_M_FROM_X, BT_M_FROM_I, BT_M_FROM_D = 1, 2, 3   # M-cell origins
+BT_GAP_OPEN, BT_GAP_EXT = 1, 2                     # I/D-cell origins
+TRACE_CELLS_PER_WORD = 16                          # 2-bit cells in an int32
+
+
+def n_trace_words(s_max: int) -> int:
+    """int32 words along the packed score axis covering s in [0, s_max]."""
+    return (int(s_max) + TRACE_CELLS_PER_WORD) // TRACE_CELLS_PER_WORD
+
 
 class WFAResult(NamedTuple):
     score: jax.Array            # [B] int32 alignment cost, -1 if > s_max
@@ -50,6 +76,9 @@ class WFAResult(NamedTuple):
     i_hist: Optional[jax.Array]
     d_hist: Optional[jax.Array]
     n_steps: jax.Array          # [] int32: score loop trips taken (telemetry)
+    m_bt: Optional[jax.Array] = None  # [n_trace_words, B, K] packed 2-bit
+    i_bt: Optional[jax.Array] = None  # provenance codes, or None (score mode)
+    d_bt: Optional[jax.Array] = None
 
 
 def _shift_from_km1(w):
@@ -93,11 +122,13 @@ def _extend(M, pattern, text, plen, tlen, ks):
 
 
 def _next_wavefronts(pen: Penalties, read_m, s, M_prev_none, pattern, text,
-                     plen, tlen, ks, read_i, read_d):
+                     plen, tlen, ks, read_i, read_d, with_codes=False):
     """Compute (M_s, I_s, D_s) from history accessors.
 
     ``read_m/read_i/read_d(delta)`` return the wavefront at score ``s - delta``
-    (NEG-filled when s - delta < 0).
+    (NEG-filled when s - delta < 0).  With ``with_codes`` also returns the
+    2-bit provenance code planes ``(code_m, code_i, code_d)`` recording which
+    predecessor produced each cell (the packed-backtrace payload).
     """
     del M_prev_none
     x, o, e = pen.x, pen.o, pen.e
@@ -110,12 +141,16 @@ def _next_wavefronts(pen: Penalties, read_m, s, M_prev_none, pattern, text,
     pl = plen[:, None]
 
     # Insertion: source on diagonal k-1, offset +1; needs new h <= m.
-    i_src = jnp.maximum(_shift_from_km1(m_owe), _shift_from_km1(i_e))
+    i_open = _shift_from_km1(m_owe)
+    i_ext = _shift_from_km1(i_e)
+    i_src = jnp.maximum(i_open, i_ext)
     I_new = i_src + 1
     I_new = jnp.where((i_src > _VALID_THRESH) & (I_new <= tl), I_new, NEG)
 
     # Deletion: source on diagonal k+1, offset unchanged; needs new v <= n.
-    d_src = jnp.maximum(_shift_from_kp1(m_owe), _shift_from_kp1(d_e))
+    d_open = _shift_from_kp1(m_owe)
+    d_ext = _shift_from_kp1(d_e)
+    d_src = jnp.maximum(d_open, d_ext)
     D_new = jnp.where((d_src > _VALID_THRESH)
                       & (d_src - ks[None, :] <= pl), d_src, NEG)
 
@@ -124,9 +159,27 @@ def _next_wavefronts(pen: Penalties, read_m, s, M_prev_none, pattern, text,
     X_new = jnp.where((m_x > _VALID_THRESH) & (X_new <= tl)
                       & (X_new - ks[None, :] <= pl), X_new, NEG)
 
-    M_new = jnp.maximum(jnp.maximum(X_new, I_new), D_new)
-    M_new = _extend(M_new, pattern, text, plen, tlen, ks)
-    return M_new, I_new, D_new
+    M_pre = jnp.maximum(jnp.maximum(X_new, I_new), D_new)
+    M_new = _extend(M_pre, pattern, text, plen, tlen, ks)
+    if not with_codes:
+        return M_new, I_new, D_new
+    # Any candidate achieving the max is a valid optimal predecessor; the
+    # tie-break (X, then I, then D; extend over open) is fixed so forward
+    # and traceback agree deterministically.
+    code_m = jnp.where(
+        M_pre > _VALID_THRESH,
+        jnp.where(M_pre == X_new, BT_M_FROM_X,
+                  jnp.where(M_pre == I_new, BT_M_FROM_I, BT_M_FROM_D)),
+        BT_NONE).astype(jnp.int32)
+    code_i = jnp.where(
+        I_new > _VALID_THRESH,
+        jnp.where(i_ext >= i_open, BT_GAP_EXT, BT_GAP_OPEN),
+        BT_NONE).astype(jnp.int32)
+    code_d = jnp.where(
+        D_new > _VALID_THRESH,
+        jnp.where(d_ext >= d_open, BT_GAP_EXT, BT_GAP_OPEN),
+        BT_NONE).astype(jnp.int32)
+    return M_new, I_new, D_new, code_m, code_i, code_d
 
 
 def _target_reached(M, plen, tlen, k_max):
@@ -259,6 +312,111 @@ def wfa_scores(pattern, text, plen, tlen, *, pen: Penalties, s_max: int,
     s, score, *_ = lax.while_loop(
         cond, body, (jnp.int32(1), score0, m_ring, i_ring, d_ring))
     return WFAResult(score, None, None, None, s)
+
+
+@functools.partial(jax.jit, static_argnames=("pen", "s_max", "k_max"))
+def wfa_scores_packed(pattern, text, plen, tlen, *, pen: Penalties,
+                      s_max: int, k_max: int) -> WFAResult:
+    """Ring-buffer batched WFA *with* a packed backtrace.
+
+    Identical wavefront recurrence and rolling-window memory discipline as
+    :func:`wfa_scores`, plus three ``[n_trace_words, B, K]`` int32 arrays of
+    2-bit provenance codes (16 score steps per word, OR-accumulated in the
+    score loop).  ``core.cigar.traceback_packed_batch`` decodes them into
+    exact CIGARs without ever materializing the full offset history —
+    ~16x smaller than ``wfa_forward(keep_history=True)``.
+    """
+    pattern, text, plen, tlen = _prep(pattern, text, plen, tlen)
+    B = pattern.shape[0]
+    K = 2 * k_max + 1
+    W = pen.window
+    NW = n_trace_words(s_max)
+    ks = jnp.arange(K, dtype=jnp.int32) - k_max
+
+    # data-dependent zero: keeps while-loop carries shard_map-compatible
+    # (same trick as wfa_scores)
+    taint = (plen.reshape(-1)[0] * 0).astype(jnp.int32)
+    m_ring = jnp.full((W, B, K), NEG, jnp.int32) + taint
+    i_ring = jnp.full((W, B, K), NEG, jnp.int32) + taint
+    d_ring = jnp.full((W, B, K), NEG, jnp.int32) + taint
+    m_bt = jnp.zeros((NW, B, K), jnp.int32) + taint
+    i_bt = jnp.zeros((NW, B, K), jnp.int32) + taint
+    d_bt = jnp.zeros((NW, B, K), jnp.int32) + taint
+
+    M0 = jnp.full((B, K), NEG, jnp.int32).at[:, k_max].set(0)
+    M0 = _extend(M0, pattern, text, plen, tlen, ks)
+    m_ring = m_ring.at[0].set(M0)
+    score0 = jnp.where(_target_reached(M0, plen, tlen, k_max), 0, -1)
+
+    def read(ring, s, delta):
+        row = lax.dynamic_index_in_dim(ring, lax.rem(jnp.maximum(s - delta, 0),
+                                                     W), keepdims=False)
+        return jnp.where(s >= delta, row, NEG)
+
+    def pack(bt, s, code):
+        """OR the [B, K] code plane into word s//16 at bit offset 2*(s%16)."""
+        w = s // TRACE_CELLS_PER_WORD
+        off = 2 * lax.rem(s, TRACE_CELLS_PER_WORD)
+        word = lax.dynamic_index_in_dim(bt, w, keepdims=False)
+        return lax.dynamic_update_index_in_dim(
+            bt, word | jnp.left_shift(code, off), w, axis=0)
+
+    def body(carry):
+        s, score, m_ring, i_ring, d_ring, m_bt, i_bt, d_bt = carry
+        M_new, I_new, D_new, cm, ci, cd = _next_wavefronts(
+            pen, lambda d: read(m_ring, s, d), s, None, pattern, text,
+            plen, tlen, ks, lambda d: read(i_ring, s, d),
+            lambda d: read(d_ring, s, d), with_codes=True)
+        row = lax.rem(s, W)
+        m_ring = lax.dynamic_update_index_in_dim(m_ring, M_new, row, axis=0)
+        i_ring = lax.dynamic_update_index_in_dim(i_ring, I_new, row, axis=0)
+        d_ring = lax.dynamic_update_index_in_dim(d_ring, D_new, row, axis=0)
+        m_bt = pack(m_bt, s, cm)
+        i_bt = pack(i_bt, s, ci)
+        d_bt = pack(d_bt, s, cd)
+        reached = _target_reached(M_new, plen, tlen, k_max)
+        score = jnp.where((score < 0) & reached, s, score)
+        return s + 1, score, m_ring, i_ring, d_ring, m_bt, i_bt, d_bt
+
+    def cond(carry):
+        s, score, *_ = carry
+        return (s <= s_max) & jnp.any(score < 0)
+
+    s, score, _, _, _, m_bt, i_bt, d_bt = lax.while_loop(
+        cond, body, (jnp.int32(1), score0, m_ring, i_ring, d_ring,
+                     m_bt, i_bt, d_bt))
+    return WFAResult(score, None, None, None, s, m_bt, i_bt, d_bt)
+
+
+def wfa_trace_shardmap(pattern, text, plen, tlen, *, pen: Penalties,
+                       s_max: int, k_max: int, mesh, axis_names=None):
+    """Per-shard packed-backtrace WFA under ``shard_map``.
+
+    The shardmap backend's CIGAR fallback: each shard runs the packed ring
+    solver to local termination (no collectives, per-shard early exit — same
+    discipline as :func:`wfa_scores_shardmap`) and the packed provenance
+    words come back sharded on the pair axis for host-side traceback.
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    names = tuple(axis_names if axis_names is not None else mesh.axis_names)
+    spec2 = P(names, None)
+    spec1 = P(names)
+    spec_bt = P(None, names, None)
+
+    def local(p, t, pl, tl):
+        r = wfa_scores_packed(p, t, pl, tl, pen=pen, s_max=s_max,
+                              k_max=k_max)
+        return r.score, r.m_bt, r.i_bt, r.d_bt
+
+    kwargs = dict(mesh=mesh, in_specs=(spec2, spec2, spec1, spec1),
+                  out_specs=(spec1, spec_bt, spec_bt, spec_bt))
+    try:
+        fn = shard_map(local, check_rep=False, **kwargs)
+    except TypeError:  # newer jax dropped the check_rep kwarg
+        fn = shard_map(local, **kwargs)
+    return fn(pattern, text, plen, tlen)
 
 
 def wfa_scores_shardmap(pattern, text, plen, tlen, *, pen: Penalties,

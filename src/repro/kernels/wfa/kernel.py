@@ -14,8 +14,18 @@ Hardware mapping (DESIGN.md §2):
   lack (UPMEM's scalar loads do not transfer);
 * no communication between grid programs ≙ no inter-DPU communication.
 
-Score-only (throughput) mode, exactly like the ring-buffer jnp reference
-``kernels.wfa.ref.ref_scores`` it is validated against.
+Two output modes, built from the same kernel body:
+
+* score-only (throughput) — exactly like the ring-buffer jnp reference
+  ``kernels.wfa.ref.ref_scores`` it is validated against;
+* packed backtrace (``trace=True``) — additionally OR-accumulates 2-bit
+  per-cell provenance codes for M/I/D into ``[n_words, B, K]`` int32 words
+  (16 score steps per word, same encoding as
+  ``core.wavefront.wfa_scores_packed``), which
+  ``core.cigar.traceback_packed_batch`` decodes into exact CIGARs on the
+  host.  The rings stay the only per-step working set in VMEM; the packed
+  words are ~16x smaller than a full offset history, so full alignments fit
+  the same bucketed batches the score path serves.
 """
 from __future__ import annotations
 
@@ -28,6 +38,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.penalties import Penalties
+from repro.core.wavefront import (BT_GAP_EXT, BT_GAP_OPEN, BT_M_FROM_D,
+                                  BT_M_FROM_I, BT_M_FROM_X,
+                                  TRACE_CELLS_PER_WORD, n_trace_words)
 
 NEG = -(1 << 20)
 _THRESH = NEG // 2
@@ -47,12 +60,15 @@ def _gather_chars(seq, idx):
     return jnp.sum(jnp.where(hit, seq[:, None, :], 0), axis=2)
 
 
-def _make_kernel(pen: Penalties, s_max: int):
+def _make_kernel(pen: Penalties, s_max: int, trace: bool = False):
     x, o, e = pen.x, pen.o, pen.e
     W = pen.window
 
-    def kernel(p_ref, t_ref, pl_ref, tl_ref, out_ref, steps_ref,
-               m_ring, i_ring, d_ring):
+    def kernel(p_ref, t_ref, pl_ref, tl_ref, out_ref, steps_ref, *refs):
+        if trace:
+            bt_m, bt_i, bt_d, m_ring, i_ring, d_ring = refs
+        else:
+            m_ring, i_ring, d_ring = refs
         BP, Lp = p_ref.shape
         _, Lt = t_ref.shape
         K = m_ring.shape[-1]
@@ -93,7 +109,19 @@ def _make_kernel(pen: Penalties, s_max: int):
             val = ring[pl.ds(row, 1)][0]
             return jnp.where(s >= delta, val, NEG)
 
+        def pack_code(bt_ref, s, code):
+            """OR the [BP, K] 2-bit code plane into word s//16 of bt_ref."""
+            w = s // TRACE_CELLS_PER_WORD
+            off = 2 * lax.rem(s, TRACE_CELLS_PER_WORD)
+            cur = bt_ref[pl.ds(w, 1)]
+            bt_ref[pl.ds(w, 1)] = cur | jnp.left_shift(code, off)[None]
+
         # s = 0
+        if trace:
+            # out buffers are uninitialized; codes are OR-accumulated
+            bt_m[...] = jnp.zeros_like(bt_m)
+            bt_i[...] = jnp.zeros_like(bt_i)
+            bt_d[...] = jnp.zeros_like(bt_d)
         M0 = jnp.where(ks == 0, 0, NEG)
         M0 = extend(M0)
         store_row(m_ring, 0, M0)
@@ -112,20 +140,39 @@ def _make_kernel(pen: Penalties, s_max: int):
             sh_r = lambda w: jnp.concatenate([neg_col, w[:, :-1]], axis=1)
             sh_l = lambda w: jnp.concatenate([w[:, 1:], neg_col], axis=1)
 
-            i_src = jnp.maximum(sh_r(m_owe), sh_r(i_e))
+            i_open, i_ext = sh_r(m_owe), sh_r(i_e)
+            i_src = jnp.maximum(i_open, i_ext)
             I_new = jnp.where((i_src > _THRESH) & (i_src + 1 <= tlen),
                               i_src + 1, NEG)
-            d_src = jnp.maximum(sh_l(m_owe), sh_l(d_e))
+            d_open, d_ext = sh_l(m_owe), sh_l(d_e)
+            d_src = jnp.maximum(d_open, d_ext)
             D_new = jnp.where((d_src > _THRESH) & (d_src - ks <= plen),
                               d_src, NEG)
             X_new = jnp.where((m_x > _THRESH) & (m_x + 1 <= tlen)
                               & (m_x + 1 - ks <= plen), m_x + 1, NEG)
-            M_new = extend(jnp.maximum(jnp.maximum(X_new, I_new), D_new))
+            M_pre = jnp.maximum(jnp.maximum(X_new, I_new), D_new)
+            M_new = extend(M_pre)
 
             row = lax.rem(s, W)
             store_row(m_ring, row, M_new)
             store_row(i_ring, row, I_new)
             store_row(d_ring, row, D_new)
+            if trace:
+                # same codes and tie-breaks as wfa_scores_packed
+                code_m = jnp.where(
+                    M_pre > _THRESH,
+                    jnp.where(M_pre == X_new, BT_M_FROM_X,
+                              jnp.where(M_pre == I_new, BT_M_FROM_I,
+                                        BT_M_FROM_D)), 0)
+                code_i = jnp.where(
+                    I_new > _THRESH,
+                    jnp.where(i_ext >= i_open, BT_GAP_EXT, BT_GAP_OPEN), 0)
+                code_d = jnp.where(
+                    D_new > _THRESH,
+                    jnp.where(d_ext >= d_open, BT_GAP_EXT, BT_GAP_OPEN), 0)
+                pack_code(bt_m, s, code_m)
+                pack_code(bt_i, s, code_i)
+                pack_code(bt_d, s, code_d)
             score = jnp.where((score < 0) & reached(M_new), s, score)
             return s + 1, score
 
@@ -141,27 +188,37 @@ def _make_kernel(pen: Penalties, s_max: int):
 
 
 @functools.partial(jax.jit, static_argnames=("pen", "s_max", "k_pad",
-                                             "block_pairs", "interpret"))
+                                             "block_pairs", "interpret",
+                                             "trace"))
 def wfa_pallas(pattern, text, plen, tlen, *, pen: Penalties, s_max: int,
-               k_pad: int, block_pairs: int = 8, interpret: bool = True):
+               k_pad: int, block_pairs: int = 8, interpret: bool = True,
+               trace: bool = False):
     """pattern/text [B, L*] int32 (B % block_pairs == 0, L* % 128 == 0),
     plen/tlen [B, 1] int32, k_pad % 128 == 0 is the padded diagonal count.
-    -> (score [B, 1] int32, steps [B, 1] int32)."""
+    -> (score [B, 1] int32, steps [B, 1] int32); with ``trace`` additionally
+    three [n_words, B, k_pad] int32 packed provenance arrays."""
     B, Lp = pattern.shape
     Lt = text.shape[1]
     BP = block_pairs
     assert B % BP == 0, (B, BP)
-    kernel, W = _make_kernel(pen, s_max)
+    kernel, W = _make_kernel(pen, s_max, trace=trace)
     grid = (B // BP,)
 
     spec2 = lambda L: pl.BlockSpec((BP, L), lambda i: (i, 0))
+    out_specs = [spec2(1), spec2(1)]
+    out_shape = [jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                 jax.ShapeDtypeStruct((B, 1), jnp.int32)]
+    if trace:
+        NW = n_trace_words(s_max)
+        bt_spec = pl.BlockSpec((NW, BP, k_pad), lambda i: (0, i, 0))
+        out_specs += [bt_spec] * 3
+        out_shape += [jax.ShapeDtypeStruct((NW, B, k_pad), jnp.int32)] * 3
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[spec2(Lp), spec2(Lt), spec2(1), spec2(1)],
-        out_specs=[spec2(1), spec2(1)],
-        out_shape=[jax.ShapeDtypeStruct((B, 1), jnp.int32),
-                   jax.ShapeDtypeStruct((B, 1), jnp.int32)],
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((W, BP, k_pad), jnp.int32)] * 3,
         interpret=interpret,
     )(pattern, text, plen, tlen)

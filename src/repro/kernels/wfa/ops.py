@@ -67,5 +67,41 @@ def wfa_align(pattern, text, plen, tlen, *, pen: Penalties, s_max: int,
     return score[:B, 0]
 
 
+def wfa_align_trace(pattern, text, plen, tlen, *, pen: Penalties, s_max: int,
+                    k_max: int, block_pairs: int = 8,
+                    interpret: Optional[bool] = None):
+    """Batched WFA scores *plus* packed backtrace via the Pallas kernel.
+
+    Same padding contract as :func:`wfa_align`; returns
+    ``(score [B], m_bt, i_bt, d_bt)`` where the bt arrays are
+    ``[n_words, B, k_pad]`` int32 packed 2-bit provenance words
+    (``core.cigar.traceback_packed_batch`` decodes them; the diagonal
+    center is ``k_pad // 2``).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    pattern = jnp.asarray(pattern, jnp.int32)
+    text = jnp.asarray(text, jnp.int32)
+    plen = jnp.asarray(plen, jnp.int32).reshape(-1)
+    tlen = jnp.asarray(tlen, jnp.int32).reshape(-1)
+
+    B, Lp = pattern.shape
+    Lt = text.shape[1]
+    Bp = _round_up(max(B, 1), block_pairs)
+    Lp_p = _round_up(max(Lp, 1), LANE)
+    Lt_p = _round_up(max(Lt, 1), LANE)
+    k_pad = _round_up(2 * k_max + 1, LANE)
+
+    pattern = _pad_axis(_pad_axis(pattern, 1, Lp_p), 0, Bp)
+    text = _pad_axis(_pad_axis(text, 1, Lt_p), 0, Bp)
+    plen2 = _pad_axis(plen[:, None], 0, Bp)
+    tlen2 = _pad_axis(tlen[:, None], 0, Bp)
+
+    score, _, m_bt, i_bt, d_bt = wfa_pallas(
+        pattern, text, plen2, tlen2, pen=pen, s_max=s_max, k_pad=k_pad,
+        block_pairs=block_pairs, interpret=interpret, trace=True)
+    return (score[:B, 0], m_bt[:, :B, :], i_bt[:, :B, :], d_bt[:, :B, :])
+
+
 def wfa_align_np(pattern, text, plen, tlen, **kw):
     return np.asarray(wfa_align(pattern, text, plen, tlen, **kw))

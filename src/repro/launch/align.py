@@ -4,13 +4,25 @@ Generates the paper's workload (read pairs at edit threshold E) and streams
 it through :meth:`AlignmentEngine.stream`: read-pair chunks are submitted as
 they are produced, host-side packing of the next wave overlaps the in-flight
 device kernel (the paper's transfer/compute overlap — its 4.87x-with vs
-37.4x-without transfer gap), and scores are gathered out of order via
+37.4x-without transfer gap), and results are gathered out of order via
 ``as_completed()``.  ``--mode sync`` runs the blocking ``align()`` path
 instead; ``--mode both`` runs the two back-to-back and reports the overlap
 win directly.  Throughput is reported both ways the paper does: *Total*
 (with host<->device transfers) and *Kernel* (alignment only).
 ``--backend ref|ring|kernel|shardmap`` selects any registered backend
 (``repro.core.backends``).
+
+``--output`` selects the result pathway (the read-mapping scenario of the
+follow-up framework paper, arXiv:2208.01243):
+
+* ``score`` — costs only (the throughput story);
+* ``cigar`` — full alignments via each backend's trace variant (packed
+  backtrace on ``ring``/``kernel``/``shardmap``); reports identity stats
+  and the traceback's share of wall clock;
+* ``sam``  — additionally writes SAM-style records (``--sam-out``, default
+  stdout): the mutated mate (*text*) is the read, the sampled reference
+  read (*pattern*) is the reference, so insert/delete op codes map onto
+  SAM ``I``/``D`` directly.
 """
 from __future__ import annotations
 
@@ -21,17 +33,46 @@ import time
 import numpy as np
 
 from repro.configs import wfa_paper
+from repro.core import cigar as cigar_mod
 from repro.core.backends import available_backends, get_backend
 from repro.core.engine import AlignmentEngine
-from repro.core.gotoh import gotoh_score_vec
+from repro.core.gotoh import gotoh_score_vec, score_cigar
 from repro.core.session import run_streamed
 from repro.data.reads import ReadPairSpec, generate_pairs
 
 
-def _run_sync(engine, P, plen, T, tlen):
+def _run_sync(engine, P, plen, T, tlen, output):
     t0 = time.perf_counter()
-    res = engine.align_packed(P, plen, T, tlen)
-    return res.scores, res.stats, time.perf_counter() - t0
+    res = engine.align_packed(P, plen, T, tlen, output=output)
+    return res.scores, res.cigars, res.stats, time.perf_counter() - t0
+
+
+def _decode(row: np.ndarray, n: int) -> str:
+    return row[:n].astype(np.uint8).tobytes().decode("ascii")
+
+
+def sam_line(i: int, ops: np.ndarray, score: int, text: str) -> str:
+    """One SAM-style record: the mate (text) mapped onto reference read i.
+
+    Unresolved pairs (score < 0: no alignment produced) are emitted as
+    proper unmapped records — FLAG 4, no position, no alignment score —
+    not as mapped records with a placeholder CIGAR.
+    """
+    if score < 0:
+        return "\t".join([f"read{i}", "4", "*", "0", "0", "*", "*", "0",
+                          "0", text or "*", "*"])
+    cig = cigar_mod.cigar_string(ops, mode="classic")
+    return "\t".join([
+        f"read{i}", "0", f"ref{i}", "1", "255", cig, "*", "0", "0",
+        text or "*", "*", f"AS:i:{-int(score)}",
+    ])
+
+
+def write_sam(out, scores, cigars, T, tlen) -> None:
+    out.write("@HD\tVN:1.6\tSO:unknown\n")
+    for i, (s, ops) in enumerate(zip(scores, cigars)):
+        out.write(sam_line(i, ops, int(s), _decode(T[i], int(tlen[i]))))
+        out.write("\n")
 
 
 def main(argv=None):
@@ -45,6 +86,13 @@ def main(argv=None):
                     default="stream",
                     help="pipelined session (default), blocking align(), "
                          "or both back-to-back")
+    ap.add_argument("--output", choices=("score", "cigar", "sam"),
+                    default="score",
+                    help="scores only (default), full CIGAR alignments, "
+                         "or SAM-style records")
+    ap.add_argument("--sam-out", default="-", metavar="PATH",
+                    help="where --output sam writes records (default "
+                         "stdout)")
     ap.add_argument("--submit-pairs", type=int, default=None,
                     help="pairs per session submit (streaming granularity; "
                          "default: --chunk-pairs)")
@@ -58,18 +106,27 @@ def main(argv=None):
     ap.add_argument("--no-adaptive", action="store_true",
                     help="disable the exact-bound overflow recovery pass")
     ap.add_argument("--verify", type=int, default=0,
-                    help="cross-check N scores against the Gotoh oracle")
+                    help="cross-check N scores (and CIGAR re-scores) "
+                         "against the Gotoh oracle")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     pen = wfa_paper.pen
+    out_mode = "score" if args.output == "score" else "cigar"
+    # SAM on stdout must stay a valid SAM stream: move the progress report
+    # to stderr so `--output sam > out.sam` parses
+    sam_to_stdout = args.output == "sam" and args.sam_out == "-"
+    log_file = sys.stderr if sam_to_stdout else sys.stdout
+
+    def log(*a, **kw):
+        print(*a, file=log_file, flush=True, **kw)
+
     spec = ReadPairSpec(n_pairs=args.pairs, read_len=args.read_len,
                         edit_frac=args.edit_frac, seed=args.seed)
     t0 = time.perf_counter()
     P, plen, T, tlen = generate_pairs(spec)
-    print(f"[align] generated {args.pairs} pairs of ~{args.read_len}bp "
-          f"(E={args.edit_frac:.0%}) in {time.perf_counter() - t0:.2f}s",
-          flush=True)
+    log(f"[align] generated {args.pairs} pairs of ~{args.read_len}bp "
+        f"(E={args.edit_frac:.0%}) in {time.perf_counter() - t0:.2f}s")
 
     mesh = None
     if get_backend(args.backend).needs_mesh:
@@ -84,65 +141,94 @@ def main(argv=None):
     # warmup with the identical batch so the measured run is steady-state
     # serving (all executables cached, 0 retraces); a submit-sized chunk and
     # the residual chunk warm the streamed shapes when they differ
-    engine.align_packed(P, plen, T, tlen)
+    engine.align_packed(P, plen, T, tlen, output=out_mode)
     engine.align_packed(P[:submit_pairs], plen[:submit_pairs],
-                        T[:submit_pairs], tlen[:submit_pairs])
+                        T[:submit_pairs], tlen[:submit_pairs],
+                        output=out_mode)
     rem = args.pairs % submit_pairs
     if rem:
-        engine.align_packed(P[-rem:], plen[-rem:], T[-rem:], tlen[-rem:])
+        engine.align_packed(P[-rem:], plen[-rem:], T[-rem:], tlen[-rem:],
+                            output=out_mode)
 
     runs = []
     if args.mode in ("sync", "both"):
-        runs.append(("sync", _run_sync(engine, P, plen, T, tlen)))
+        runs.append(("sync", _run_sync(engine, P, plen, T, tlen, out_mode)))
     if args.mode in ("stream", "both"):
         runs.append(("stream",
                      run_streamed(engine, P, plen, T, tlen,
                                   submit_pairs=submit_pairs,
-                                  max_inflight_waves=args.inflight)))
+                                  max_inflight_waves=args.inflight,
+                                  output=out_mode)))
 
-    scores = None
-    for mode, (sc, st, wall) in runs:
+    scores = cigars = None
+    for mode, (sc, cg, st, wall) in runs:
         if scores is None:
-            scores = sc
+            scores, cigars = sc, cg
         elif not np.array_equal(scores, sc):
-            print("[align] ERROR: sync and stream scores differ")
+            log("[align] ERROR: sync and stream scores differ")
             return 1
         pim = st.pim
         extra = ""
         if mode == "stream":
             extra = (f" submits={st.n_submits} waves={st.n_waves} "
                      f"inflight<={st.max_inflight} (peak {st.peak_inflight})")
-        print(f"[align] {mode}: backend={args.backend} "
+        log(f"[align] {mode}: backend={args.backend} output={out_mode} "
               f"workers={pim.n_workers} buckets={st.n_buckets} "
               f"cache={st.cache_hits}h/{st.cache_misses}m "
               f"retraces={st.n_traces}{extra}")
-        print(f"[align] {mode}: scatter {pim.t_scatter:.3f}s  "
+        log(f"[align] {mode}: scatter {pim.t_scatter:.3f}s  "
               f"kernel {pim.t_kernel:.3f}s  gather {pim.t_gather:.3f}s  "
               f"wall {wall:.3f}s")
-        print(f"[align] {mode}: throughput Total  = "
+        log(f"[align] {mode}: throughput Total  = "
               f"{args.pairs / wall:,.0f} pairs/s")
-        print(f"[align] {mode}: throughput Kernel = "
+        log(f"[align] {mode}: throughput Kernel = "
               f"{pim.throughput_kernel():,.0f} pairs/s")
-        print(f"[align] {mode}: transfers: {pim.bytes_in / 1e6:.1f} MB in, "
+        log(f"[align] {mode}: transfers: {pim.bytes_in / 1e6:.1f} MB in, "
               f"{pim.bytes_out / 1e6:.3f} MB out")
         found = sc >= 0
-        print(f"[align] {mode}: scores: mean={sc[found].mean():.2f} "
+        log(f"[align] {mode}: scores: mean={sc[found].mean():.2f} "
               f"max={sc[found].max()} overflow={st.n_overflow} "
               f"recovered={st.n_recovered} unresolved={int((~found).sum())}")
+        if cg is not None:
+            # identity over resolved pairs only: an unresolved pair has no
+            # alignment, not a perfect one
+            ident = np.asarray([cigar_mod.cigar_identity(c)
+                                for c, f in zip(cg, found) if f])
+            cols = sum(len(c) for c in cg)
+            log(f"[align] {mode}: cigars: {cols} alignment columns, "
+                  f"identity mean={ident.mean():.4f} min={ident.min():.4f} "
+                  f"(gather incl. traceback: {pim.t_gather:.3f}s)")
     if args.mode == "both":
-        t_sync = runs[0][1][2]
-        t_stream = runs[1][1][2]
-        print(f"[align] stream vs sync wall: {t_sync:.3f}s -> {t_stream:.3f}s "
+        t_sync = runs[0][1][3]
+        t_stream = runs[1][1][3]
+        log(f"[align] stream vs sync wall: {t_sync:.3f}s -> {t_stream:.3f}s "
               f"({t_sync / t_stream:.2f}x)")
+
+    if args.output == "sam":
+        if args.sam_out == "-":
+            write_sam(sys.stdout, scores, cigars, T, tlen)
+        else:
+            with open(args.sam_out, "w") as f:
+                write_sam(f, scores, cigars, T, tlen)
+            log(f"[align] wrote {args.pairs} SAM records to "
+                  f"{args.sam_out}")
 
     if args.verify:
         n = min(args.verify, args.pairs)
         for i in range(n):
-            g = gotoh_score_vec(P[i, : plen[i]], T[i, : tlen[i]], pen)
+            pa, ta = P[i, : plen[i]], T[i, : tlen[i]]
+            g = gotoh_score_vec(pa, ta, pen)
             if scores[i] >= 0 and scores[i] != g:
-                print(f"[align] MISMATCH pair {i}: wfa={scores[i]} gotoh={g}")
+                log(f"[align] MISMATCH pair {i}: wfa={scores[i]} gotoh={g}")
                 return 1
-        print(f"[align] verified {n} scores against Gotoh oracle")
+            if cigars is not None and scores[i] >= 0:
+                cost, ci, cj, ok = score_cigar(cigars[i], pa, ta, pen)
+                if not ok or cost != g:
+                    log(f"[align] CIGAR MISMATCH pair {i}: "
+                          f"re-score={cost} gotoh={g} ok={ok}")
+                    return 1
+        what = "scores + CIGARs" if cigars is not None else "scores"
+        log(f"[align] verified {n} {what} against Gotoh oracle")
     return 0
 
 

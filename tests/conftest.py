@@ -6,12 +6,13 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import numpy as np
 import pytest
 
-# Modules whose tests form the <60s pre-commit smoke tier (run with
+# Modules whose tests form the ~2min pre-commit smoke tier (run with
 # ``-m quick``); anything marked ``slow`` is excluded even within these.
 QUICK_MODULES = {
     "test_wfa_core",
     "test_engine",
     "test_session",
+    "test_cigar_pipeline",
     "test_wfa_property",
     "test_analysis",
     "test_fault_dist",
@@ -57,7 +58,7 @@ def gotoh_oracle(pats, txts, pen=None):
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running end-to-end drills")
     config.addinivalue_line(
-        "markers", "quick: <60s smoke subset (pre-commit tier; -m quick)")
+        "markers", "quick: ~2min smoke subset (pre-commit tier; -m quick)")
 
 
 def pytest_collection_modifyitems(config, items):

@@ -1,0 +1,273 @@
+"""Packed-backtrace CIGAR pipeline: every cigar-capable backend must emit
+alignments that re-score to the Gotoh oracle cost — through blocking
+``align(output="cigar")`` and streamed ``as_completed()``, across random
+length-skewed pairs, empty-sequence edges, and exact-bound recovery —
+plus the TracebackError hardening and the CIGAR formatting helpers."""
+import numpy as np
+import pytest
+from conftest import gotoh_oracle as _oracle
+from conftest import random_pairs as _random_pairs
+
+from repro.core import cigar as cigar_mod
+from repro.core.backends import cigar_backends, get_backend
+from repro.core.cigar import (OP_D, OP_I, OP_M, OP_X, TracebackError,
+                              cigar_identity, cigar_string, trace_nbytes,
+                              traceback_packed_one, unpack_codes)
+from repro.core.engine import AlignmentEngine, pack_batch, problem_bounds
+from repro.core.gotoh import score_cigar
+from repro.core.penalties import DEFAULT, Penalties
+
+BACKENDS = ["ref", "ring", "kernel"]
+
+
+def _skewed_pairs(rng, n):
+    """Length-skewed mix: short/long pairs plus unrelated (overflow bait)."""
+    pats, txts = _random_pairs(rng, n, lo=3, hi=60)
+    p2, t2 = _random_pairs(rng, n // 2, lo=80, hi=150)
+    pats += p2
+    txts += t2
+    pats += ["A" * 40, "GATTACA" * 5]       # divergent: exact-bound recovery
+    txts += ["T" * 40, "CTAATGT" * 5]
+    return pats, txts
+
+
+def _assert_cigars_rescore(res, pats, txts, pen):
+    assert res.cigars is not None and len(res.cigars) == len(pats)
+    oracle = _oracle(pats, txts, pen)
+    np.testing.assert_array_equal(res.scores, oracle)
+    for i, (p, t) in enumerate(zip(pats, txts)):
+        pa = np.frombuffer(p.encode(), np.uint8)
+        ta = np.frombuffer(t.encode(), np.uint8)
+        cost, ci, cj, ok = score_cigar(res.cigars[i], pa, ta, pen)
+        assert ok, (i, p, t)
+        assert cost == oracle[i], (i, cost, oracle[i])
+        assert ci == len(p) and cj == len(t), (i, ci, cj)
+
+
+# ------------------------------------------------ backend parity suite ----
+
+
+@pytest.mark.parametrize("backend", ["ref", "ring"])
+def test_align_cigar_rescoring_to_oracle(rng, backend):
+    pats, txts = _skewed_pairs(rng, 10)
+    eng = AlignmentEngine(backend=backend, edit_frac=0.05)
+    res = eng.align(pats, txts, output="cigar")
+    assert res.stats.n_recovered >= 2        # recovery pairs traced too
+    _assert_cigars_rescore(res, pats, txts, DEFAULT)
+
+
+def test_kernel_cigar_rescoring_to_oracle(rng):
+    # one bucket shape: pallas interpret-mode compiles are the cost here,
+    # not the alignment itself — the code path is identical per shape
+    pats, txts = _random_pairs(rng, 8, lo=8, hi=56)
+    pats += ["A" * 30]                       # divergent: exact-bound recovery
+    txts += ["T" * 30]
+    eng = AlignmentEngine(backend="kernel", edit_frac=0.05,
+                          bucket_by_length=False)
+    res = eng.align(pats, txts, output="cigar")
+    assert res.stats.n_recovered >= 1
+    _assert_cigars_rescore(res, pats, txts, DEFAULT)
+
+
+def test_streamed_cigar_out_of_order(rng):
+    pats, txts = _skewed_pairs(rng, 8)
+    eng = AlignmentEngine(backend="ring", edit_frac=0.05, chunk_pairs=16)
+    chunks = [(pats[i::2], txts[i::2]) for i in range(2)]
+    with eng.stream(max_inflight_waves=2) as sess:
+        tickets = {sess.submit(p, t, output="cigar").index: (p, t)
+                   for p, t in chunks}
+        for tk in sess.as_completed():
+            p, t = tickets[tk.index]
+            _assert_cigars_rescore(tk.result(), p, t, DEFAULT)
+
+
+def test_mixed_output_tickets_share_session(rng):
+    pats, txts = _random_pairs(rng, 10, lo=10, hi=80)
+    eng = AlignmentEngine(backend="ring", edit_frac=0.05)
+    with eng.stream() as sess:
+        traced = sess.submit(pats, txts, output="cigar")
+        plain = sess.submit(pats, txts)      # engine default: score
+        _assert_cigars_rescore(traced.result(), pats, txts, DEFAULT)
+        assert plain.result().cigars is None
+    np.testing.assert_array_equal(traced.result().scores,
+                                  plain.result().scores)
+
+
+@pytest.mark.parametrize("backend", ["ref", "ring"])
+def test_nondefault_penalties_cigar(rng, backend):
+    pen = Penalties(x=3, o=4, e=1)
+    pats, txts = _random_pairs(rng, 10, lo=4, hi=100)
+    eng = AlignmentEngine(pen, backend=backend, edit_frac=0.1)
+    res = eng.align(pats, txts, output="cigar")
+    _assert_cigars_rescore(res, pats, txts, pen)
+
+
+def test_shardmap_backend_cigar(rng):
+    import jax
+    from repro.distributed.compat import make_mesh
+    mesh = make_mesh((jax.device_count(),), ("pairs",))
+    pats, txts = _random_pairs(rng, 8, lo=10, hi=60)
+    eng = AlignmentEngine(backend="shardmap", edit_frac=0.1, mesh=mesh)
+    res = eng.align(pats, txts, output="cigar")
+    _assert_cigars_rescore(res, pats, txts, DEFAULT)
+
+
+def test_cigar_backends_listed():
+    for name in BACKENDS + ["shardmap"]:
+        assert name in cigar_backends()
+
+
+# ------------------------------------------------ empty-sequence edges ----
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_empty_sequence_cigars(backend):
+    pats = ["", "ACGT", "", "A"]
+    txts = ["ACGT", "", "", "A"]
+    eng = AlignmentEngine(backend=backend, edit_frac=0.05)
+    res = eng.align(pats, txts, output="cigar")
+    _assert_cigars_rescore(res, pats, txts, DEFAULT)
+    assert list(res.cigars[0]) == [OP_I] * 4      # plen == 0: all-insert
+    assert list(res.cigars[1]) == [OP_D] * 4      # tlen == 0: all-delete
+    assert len(res.cigars[2]) == 0                # both empty
+    assert res.cigar_strings()[2] == ""
+    np.testing.assert_allclose(res.cigar_identities(), [0, 0, 1, 1])
+
+
+# ------------------------------------------------ traceback hardening ----
+
+
+def test_traceback_error_carries_coordinates():
+    # corrupted provenance words must raise TracebackError (never a bare
+    # assert, which python -O strips), pinpointing the failing cell
+    NW, K = 4, 9
+    garbage = np.zeros((NW, K), np.int32)        # all codes invalid
+    with pytest.raises(TracebackError) as ei:
+        traceback_packed_one(garbage, garbage, garbage, DEFAULT, score=8,
+                             pattern=np.zeros(4, np.int32),
+                             text=np.zeros(4, np.int32), plen=4, tlen=4,
+                             pair=7)
+    err = ei.value
+    assert err.pair == 7 and err.s == 8 and err.k == 0
+    assert "pair=7" in str(err)
+    assert isinstance(err, RuntimeError)          # legacy except-clause compat
+
+
+def test_traceback_error_on_corrupt_full_history():
+    from repro.core.cigar import traceback_one
+    from repro.core.wavefront import NEG
+    hist = np.full((6, 9), NEG, np.int64)
+    with pytest.raises(TracebackError, match="pair=3"):
+        traceback_one(hist, hist, hist, DEFAULT, score=5, plen=3, tlen=3,
+                      k_max=4, pair=3)
+
+
+def test_negative_score_yields_empty_ops():
+    out = traceback_packed_one(np.zeros((1, 3), np.int32),
+                               np.zeros((1, 3), np.int32),
+                               np.zeros((1, 3), np.int32), DEFAULT,
+                               score=-1, pattern=np.zeros(2, np.int32),
+                               text=np.zeros(2, np.int32), plen=2, tlen=2)
+    assert out.size == 0
+
+
+# ------------------------------------------------ packed encoding ----
+
+
+def test_unpack_codes_roundtrip(rng):
+    from repro.core.wavefront import wfa_scores_packed
+    pats, txts = _random_pairs(rng, 6, lo=10, hi=50)
+    P, plen = pack_batch(pats)
+    T, tlen = pack_batch(txts)
+    s_max, k_max = problem_bounds(DEFAULT, plen, tlen, None)
+    res = wfa_scores_packed(P, T, plen, tlen, pen=DEFAULT, s_max=s_max,
+                            k_max=k_max)
+    codes = unpack_codes(np.asarray(res.m_bt), s_max)
+    assert codes.shape == (s_max + 1, len(pats), 2 * k_max + 1)
+    assert codes.max() <= 3
+    # s = 0 is the origin row: no provenance is ever written there
+    assert (codes[0] == 0).all()
+
+
+def test_packed_trace_memory_at_least_8x_smaller(rng):
+    pats, txts = _random_pairs(rng, 16, lo=60, hi=100)
+    P, plen = pack_batch(pats)
+    T, tlen = pack_batch(txts)
+    s_max, k_max = problem_bounds(DEFAULT, plen, tlen, 0.05)
+    kw = dict(pen=DEFAULT, s_max=s_max, k_max=k_max)
+    full = get_backend("ref").variant("cigar")(P, T, plen, tlen, **kw)
+    packed = get_backend("ring").variant("cigar")(P, T, plen, tlen, **kw)
+    assert trace_nbytes(full) >= 8 * trace_nbytes(packed)
+
+
+# ------------------------------------------------ formatting helpers ----
+
+
+def test_cigar_string_modes():
+    ops = np.asarray([OP_M, OP_M, OP_X, OP_M, OP_I, OP_I, OP_D, -1],
+                     np.int8)
+    assert cigar_string(ops) == "2=1X1=2I1D"               # SAM 1.4
+    assert cigar_string(ops, "extended") == "2=1X1=2I1D"
+    assert cigar_string(ops, "classic") == "4M2I1D"        # =/X fold into M
+    with pytest.raises(ValueError, match="mode"):
+        cigar_string(ops, "nope")
+
+
+def test_cigar_identity():
+    assert cigar_identity(np.asarray([OP_M] * 9 + [OP_X])) == 0.9
+    assert cigar_identity(np.asarray([OP_M, OP_I, OP_D, OP_M])) == 0.5
+    assert cigar_identity(np.empty(0, np.int8)) == 1.0
+    assert cigar_identity(np.asarray([-1, -1])) == 1.0
+
+
+def test_unresolved_pairs_identity_is_nan():
+    # pinned s_max, no recovery: the divergent pair stays -1 and must not
+    # report a perfect identity
+    eng = AlignmentEngine(backend="ring", s_max=3)
+    res = eng.align(["AAAA", "ACGT"], ["TTTT", "ACGT"], output="cigar")
+    assert res.scores[0] == -1 and res.scores[1] == 0
+    ident = res.cigar_identities()
+    assert np.isnan(ident[0]) and ident[1] == 1.0
+
+
+def test_legacy_shim_cigar_strings_frozen(rng):
+    # the deprecated WFAligner API always emitted 'M'(match)/'X'(mismatch);
+    # the new extended/classic modes must not leak into it
+    import warnings
+    from repro.core.aligner import WFAligner
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        al = WFAligner(backend="ref", with_cigar=True)
+    res = al.align(["ACGTACGT", "AAAA"], ["ACGAACGT", "AAGA"])
+    assert res.cigar_strings() == ["3M1X4M", "2M1X1M"]
+
+
+def test_legacy_supports_cigar_plugin_kwarg():
+    # pre-output-mode plug-ins declared supports_cigar=True on a full-
+    # history fn; that fn must double as the trace variant
+    from repro.core.backends import register_backend, unregister_backend
+    from repro.core.wavefront import wfa_forward
+
+    @register_backend("legacy-full", supports_cigar=True)
+    def _full(pattern, text, plen, tlen, *, pen, s_max, k_max):
+        return wfa_forward(pattern, text, plen, tlen, pen=pen, s_max=s_max,
+                           k_max=k_max, keep_history=True)
+
+    try:
+        eng = AlignmentEngine(backend="legacy-full", edit_frac=0.1)
+        res = eng.align(["ACGT"], ["AGGT"], output="cigar")
+        assert res.scores[0] == DEFAULT.x
+        _assert_cigars_rescore(res, ["ACGT"], ["AGGT"], DEFAULT)
+    finally:
+        unregister_backend("legacy-full")
+
+
+def test_score_only_result_refuses_trace():
+    eng = AlignmentEngine(backend="ring", edit_frac=0.05)
+    res = eng.align(["ACGT"], ["ACGT"])
+    with pytest.raises(ValueError, match="output='cigar'"):
+        res.cigar_strings()
+    with pytest.raises(ValueError, match="trace"):
+        cigar_mod.traceback_result(
+            type("R", (), {"m_hist": None, "m_bt": None})(), DEFAULT,
+            pattern=None, text=None, plen=None, tlen=None, k_max=1)

@@ -18,8 +18,8 @@ from repro.core.wavefront import WFAResult, wfa_scores
 def test_builtin_backends_registered():
     for name in ("ref", "ring", "kernel", "shardmap"):
         assert name in available_backends()
-    assert get_backend("ref").supports_cigar
-    assert not get_backend("ring").supports_cigar
+        # every built-in serves output="cigar" via a trace variant
+        assert get_backend(name).supports_cigar, name
     assert get_backend("shardmap").needs_mesh
 
 
@@ -50,8 +50,25 @@ def test_plugin_backend_dispatches():
 
 
 def test_cigar_needs_capable_backend():
-    with pytest.raises(ValueError, match="CIGAR"):
-        AlignmentEngine(backend="ring", with_cigar=True)
+    # a plug-in without a trace variant is score-only: CIGAR output must be
+    # rejected at construction (default output) and per call
+    @register_backend("score-only")
+    def _scores(pattern, text, plen, tlen, *, pen, s_max, k_max):
+        return wfa_scores(pattern, text, plen, tlen, pen=pen,
+                          s_max=s_max, k_max=k_max)
+
+    try:
+        with pytest.raises(ValueError, match="score-only"):
+            AlignmentEngine(backend="score-only", with_cigar=True)
+        with pytest.raises(ValueError, match="score-only"):
+            AlignmentEngine(backend="score-only", output="cigar")
+        eng = AlignmentEngine(backend="score-only", edit_frac=0.1)
+        with pytest.raises(ValueError, match="score-only"):
+            eng.align(["ACGT"], ["ACGT"], output="cigar")
+    finally:
+        unregister_backend("score-only")
+    with pytest.raises(ValueError, match="output mode"):
+        AlignmentEngine(backend="ring", output="sideways")
 
 
 # ------------------------------------------------- bucketing + oracle ----
@@ -79,7 +96,9 @@ def test_bucketed_equals_unbucketed(rng):
 def test_ref_backend_bucketed_cigars(rng):
     pen = Penalties(x=3, o=4, e=1)
     pats, txts = _random_pairs(rng, 20, lo=4, hi=120)
+    # with_cigar is the deprecated spelling of the default output mode
     eng = AlignmentEngine(pen, backend="ref", edit_frac=0.1, with_cigar=True)
+    assert eng.with_cigar and eng.default_output == "cigar"
     res = eng.align(pats, txts)
     np.testing.assert_array_equal(res.scores, _oracle(pats, txts, pen))
     from repro.core.gotoh import score_cigar
