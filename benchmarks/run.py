@@ -52,7 +52,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,scaling,transfer,"
-                         "cigar,wfa_ops,lm")
+                         "cigar,scoring,wfa_ops,lm")
     ap.add_argument("--pairs", type=int, default=8192)
     ap.add_argument("--json", nargs="?", const="auto", default=None,
                     metavar="PATH",
@@ -76,6 +76,11 @@ def main(argv=None) -> int:
         from benchmarks import cigar_overhead
         suites.append(("cigar",
                        lambda: cigar_overhead.run(
+                           pairs=min(args.pairs, 2048))))
+    if want is None or "scoring" in want:
+        from benchmarks import scoring_models
+        suites.append(("scoring",
+                       lambda: scoring_models.run(
                            pairs=min(args.pairs, 2048))))
     if want is None or "wfa_ops" in want:
         from benchmarks import wfa_ops

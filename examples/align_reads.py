@@ -11,6 +11,9 @@ cigar`` streams full alignments (packed backtrace + identity stats);
     PYTHONPATH=src python examples/align_reads.py --output cigar --verify 128
     PYTHONPATH=src python examples/align_reads.py --output sam --sam-out out.sam
     PYTHONPATH=src python examples/align_reads.py --no-bucket --no-adaptive
+    PYTHONPATH=src python examples/align_reads.py --penalties edit --verify 64
+    PYTHONPATH=src python examples/align_reads.py --heuristic adaptive:10,50
+    PYTHONPATH=src python examples/align_reads.py --reads r.fq.gz --refs r.fa
 """
 import sys
 

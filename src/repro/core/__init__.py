@@ -2,6 +2,10 @@
 PIM-style (scatter / align-without-communication / gather), adapted to TPU.
 """
 from repro.core.penalties import DEFAULT, Penalties, band_bound, problem_dims, score_bound  # noqa: F401
+from repro.core.scoring import (AdaptiveBand, Edit, GapAffine, GapLinear,  # noqa: F401
+                                NoHeuristic, PenaltyModel, WavefrontHeuristic,
+                                ZDrop, as_heuristic, as_model,
+                                parse_heuristic, parse_penalties)
 from repro.core.wavefront import WFAResult, wfa_forward, wfa_scores, wfa_scores_packed  # noqa: F401
 from repro.core.backends import available_backends, cigar_backends, get_backend, register_backend  # noqa: F401
 from repro.core.cigar import TracebackError, cigar_identity, cigar_string  # noqa: F401

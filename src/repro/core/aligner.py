@@ -59,12 +59,21 @@ class WFAligner:
     def __init__(self, pen: Penalties = DEFAULT, *, backend: str = "ring",
                  edit_frac: Optional[float] = None,
                  s_max: Optional[int] = None, k_max: Optional[int] = None,
-                 with_cigar: bool = False):
+                 with_cigar: bool = False, penalties=None):
         warnings.warn(
             "WFAligner is deprecated; use repro.core.engine.AlignmentEngine "
             "(blocking align()) or AlignmentEngine.stream() for pipelined "
             "submission via repro.core.session.AlignmentSession",
             DeprecationWarning, stacklevel=2)
+        if penalties is not None:
+            # Engine-era spelling forwarded for convenience: accept it with
+            # a warning instead of raising on an unknown kwarg.
+            warnings.warn(
+                "WFAligner(penalties=...) is the AlignmentEngine spelling; "
+                "forwarding it as this aligner's penalty model "
+                "(gap-affine triples map to scoring.GapAffine)",
+                DeprecationWarning, stacklevel=2)
+            pen = penalties
         self._engine = AlignmentEngine(pen, backend=backend,
                                        edit_frac=edit_frac, s_max=s_max,
                                        k_max=k_max, with_cigar=with_cigar)

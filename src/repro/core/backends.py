@@ -16,16 +16,29 @@ with ``pattern``/``text`` ``[B, L]`` int32 device/host arrays, ``plen``/
 jit-traceable (the engine compiles one executable per bucket shape around
 it).
 
+The contract has two *scoring axes* (``core.scoring``):
+
+* ``pen`` may be any :class:`~repro.core.scoring.PenaltyModel` (or a legacy
+  gap-affine ``Penalties`` triple).  ``BackendSpec.models`` names the
+  recurrence kinds a backend serves (``"affine"`` / ``"linear"``); the four
+  built-ins serve both (their solvers statically specialize per model),
+  while plug-ins default to affine-only until they declare otherwise.
+* a backend that also understands **wavefront heuristics** takes a ``heur``
+  keyword (a :class:`~repro.core.scoring.WavefrontHeuristic`, static).  The
+  engine only passes ``heur`` when a non-exact heuristic is requested, so
+  heuristic-unaware plug-ins keep working for exact alignment and fail
+  loudly (not wrongly) when pruning is asked of them.
+
 Every backend serves two *output modes* (the engine's
 ``output="score" | "cigar"``):
 
 * ``fn`` — the score-only throughput path;
 * ``trace_variant`` — same signature, but the returned ``WFAResult`` also
   carries a trace that ``core.cigar`` can turn into exact CIGARs: either
-  the full ``[s_max+1, B, K]`` offset history (``m_hist``/``i_hist``/
-  ``d_hist``) or the ~16x smaller packed 2-bit provenance words
-  (``m_bt``/``i_bt``/``d_bt``).  ``supports_cigar`` is simply "has a
-  trace variant"; score-only plug-ins may omit it.
+  the full offset history (``m_hist``/``i_hist``/``d_hist``) or the ~16x
+  smaller packed 2-bit provenance words (``m_bt``/``i_bt``/``d_bt``; the
+  I/D planes are ``None`` for linear models).  ``supports_cigar`` is
+  simply "has a trace variant"; score-only plug-ins may omit it.
 
 Backends that shard over a device mesh set ``needs_mesh`` and receive the
 engine's ``mesh`` as a keyword.  Two further hooks tune how the engine
@@ -42,7 +55,8 @@ engine's ``mesh`` as a keyword.  Two further hooks tune how the engine
   wave through it, so a backend can split a wave across streams, add
   tracing, or stage inputs its own way without touching engine code.
 
-Built-ins (all CIGAR-capable):
+Built-ins (all CIGAR-capable, all serving every penalty model and
+heuristic):
 
 * ``"ref"``      — pure-jnp WFA; trace variant keeps the full offset
                    history (the memory-hungry oracle path)
@@ -58,11 +72,28 @@ Built-ins (all CIGAR-capable):
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 
 from repro.core import wavefront as wf
+
+ALL_MODELS = ("affine", "linear")
+
+
+def _accepts_heur(fn: Optional[Callable]) -> bool:
+    """True when ``fn`` takes a ``heur`` keyword (or ``**kwargs``)."""
+    if fn is None:
+        return False
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):    # builtins / odd callables: assume yes
+        return True
+    if "heur" in sig.parameters:
+        return True
+    return any(p.kind is inspect.Parameter.VAR_KEYWORD
+               for p in sig.parameters.values())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,14 +104,30 @@ class BackendSpec:
     needs_mesh: bool = False
     donate_args: Tuple[int, ...] = ()
     dispatch: Optional[Callable[..., wf.WFAResult]] = None
+    models: Tuple[str, ...] = ("affine",)
     doc: str = ""
 
     @property
     def supports_cigar(self) -> bool:
         return self.trace_variant is not None
 
-    def variant(self, output: str) -> Callable[..., wf.WFAResult]:
-        """The callable serving one output mode ('score' or 'cigar')."""
+    def supports_model(self, kind: str) -> bool:
+        return kind in self.models
+
+    def accepts_heuristic(self, output: str = "score") -> bool:
+        """Whether the callable serving ``output`` takes ``heur=``."""
+        return _accepts_heur(self.fn if output == "score"
+                             else self.trace_variant)
+
+    def variant(self, output: str,
+                model_kind: str = "affine") -> Callable[..., wf.WFAResult]:
+        """The callable serving one output mode ('score' or 'cigar') under
+        one penalty-model recurrence kind ('affine' or 'linear')."""
+        if model_kind not in self.models:
+            raise ValueError(
+                f"backend {self.name!r} serves penalty models "
+                f"{self.models}; {model_kind!r} models need one of: "
+                f"{model_backends(model_kind)}")
         if output == "score":
             return self.fn
         if output == "cigar":
@@ -103,14 +150,18 @@ def register_backend(name: str, fn: Optional[Callable] = None, *,
                      needs_mesh: bool = False,
                      donate_args: Tuple[int, ...] = (),
                      dispatch: Optional[Callable] = None,
+                     models: Tuple[str, ...] = ("affine",),
                      doc: str = ""):
     """Register an alignment backend (usable as a decorator).
 
     Re-registering a name replaces the previous entry (useful for tests and
-    for swapping in tuned variants).  ``supports_cigar=True`` is the
-    deprecated pre-output-mode spelling for backends whose ``fn`` itself
-    returns a traceback-capable ``WFAResult`` (full history, like the old
-    ``ref``): it makes ``fn`` double as the trace variant.
+    for swapping in tuned variants).  ``models`` declares the penalty-model
+    recurrence kinds the backend serves (plug-ins default to affine-only;
+    pass ``models=("affine", "linear")`` when the backend handles linear
+    models too).  ``supports_cigar=True`` is the deprecated pre-output-mode
+    spelling for backends whose ``fn`` itself returns a traceback-capable
+    ``WFAResult`` (full history, like the old ``ref``): it makes ``fn``
+    double as the trace variant.
     """
     def _add(f):
         tv = trace_variant
@@ -121,6 +172,7 @@ def register_backend(name: str, fn: Optional[Callable] = None, *,
                                       needs_mesh=needs_mesh,
                                       donate_args=tuple(donate_args),
                                       dispatch=dispatch,
+                                      models=tuple(models),
                                       doc=doc or (f.__doc__ or "").strip())
         return f
 
@@ -150,66 +202,82 @@ def cigar_backends() -> List[str]:
     return sorted(n for n, s in _REGISTRY.items() if s.supports_cigar)
 
 
+def model_backends(kind: str) -> List[str]:
+    """Backends serving penalty models of recurrence ``kind``."""
+    return sorted(n for n, s in _REGISTRY.items() if s.supports_model(kind))
+
+
 # ---------------------------------------------------------------------------
 # Built-in backends.
 
 
-def _ref_trace(pattern, text, plen, tlen, *, pen, s_max, k_max):
+def _ref_trace(pattern, text, plen, tlen, *, pen, s_max, k_max, heur=None):
     return wf.wfa_forward(pattern, text, plen, tlen, pen=pen,
-                          s_max=s_max, k_max=k_max, keep_history=True)
+                          s_max=s_max, k_max=k_max, keep_history=True,
+                          heur=heur)
 
 
-@register_backend("ref", trace_variant=_ref_trace,
+@register_backend("ref", trace_variant=_ref_trace, models=ALL_MODELS,
                   doc="pure-jnp WFA; full-history CIGAR traceback")
-def _ref_backend(pattern, text, plen, tlen, *, pen, s_max, k_max):
+def _ref_backend(pattern, text, plen, tlen, *, pen, s_max, k_max, heur=None):
     return wf.wfa_forward(pattern, text, plen, tlen, pen=pen,
-                          s_max=s_max, k_max=k_max, keep_history=False)
+                          s_max=s_max, k_max=k_max, keep_history=False,
+                          heur=heur)
 
 
-def _ring_trace(pattern, text, plen, tlen, *, pen, s_max, k_max):
+def _ring_trace(pattern, text, plen, tlen, *, pen, s_max, k_max, heur=None):
     return wf.wfa_scores_packed(pattern, text, plen, tlen, pen=pen,
-                                s_max=s_max, k_max=k_max)
+                                s_max=s_max, k_max=k_max, heur=heur)
 
 
 # The [B] int32 length buffers are donatable: the [B] int32 score output
 # can alias one of them, so streamed waves recycle device memory.
 @register_backend("ring", donate_args=(2, 3), trace_variant=_ring_trace,
+                  models=ALL_MODELS,
                   doc="rolling-window pure-jnp WFA; packed backtrace")
-def _ring_backend(pattern, text, plen, tlen, *, pen, s_max, k_max):
+def _ring_backend(pattern, text, plen, tlen, *, pen, s_max, k_max, heur=None):
     return wf.wfa_scores(pattern, text, plen, tlen, pen=pen,
-                         s_max=s_max, k_max=k_max)
+                         s_max=s_max, k_max=k_max, heur=heur)
 
 
-def _kernel_trace(pattern, text, plen, tlen, *, pen, s_max, k_max):
+def _kernel_trace(pattern, text, plen, tlen, *, pen, s_max, k_max,
+                  heur=None):
     from repro.kernels.wfa import ops as kops  # lazy: pallas import is heavy
     score, m_bt, i_bt, d_bt = kops.wfa_align_trace(
-        pattern, text, plen, tlen, pen=pen, s_max=s_max, k_max=k_max)
+        pattern, text, plen, tlen, pen=pen, s_max=s_max, k_max=k_max,
+        heur=heur)
     return wf.WFAResult(score, None, None, None, jnp.int32(s_max),
                         m_bt, i_bt, d_bt)
 
 
 @register_backend("kernel", donate_args=(2, 3), trace_variant=_kernel_trace,
+                  models=ALL_MODELS,
                   doc="Pallas TPU kernel (interpret on CPU); packed "
                       "backtrace in VMEM")
-def _kernel_backend(pattern, text, plen, tlen, *, pen, s_max, k_max):
+def _kernel_backend(pattern, text, plen, tlen, *, pen, s_max, k_max,
+                    heur=None):
     from repro.kernels.wfa import ops as kops  # lazy: pallas import is heavy
     score = kops.wfa_align(pattern, text, plen, tlen, pen=pen,
-                           s_max=s_max, k_max=k_max)
+                           s_max=s_max, k_max=k_max, heur=heur)
     return wf.WFAResult(score, None, None, None, jnp.int32(s_max))
 
 
-def _shardmap_trace(pattern, text, plen, tlen, *, pen, s_max, k_max, mesh):
+def _shardmap_trace(pattern, text, plen, tlen, *, pen, s_max, k_max, mesh,
+                    heur=None):
     score, m_bt, i_bt, d_bt = wf.wfa_trace_shardmap(
         pattern, text, plen, tlen, pen=pen, s_max=s_max, k_max=k_max,
-        mesh=mesh)
+        mesh=mesh, heur=heur)
     return wf.WFAResult(score, None, None, None, jnp.int32(s_max),
                         m_bt, i_bt, d_bt)
 
 
 @register_backend("shardmap", needs_mesh=True, trace_variant=_shardmap_trace,
+                  models=ALL_MODELS,
                   doc="ring solver in shard_map: per-shard termination, "
                       "zero collectives; per-shard packed backtrace")
-def _shardmap_backend(pattern, text, plen, tlen, *, pen, s_max, k_max, mesh):
+def _shardmap_backend(pattern, text, plen, tlen, *, pen, s_max, k_max, mesh,
+                      heur=None):
     score = wf.wfa_scores_shardmap(pattern, text, plen, tlen, pen=pen,
-                                   s_max=s_max, k_max=k_max, mesh=mesh)
+                                   s_max=s_max, k_max=k_max, mesh=mesh,
+                                   heur=heur)
     return wf.WFAResult(score, None, None, None, jnp.int32(s_max))

@@ -15,6 +15,15 @@ Two trace encodings come off the device (``core.wavefront``):
   extension at every M-cell entry reproduces the forward offsets bit for
   bit.
 
+Both encodings are **per penalty model** (``core.scoring``): gap-affine
+traces walk the three-matrix M/I/D provenance, while linear models
+(``GapLinear`` / ``Edit``) come off the device with a single M plane and
+walk the one-matrix chain (every gap op sources M directly at cost ``e``).
+Every decode is exact for the trace it is given — including traces
+produced under a wavefront heuristic, whose *scores* are approximate but
+whose provenance chains are internally consistent (pruned lanes are
+unreachable: no surviving cell derives from one).
+
 Traceback is a data-dependent walk, so (like the reference WFA2-lib, and
 like the paper's host-side result handling) it runs on the host in numpy.
 Malformed provenance (a bug, or corrupted words) raises
@@ -30,7 +39,7 @@ from typing import List, Optional
 
 import numpy as np
 
-from repro.core.penalties import Penalties
+from repro.core import scoring
 from repro.core.wavefront import (BT_GAP_EXT, BT_GAP_OPEN, BT_M_FROM_D,
                                   BT_M_FROM_I, BT_M_FROM_X, NEG,
                                   TRACE_CELLS_PER_WORD, _VALID_THRESH)
@@ -72,12 +81,13 @@ def _get(hist, s, k, k_max):
     return int(hist[s, j])
 
 
-def traceback_one(m_hist, i_hist, d_hist, pen: Penalties, score: int,
+def traceback_one(m_hist, i_hist, d_hist, pen, score: int,
                   plen: int, tlen: int, k_max: int,
                   pair: Optional[int] = None) -> np.ndarray:
-    """Traceback for one pair. hist arrays are [s_max+1, K] for this pair."""
+    """Gap-affine traceback for one pair. hist arrays are [s_max+1, K]."""
     if score < 0:
         return np.empty((0,), np.int8)
+    pen = scoring.as_model(pen)
     x, o, e = pen.x, pen.o, pen.e
     ops: list[int] = []          # built back-to-front
     state = "M"
@@ -152,16 +162,78 @@ def traceback_one(m_hist, i_hist, d_hist, pen: Penalties, score: int,
     return np.asarray(ops[::-1], np.int8)
 
 
-def traceback_batch(result, pen: Penalties, plen, tlen, k_max: int):
-    """-> list of per-pair op arrays (ragged)."""
+def traceback_linear_one(m_hist, pen, score: int, plen: int, tlen: int,
+                         k_max: int, pair: Optional[int] = None) -> np.ndarray:
+    """One-matrix (gap-linear / edit) traceback for one pair.
+
+    With no gap-open cost there are no I/D states: every op (mismatch,
+    insertion, deletion) sources M directly — mismatch at ``s - x`` on the
+    same diagonal, gaps at ``s - e`` on the neighbouring diagonals.
+    """
+    if score < 0:
+        return np.empty((0,), np.int8)
+    model = scoring.as_model(pen)
+    x, e = model.x, model.e
+    ops: list[int] = []          # built back-to-front
+    s = int(score)
+    k = tlen - plen
+    h = tlen
+    guard = 4 * (plen + tlen) + 4 * (s + 1) + 8
+    while guard > 0:
+        guard -= 1
+        if s == 0:
+            if k != 0:
+                raise TracebackError("origin cell off diagonal 0",
+                                     pair=pair, s=s, k=k, h=h)
+            ops.extend([OP_M] * h)
+            break
+        cand_x = _get(m_hist, s - x, k, k_max)
+        cand_x = cand_x + 1 if cand_x > _VALID_THRESH else NEG
+        cand_i = _get(m_hist, s - e, k - 1, k_max)
+        cand_i = cand_i + 1 if cand_i > _VALID_THRESH else NEG
+        cand_d = _get(m_hist, s - e, k + 1, k_max)
+        pre = max(cand_x, cand_i, cand_d)
+        if pre <= _VALID_THRESH or h < pre:
+            raise TracebackError("no valid M predecessor",
+                                 pair=pair, s=s, k=k, h=h)
+        ops.extend([OP_M] * (h - pre))
+        h = pre
+        if pre == cand_x:
+            ops.append(OP_X)
+            s -= x
+            h -= 1
+        elif pre == cand_i:
+            ops.append(OP_I)
+            s -= e
+            k -= 1
+            h -= 1
+        else:
+            ops.append(OP_D)
+            s -= e
+            k += 1
+    else:
+        raise TracebackError("traceback did not terminate",
+                             pair=pair, s=s, k=k, h=h)
+    return np.asarray(ops[::-1], np.int8)
+
+
+def traceback_batch(result, pen, plen, tlen, k_max: int):
+    """-> list of per-pair op arrays (ragged), dispatched on the model."""
+    model = scoring.as_model(pen)
     m_h = np.asarray(result.m_hist)
-    i_h = np.asarray(result.i_hist)
-    d_h = np.asarray(result.d_hist)
     scores = np.asarray(result.score)
     plen = np.asarray(plen)
     tlen = np.asarray(tlen)
+    if model.kind == "linear":
+        return [
+            traceback_linear_one(m_h[:, b], model, int(scores[b]),
+                                 int(plen[b]), int(tlen[b]), k_max, pair=b)
+            for b in range(scores.shape[0])
+        ]
+    i_h = np.asarray(result.i_hist)
+    d_h = np.asarray(result.d_hist)
     return [
-        traceback_one(m_h[:, b], i_h[:, b], d_h[:, b], pen, int(scores[b]),
+        traceback_one(m_h[:, b], i_h[:, b], d_h[:, b], model, int(scores[b]),
                       int(plen[b]), int(tlen[b]), k_max, pair=b)
         for b in range(scores.shape[0])
     ]
@@ -203,10 +275,51 @@ def _lcp(p: np.ndarray, t: np.ndarray, v: int, h: int) -> int:
     return n if neq.size == 0 else int(neq[0])
 
 
-def traceback_packed_one(m_bt, i_bt, d_bt, pen: Penalties, score: int,
+def _replay(rev, p, t, plen: int, tlen: int,
+            pair: Optional[int] = None) -> np.ndarray:
+    """Phase B: replay a back-to-front edit chain forward, re-deriving each
+    match run by maximal extension (exactly the forward pass's extend
+    step).  ``rev`` holds ``(op, extend_after)`` pairs."""
+    ops: list[int] = []
+    v = h = 0
+    r = _lcp(p, t, v, h)
+    ops.extend([OP_M] * r)
+    v += r
+    h += r
+    for op, extend_after in reversed(rev):
+        if op == OP_X:
+            if v >= plen or h >= tlen:
+                raise TracebackError("mismatch op past sequence end",
+                                     pair=pair, h=h)
+            v += 1
+            h += 1
+        elif op == OP_I:
+            if h >= tlen:
+                raise TracebackError("insertion op past text end",
+                                     pair=pair, h=h)
+            h += 1
+        else:  # OP_D
+            if v >= plen:
+                raise TracebackError("deletion op past pattern end",
+                                     pair=pair, h=h)
+            v += 1
+        ops.append(op)
+        if extend_after:
+            r = _lcp(p, t, v, h)
+            ops.extend([OP_M] * r)
+            v += r
+            h += r
+    if v != plen or h != tlen:
+        raise TracebackError(
+            f"replay consumed ({v}, {h}) of ({plen}, {tlen})",
+            pair=pair, h=h)
+    return np.asarray(ops, np.int8)
+
+
+def traceback_packed_one(m_bt, i_bt, d_bt, pen, score: int,
                          pattern, text, plen: int, tlen: int,
                          pair: Optional[int] = None) -> np.ndarray:
-    """Traceback for one pair from packed provenance words.
+    """Gap-affine traceback for one pair from packed provenance words.
 
     ``m_bt/i_bt/d_bt`` are this pair's ``[n_words, K]`` int32 code words;
     ``pattern``/``text`` the (padded) integer code rows — needed because
@@ -216,6 +329,7 @@ def traceback_packed_one(m_bt, i_bt, d_bt, pen: Penalties, score: int,
     """
     if score < 0:
         return np.empty((0,), np.int8)
+    pen = scoring.as_model(pen)
     x, o, e = pen.x, pen.o, pen.e
     kc = m_bt.shape[-1] // 2
     p = np.asarray(pattern)[:plen]
@@ -278,69 +392,93 @@ def traceback_packed_one(m_bt, i_bt, d_bt, pen: Penalties, score: int,
         raise TracebackError("packed traceback did not terminate",
                              pair=pair, s=s, k=k)
 
-    # Phase B: replay the edit chain forward, re-deriving each match run by
-    # maximal extension (exactly the forward pass's extend step).
-    ops: list[int] = []
-    v = h = 0
-    r = _lcp(p, t, v, h)
-    ops.extend([OP_M] * r)
-    v += r
-    h += r
-    for op, extend_after in reversed(rev):
-        if op == OP_X:
-            if v >= plen or h >= tlen:
-                raise TracebackError("mismatch op past sequence end",
-                                     pair=pair, h=h)
-            v += 1
-            h += 1
-        elif op == OP_I:
-            if h >= tlen:
-                raise TracebackError("insertion op past text end",
-                                     pair=pair, h=h)
-            h += 1
-        else:  # OP_D
-            if v >= plen:
-                raise TracebackError("deletion op past pattern end",
-                                     pair=pair, h=h)
-            v += 1
-        ops.append(op)
-        if extend_after:
-            r = _lcp(p, t, v, h)
-            ops.extend([OP_M] * r)
-            v += r
-            h += r
-    if v != plen or h != tlen:
-        raise TracebackError(
-            f"replay consumed ({v}, {h}) of ({plen}, {tlen})",
-            pair=pair, h=h)
-    return np.asarray(ops, np.int8)
+    return _replay(rev, p, t, plen, tlen, pair=pair)
 
 
-def traceback_packed_batch(result, pen: Penalties, pattern, text,
-                           plen, tlen):
-    """-> list of per-pair op arrays (ragged) from packed provenance."""
+def traceback_packed_linear_one(m_bt, pen, score: int, pattern, text,
+                                plen: int, tlen: int,
+                                pair: Optional[int] = None) -> np.ndarray:
+    """One-matrix (gap-linear / edit) traceback from the single packed
+    M-provenance plane: code 1 = mismatch (``s - x``, same diagonal),
+    2 = insertion (``s - e``, diagonal k-1), 3 = deletion (``s - e``,
+    diagonal k+1).  Every op returns to an M cell, so forward replay
+    re-extends matches after each one.
+    """
+    if score < 0:
+        return np.empty((0,), np.int8)
+    model = scoring.as_model(pen)
+    x, e = model.x, model.e
+    kc = m_bt.shape[-1] // 2
+    p = np.asarray(pattern)[:plen]
+    t = np.asarray(text)[:tlen]
+
+    s, k = int(score), tlen - plen
+    rev: list[tuple[int, bool]] = []          # (op, extend_after)
+    guard = 4 * (plen + tlen) + 4 * (s + 1) + 8
+    while guard > 0:
+        guard -= 1
+        if s == 0:
+            if k != 0:
+                raise TracebackError("origin cell off diagonal 0",
+                                     pair=pair, s=s, k=k)
+            break
+        c = _code_at(m_bt, s, k, kc)
+        if c == BT_M_FROM_X:
+            rev.append((OP_X, True))
+            s -= x
+        elif c == BT_M_FROM_I:
+            rev.append((OP_I, True))
+            s -= e
+            k -= 1
+        elif c == BT_M_FROM_D:
+            rev.append((OP_D, True))
+            s -= e
+            k += 1
+        else:
+            raise TracebackError("invalid M provenance code",
+                                 pair=pair, s=s, k=k)
+    else:
+        raise TracebackError("packed traceback did not terminate",
+                             pair=pair, s=s, k=k)
+
+    return _replay(rev, p, t, plen, tlen, pair=pair)
+
+
+def traceback_packed_batch(result, pen, pattern, text, plen, tlen):
+    """-> list of per-pair op arrays (ragged) from packed provenance,
+    dispatched on the model's recurrence kind."""
+    model = scoring.as_model(pen)
     m_bt = np.asarray(result.m_bt)
-    i_bt = np.asarray(result.i_bt)
-    d_bt = np.asarray(result.d_bt)
     scores = np.asarray(result.score)
     pattern = np.asarray(pattern)
     text = np.asarray(text)
     plen = np.asarray(plen).reshape(-1)
     tlen = np.asarray(tlen).reshape(-1)
+    if model.kind == "linear":
+        return [
+            traceback_packed_linear_one(m_bt[:, b], model, int(scores[b]),
+                                        pattern[b], text[b], int(plen[b]),
+                                        int(tlen[b]), pair=b)
+            for b in range(scores.shape[0])
+        ]
+    i_bt = np.asarray(result.i_bt)
+    d_bt = np.asarray(result.d_bt)
     return [
-        traceback_packed_one(m_bt[:, b], i_bt[:, b], d_bt[:, b], pen,
+        traceback_packed_one(m_bt[:, b], i_bt[:, b], d_bt[:, b], model,
                              int(scores[b]), pattern[b], text[b],
                              int(plen[b]), int(tlen[b]), pair=b)
         for b in range(scores.shape[0])
     ]
 
 
-def traceback_result(result, pen: Penalties, *, pattern, text, plen, tlen,
+def traceback_result(result, pen, *, pattern, text, plen, tlen,
                      k_max: int):
     """Dispatch on the trace encoding a ``WFAResult`` carries.
 
     Full offset history (``ref``) -> pointer-chase traceback; packed
     provenance words (``ring``/``kernel``/``shardmap``) -> decode + replay.
+    ``pen`` may be a legacy ``Penalties`` triple or any ``PenaltyModel``;
+    linear models decode their single M plane.
     """
     if getattr(result, "m_hist", None) is not None:
         return traceback_batch(result, pen, plen, tlen, k_max)

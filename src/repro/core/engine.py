@@ -55,6 +55,11 @@ Quickstart::
     full.cigar_strings()             # SAM 1.4 "="/"X" run-length CIGARs
     full.cigar_strings("classic")    # pre-1.4 "M" CIGARs
 
+    from repro.core.scoring import Edit, AdaptiveBand
+    eng.align(patterns, texts, penalties=Edit())        # Levenshtein mode
+    eng.align(patterns, texts, heuristic=AdaptiveBand())  # WFA-adaptive
+                                     # pruning; result.approximate == True
+
     with eng.stream(max_inflight_waves=2) as sess:   # pipelined serving
         tickets = [sess.submit(ps, ts, output="cigar") for ps, ts in chunks]
         for ticket in sess.as_completed():           # out-of-order gather
@@ -72,8 +77,9 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import cigar as cigar_mod
+from repro.core import scoring
 from repro.core.backends import BackendSpec, get_backend
-from repro.core.penalties import DEFAULT, Penalties, band_bound, score_bound
+from repro.core.penalties import DEFAULT
 
 Seq = Union[str, bytes, np.ndarray]
 
@@ -103,30 +109,32 @@ def pack_batch(seqs: Sequence[Seq], pad_to: Optional[int] = None,
     return out, lens
 
 
-def problem_bounds(pen: Penalties, plens: np.ndarray, tlens: np.ndarray,
+def problem_bounds(pen, plens: np.ndarray, tlens: np.ndarray,
                    edit_frac: Optional[float], s_max: Optional[int] = None,
                    k_max: Optional[int] = None) -> Tuple[int, int]:
-    """Static (s_max, k_max) for a batch.
+    """Static (s_max, k_max) for a batch (``pen``: model or legacy triple).
 
-    With ``edit_frac`` (the paper's E): score_bound over the batch max length.
-    Without it: the exact worst case (all-mismatch diagonal + one gap), which
-    guarantees every pair terminates with a real score.
+    With ``edit_frac`` (the paper's E): the model's score bound over the
+    batch max length.  Without it: the exact worst case (all-mismatch
+    diagonal + one gap), which guarantees every pair terminates with a
+    real score.
     """
+    pen = scoring.as_model(pen)
     max_len = int(max(plens.max(initial=1), tlens.max(initial=1)))
     max_diff = int(np.abs(tlens - plens).max(initial=0))
     if s_max is None:
         if edit_frac is not None:
-            s_max = score_bound(pen, max_len, edit_frac, len_diff=max_diff)
+            s_max = pen.score_bound(max_len, edit_frac, len_diff=max_diff)
         else:
             s_max = _exact_worst_score(pen, plens, tlens)
     if k_max is None:
-        k_max = min(band_bound(pen, s_max), max_len)
+        k_max = min(pen.band_bound(s_max), max_len)
     k_max = max(k_max, max_diff, 1)
     return int(s_max), int(k_max)
 
 
-def _exact_worst_score(pen: Penalties, plens, tlens) -> int:
-    """Exact per-pair worst case (all-mismatch diagonal + one gap), maxed
+def _exact_worst_score(pen, plens, tlens) -> int:
+    """Batch-vectorized :meth:`scoring.PenaltyModel.worst_score`, maxed
     over the batch — the bound under which every pair terminates."""
     worst = (pen.x * np.minimum(plens, tlens)
              + np.where(plens != tlens,
@@ -252,6 +260,10 @@ class EngineResult:
     s_max: int                              # largest bound used
     k_max: int
     stats: EngineStats = dataclasses.field(default_factory=EngineStats)
+    # True when a non-exact wavefront heuristic produced these results:
+    # scores are an upper bound on the optimal cost and divergent pairs may
+    # stay unresolved (-1).
+    approximate: bool = False
 
     def cigar_strings(self, mode: str = "extended") -> List[str]:
         """Run-length CIGAR strings (``mode``: SAM 1.4 'extended' ``=``/``X``
@@ -285,15 +297,28 @@ class _Executable:
     arrays (JAX async dispatch), so callers choose when to synchronize.
     """
 
-    def __init__(self, spec: BackendSpec, pen: Penalties, s_max: int,
-                 k_max: int, mesh: Optional[Mesh], output: str = "score"):
+    def __init__(self, spec: BackendSpec, pen, s_max: int,
+                 k_max: int, mesh: Optional[Mesh], output: str = "score",
+                 heur=None):
         self.s_max = s_max
         self.k_max = k_max
         self._traces = [0]
         traces = self._traces
-        backend_fn = spec.variant(output)
+        pen = scoring.as_model(pen)
+        heur = scoring.as_heuristic(heur)
+        backend_fn = spec.variant(output, pen.kind)
         self._dispatch = spec.dispatch
         extra = {"mesh": mesh} if spec.needs_mesh else {}
+        # Only pass heur when pruning is actually requested, so
+        # heuristic-unaware plug-in backends keep serving exact alignment.
+        if not heur.exact:
+            if not spec.accepts_heuristic(output):
+                raise ValueError(
+                    f"backend {spec.name!r} does not accept wavefront "
+                    f"heuristics (no 'heur' keyword on its "
+                    f"{output}-variant); use heuristic=None or a "
+                    f"heuristic-aware backend")
+            extra["heur"] = heur
 
         def _run(pattern, text, plen, tlen):
             traces[0] += 1            # trace-time side effect only
@@ -321,7 +346,12 @@ class AlignmentEngine:
 
     Parameters
     ----------
-    pen : gap-affine penalties (match 0 / mismatch x / gap o + L*e).
+    pen : default penalty model — any :class:`~repro.core.scoring.
+        PenaltyModel` (``Edit`` / ``GapLinear`` / ``GapAffine``) or a
+        legacy gap-affine :class:`Penalties` triple (normalized to
+        ``GapAffine``).  Every ``align``/``submit`` can override per call
+        via ``penalties=``; linear models run the cheaper one-matrix
+        recurrence end to end.
     backend : registry name (``available_backends()``); plug-ins welcome.
     edit_frac : the paper's E — optimistic score budget for pass 1.  ``None``
         sizes buffers for the exact worst case up front (single pass).
@@ -331,6 +361,10 @@ class AlignmentEngine:
         ``"score"`` (throughput) or ``"cigar"`` (full alignments via the
         backend's trace variant).  Every ``align``/``submit`` can override
         per call.
+    heuristic : default :class:`~repro.core.scoring.WavefrontHeuristic`
+        (``None`` = exact).  ``AdaptiveBand``/``ZDrop`` prune wavefront
+        lanes per score step; results are flagged ``approximate=True``.
+        Per-call ``heuristic=`` overrides.
     with_cigar : deprecated spelling of ``output="cigar"`` (kept for
         compatibility; per-call ``output=`` is the API).
     mesh : device mesh for scatter/gather (and for ``needs_mesh`` backends).
@@ -340,10 +374,11 @@ class AlignmentEngine:
     adaptive : enable the exact-bound recovery pass for overflow pairs.
     """
 
-    def __init__(self, pen: Penalties = DEFAULT, *, backend: str = "ring",
+    def __init__(self, pen=DEFAULT, *, backend: str = "ring",
                  edit_frac: Optional[float] = None,
                  s_max: Optional[int] = None, k_max: Optional[int] = None,
-                 output: str = "score", with_cigar: bool = False,
+                 output: str = "score", heuristic=None,
+                 with_cigar: bool = False,
                  mesh: Optional[Mesh] = None,
                  chunk_pairs: int = 1 << 16, bucket_by_length: bool = True,
                  min_bucket_len: int = 16, adaptive: bool = True):
@@ -359,7 +394,9 @@ class AlignmentEngine:
                 f"{backend!r} is score-only")
         if spec.needs_mesh and mesh is None:
             raise ValueError(f"backend {backend!r} needs a device mesh")
-        self.pen = pen
+        self.pen = scoring.as_model(pen)
+        spec.variant("score", self.pen.kind)   # raises if model unsupported
+        self.heuristic = scoring.as_heuristic(heuristic)
         self.backend = backend
         self.edit_frac = edit_frac
         self._s_max = s_max
@@ -379,15 +416,46 @@ class AlignmentEngine:
         """Deprecated: whether the *default* output mode emits CIGARs."""
         return self.default_output == "cigar"
 
-    def resolve_output(self, output: Optional[str]) -> str:
-        """Validate a per-call output mode (None -> the engine default)."""
+    def resolve_output(self, output: Optional[str], pen=None) -> str:
+        """Validate a per-call output mode (None -> the engine default).
+
+        ``pen`` is the call's resolved penalty model (None -> the engine
+        default): the cigar check must name the model kind actually in
+        play, or a linear-only backend would be rejected for 'affine'.
+        """
         out = self.default_output if output is None else output
         if out not in ("score", "cigar"):
             raise ValueError(f"unknown output mode {output!r}; "
                              "use 'score' or 'cigar'")
         if out == "cigar":
-            get_backend(self.backend).variant("cigar")  # raises if score-only
+            kind = (self.pen if pen is None else pen).kind
+            get_backend(self.backend).variant("cigar", kind)
         return out
+
+    def resolve_penalties(self, pen) -> "scoring.PenaltyModel":
+        """Validate a per-call penalty model (None -> the engine default)."""
+        model = self.pen if pen is None else scoring.as_model(pen)
+        get_backend(self.backend).variant("score", model.kind)
+        return model
+
+    def resolve_heuristic(self, heur,
+                          output: str = "score") -> "scoring.WavefrontHeuristic":
+        """Validate a per-call heuristic (None -> the engine default).
+
+        The backend-capability check happens here — before any ticket is
+        created — so a rejected submit leaves the session clean instead of
+        registering a ticket whose waves can never dispatch.
+        """
+        heur = self.heuristic if heur is None else scoring.as_heuristic(heur)
+        if not heur.exact:
+            spec = get_backend(self.backend)
+            if not spec.accepts_heuristic(output):
+                raise ValueError(
+                    f"backend {self.backend!r} does not accept wavefront "
+                    f"heuristics (no 'heur' keyword on its "
+                    f"{output}-variant); use heuristic=None or a "
+                    f"heuristic-aware backend")
+        return heur
 
     # -- cache introspection -------------------------------------------------
 
@@ -402,20 +470,25 @@ class AlignmentEngine:
     # -- bounds --------------------------------------------------------------
 
     def _bounds_for_bucket(self, lmax: int, plen_b: np.ndarray,
-                           tlen_b: np.ndarray, exact: bool) -> Tuple[int, int]:
+                           tlen_b: np.ndarray, exact: bool,
+                           pen=None) -> Tuple[int, int]:
         """Static (s_max, k_max) for one bucket.
 
         Pass-1 bounds depend only on (pen, lmax, edit_frac) — never on the
         data — so identical buckets across calls share one executable.  The
         exact path quantizes s_max up to a multiple of 32 for the same
-        reason (the score loop exits early regardless).
+        reason (the score loop exits early regardless).  ``pen`` is the
+        per-call penalty model (None -> the engine default): cheaper models
+        imply tighter E-derived score bounds (edit distance: ``s_max``
+        close to the edit budget itself), so the score loop cap shrinks
+        with the model.
         """
-        pen = self.pen
+        pen = self.pen if pen is None else pen
         if self._s_max is not None:
             s = int(self._s_max)
             max_diff = int(np.abs(tlen_b - plen_b).max(initial=0))
             k = self._k_max if self._k_max is not None else \
-                min(band_bound(pen, s), lmax)
+                min(pen.band_bound(s), lmax)
             return s, max(int(k), max_diff, 1)
         if not exact and self.edit_frac is not None:
             # regime bound: at most ceil(E*L) edits, so the length diff is
@@ -423,14 +496,14 @@ class AlignmentEngine:
             # max_diff bump: the band provably covers any within-budget
             # pair, and over-budget pairs go to the recovery pass anyway)
             n_err = int(math.ceil(self.edit_frac * lmax))
-            s = score_bound(pen, lmax, self.edit_frac, len_diff=n_err)
+            s = pen.score_bound(lmax, self.edit_frac, len_diff=n_err)
             k = self._k_max if self._k_max is not None else \
-                min(band_bound(pen, s), lmax)
+                min(pen.band_bound(s), lmax)
             return int(s), max(int(k), 1)
         s = _round_up(_exact_worst_score(pen, plen_b, tlen_b), 32)
         max_diff = int(np.abs(tlen_b - plen_b).max(initial=0))
         k = self._k_max if self._k_max is not None else \
-            min(band_bound(pen, s), lmax)
+            min(pen.band_bound(s), lmax)
         return int(s), max(int(k), max_diff, 1)
 
     # -- bucket planning -----------------------------------------------------
@@ -459,18 +532,21 @@ class AlignmentEngine:
         return tuple(jnp.asarray(a) for a in arrays)
 
     def _executable_for(self, pshape: tuple, tshape: tuple, s_max: int,
-                        k_max: int,
-                        output: str = "score") -> Tuple["_Executable", bool]:
+                        k_max: int, output: str = "score",
+                        pen=None, heur=None) -> Tuple["_Executable", bool]:
         """Cached executable for one rectangular problem shape -> (exe, hit)."""
         spec = get_backend(self.backend)
+        pen = self.pen if pen is None else pen
+        heur = self.heuristic if heur is None else heur
         # the whole spec in the key: re-registering a backend name (new fn,
         # donation or dispatch hooks) must not serve stale executables.
-        # output mode too: score and trace variants compile differently.
-        key = (spec, self.pen, pshape, tshape, s_max, k_max, output)
+        # output mode, penalty model and heuristic too: each compiles a
+        # different recurrence / pruning step.
+        key = (spec, pen, heur, pshape, tshape, s_max, k_max, output)
         exe = self._cache.get(key)
         if exe is not None:
             return exe, True
-        exe = _Executable(spec, self.pen, s_max, k_max, self.mesh, output)
+        exe = _Executable(spec, pen, s_max, k_max, self.mesh, output, heur)
         self._cache[key] = exe
         return exe, False
 
@@ -493,21 +569,24 @@ class AlignmentEngine:
                                 wave_pairs=wave_pairs)
 
     def align(self, patterns: Sequence[Seq], texts: Sequence[Seq], *,
-              output: Optional[str] = None) -> EngineResult:
+              output: Optional[str] = None, penalties=None,
+              heuristic=None) -> EngineResult:
         """Align python sequences (str/bytes/int arrays), pairwise.
 
         ``output="cigar"`` additionally emits exact per-pair CIGAR op
         arrays (``EngineResult.cigars``) via the backend's trace variant;
-        ``None`` uses the engine's default mode.
+        ``penalties=`` selects a per-call penalty model and ``heuristic=``
+        a per-call wavefront heuristic; ``None`` uses the engine defaults.
         """
         assert len(patterns) == len(texts)
         p, plen = pack_batch(patterns)
         t, tlen = pack_batch(texts)
-        return self.align_packed(p, plen, t, tlen, output=output)
+        return self.align_packed(p, plen, t, tlen, output=output,
+                                 penalties=penalties, heuristic=heuristic)
 
     def align_packed(self, p: np.ndarray, plen: np.ndarray, t: np.ndarray,
-                     tlen: np.ndarray, *,
-                     output: Optional[str] = None) -> EngineResult:
+                     tlen: np.ndarray, *, output: Optional[str] = None,
+                     penalties=None, heuristic=None) -> EngineResult:
         """Align pre-packed rectangular batches ([B, L] codes + [B] lens).
 
         Thin blocking wrapper over one streaming session: a single
@@ -517,10 +596,14 @@ class AlignmentEngine:
         from repro.core.session import AlignmentSession
         sess = AlignmentSession(self, max_inflight_waves=1,
                                 _sync_timing=True)
-        ticket = sess.submit_packed(p, plen, t, tlen, output=output)
+        ticket = sess.submit_packed(p, plen, t, tlen, output=output,
+                                    penalties=penalties,
+                                    heuristic=heuristic)
         sess.drain()
         return ticket.result()
 
     def align_pair(self, pattern: Seq, text: Seq, *,
-                   output: Optional[str] = None) -> EngineResult:
-        return self.align([pattern], [text], output=output)
+                   output: Optional[str] = None, penalties=None,
+                   heuristic=None) -> EngineResult:
+        return self.align([pattern], [text], output=output,
+                          penalties=penalties, heuristic=heuristic)

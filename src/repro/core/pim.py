@@ -38,7 +38,7 @@ class PIMBatchAligner:
     """
 
     def __init__(self, aligner: WFAligner, mesh: Optional[Mesh] = None,
-                 chunk_pairs: int = 1 << 16):
+                 chunk_pairs: int = 1 << 16, penalties=None):
         warnings.warn(
             "PIMBatchAligner is deprecated; use repro.core.engine."
             "AlignmentEngine (blocking align()) or AlignmentEngine.stream() "
@@ -47,13 +47,23 @@ class PIMBatchAligner:
         self.aligner = aligner
         self.mesh = mesh
         self.chunk_pairs = chunk_pairs
-        if mesh is None:
+        pen = aligner.pen
+        if penalties is not None:
+            # Engine-era spelling forwarded for convenience: accept it with
+            # a warning instead of raising on an unknown kwarg.
+            warnings.warn(
+                "PIMBatchAligner(penalties=...) is the AlignmentEngine "
+                "spelling; forwarding it as this executor's penalty model "
+                "(gap-affine triples map to scoring.GapAffine)",
+                DeprecationWarning, stacklevel=2)
+            pen = penalties
+        if mesh is None and penalties is None:
             # reuse the aligner's engine (and its warm executable cache);
             # this executor's per-wave cap applies via the session
             self._engine = aligner.engine
         else:
             self._engine = AlignmentEngine(
-                aligner.pen, backend=aligner.backend,
+                pen, backend=aligner.backend,
                 edit_frac=aligner.edit_frac, s_max=aligner._s_max,
                 k_max=aligner._k_max, mesh=mesh, chunk_pairs=chunk_pairs)
         self.n_workers = self._engine.n_workers

@@ -82,11 +82,13 @@ class Ticket:
     """
 
     def __init__(self, session: "AlignmentSession", index: int, n_pairs: int,
-                 output: str = "score"):
+                 output: str = "score", pen=None, heur=None):
         eng = session.engine
         self.index = index
         self.n_pairs = n_pairs
         self.output = output
+        self.pen = eng.pen if pen is None else pen          # PenaltyModel
+        self.heur = eng.heuristic if heur is None else heur
         self.stats = EngineStats(n_pairs=n_pairs, n_workers=eng.n_workers)
         self._session = session
         self._scores = np.full((n_pairs,), -1, np.int32)
@@ -199,26 +201,35 @@ class AlignmentSession:
     # -- submission ----------------------------------------------------------
 
     def submit(self, patterns: Sequence[Seq], texts: Sequence[Seq], *,
-               output: Optional[str] = None) -> Ticket:
+               output: Optional[str] = None, penalties=None,
+               heuristic=None) -> Ticket:
         """Enqueue one batch of python sequences; returns immediately.
 
         ``output="cigar"`` makes this ticket's waves run the backend's
         trace variant and its result carry per-pair CIGAR op arrays;
-        ``None`` uses the engine's default mode.
+        ``penalties=``/``heuristic=`` select this ticket's penalty model
+        and wavefront heuristic (tickets with different models coexist in
+        one session — each compiles and caches its own executables);
+        ``None`` uses the engine defaults.
         """
         assert len(patterns) == len(texts)
         p, plen = pack_batch(patterns)
         t, tlen = pack_batch(texts)
-        return self.submit_packed(p, plen, t, tlen, output=output)
+        return self.submit_packed(p, plen, t, tlen, output=output,
+                                  penalties=penalties, heuristic=heuristic)
 
     def submit_packed(self, p: np.ndarray, plen: np.ndarray, t: np.ndarray,
-                      tlen: np.ndarray, *,
-                      output: Optional[str] = None) -> Ticket:
+                      tlen: np.ndarray, *, output: Optional[str] = None,
+                      penalties=None, heuristic=None) -> Ticket:
         """Enqueue pre-packed [B, L] codes + [B] lens; returns immediately."""
         self._check_open()
         n = int(p.shape[0])
-        ticket = Ticket(self, len(self._tickets), n,
-                        self.engine.resolve_output(output))
+        # resolve everything before the Ticket exists: a rejected submit
+        # must leave the session clean (no permanently-incomplete ticket)
+        pen = self.engine.resolve_penalties(penalties)
+        out = self.engine.resolve_output(output, pen)
+        heur = self.engine.resolve_heuristic(heuristic, out)
+        ticket = Ticket(self, len(self._tickets), n, out, pen=pen, heur=heur)
         self._tickets.append(ticket)
         self.stats.n_submits += 1
         self.stats.n_pairs += n
@@ -241,7 +252,8 @@ class AlignmentSession:
         eng = self.engine
         for width, bidx in eng._plan_buckets(ticket._plen, ticket._tlen, idx):
             s_max, k_max = eng._bounds_for_bucket(
-                width, ticket._plen[bidx], ticket._tlen[bidx], exact)
+                width, ticket._plen[bidx], ticket._tlen[bidx], exact,
+                pen=ticket.pen)
             ticket._s_hi = max(ticket._s_hi, s_max)
             ticket._k_hi = max(ticket._k_hi, k_max)
             info = BucketInfo(width, s_max, k_max, len(bidx),
@@ -269,7 +281,8 @@ class AlignmentSession:
         plc = _pad_rows(ticket._plen[rows], nb)
         tlc = _pad_rows(ticket._tlen[rows], nb)
         exe, hit = eng._executable_for(pc.shape, tc.shape, s_max, k_max,
-                                       ticket.output)
+                                       ticket.output, pen=ticket.pen,
+                                       heur=ticket.heur)
         for st in (ticket.stats, self.stats):
             if hit:
                 st.cache_hits += 1
@@ -343,7 +356,7 @@ class AlignmentSession:
         if ticket._cigars is not None:
             t3 = time.perf_counter()
             ops = cigar_mod.traceback_result(
-                wave.res, self.engine.pen, pattern=wave.pc, text=wave.tc,
+                wave.res, ticket.pen, pattern=wave.pc, text=wave.tc,
                 plen=wave.plc, tlen=wave.tlc, k_max=wave.k_max)
             dt = time.perf_counter() - t3
             for st in (ticket.stats, self.stats):
@@ -415,7 +428,8 @@ class AlignmentSession:
             cig = [ticket._cigars[i] for i in range(ticket.n_pairs)]
         ticket._result = EngineResult(ticket._scores, cig, ticket._steps,
                                       ticket._s_hi, ticket._k_hi,
-                                      ticket.stats)
+                                      ticket.stats,
+                                      approximate=not ticket.heur.exact)
         ticket._p = ticket._t = ticket._plen = ticket._tlen = None
         ticket._done = True
         self._completed.append(ticket)
@@ -481,7 +495,8 @@ class AlignmentSession:
 def run_streamed(engine: AlignmentEngine, p: np.ndarray, plen: np.ndarray,
                  t: np.ndarray, tlen: np.ndarray, *, submit_pairs: int,
                  max_inflight_waves: int = 4,
-                 output: Optional[str] = None):
+                 output: Optional[str] = None, penalties=None,
+                 heuristic=None):
     """Stream one packed batch through a fresh session in ``submit_pairs``
     chunks with out-of-order gather
     -> (scores, cigars-or-None, SessionStats, wall_seconds).
@@ -491,7 +506,8 @@ def run_streamed(engine: AlignmentEngine, p: np.ndarray, plen: np.ndarray,
     gathers per-pair op arrays (in submission row order) alongside scores.
     """
     n = int(p.shape[0])
-    out_mode = engine.resolve_output(output)
+    out_mode = engine.resolve_output(output,
+                                     engine.resolve_penalties(penalties))
     scores = np.empty((n,), np.int32)
     cigars: Optional[List[np.ndarray]] = \
         [None] * n if out_mode == "cigar" else None
@@ -502,7 +518,9 @@ def run_streamed(engine: AlignmentEngine, p: np.ndarray, plen: np.ndarray,
             hi = min(n, lo + submit_pairs)
             ticket = sess.submit_packed(p[lo:hi], plen[lo:hi],
                                         t[lo:hi], tlen[lo:hi],
-                                        output=out_mode)
+                                        output=out_mode,
+                                        penalties=penalties,
+                                        heuristic=heuristic)
             offset[ticket.index] = lo
         for ticket in sess.as_completed():
             lo = offset[ticket.index]

@@ -3,46 +3,72 @@
 This is the paper's algorithm, expressed so a *batch* of pairs advances in
 lock-step (the TPU analogue of the paper's "each DPU thread aligns a pair
 independently" — see DESIGN.md §2).  All buffers are statically sized from
-``(s_max, k_max)`` bounds (``core.penalties``).
+``(s_max, k_max)`` bounds (``core.penalties`` / ``core.scoring``).
 
 Conventions
 -----------
 pattern ``p`` (length ``n``, vertical axis), text ``t`` (length ``m``,
 horizontal).  A wavefront cell on diagonal ``k = h - v`` stores the furthest
 reaching *offset* ``h`` (text chars consumed) attainable with cost exactly
-``s``; ``v = h - k`` is the pattern position.  Wavefronts:
+``s``; ``v = h - k`` is the pattern position.
 
-    I_s[k] = max(M_{s-o-e}[k-1], I_{s-e}[k-1]) + 1      (gap consuming text)
-    D_s[k] = max(M_{s-o-e}[k+1], D_{s-e}[k+1])          (gap consuming pattern)
-    M_s[k] = max(M_{s-x}[k] + 1, I_s[k], D_s[k])        (mismatch / close gap)
-    extend: M_s[k] += LCP(t[h:], p[v:])                  (free matches)
+Every solver takes a ``pen`` that may be a legacy gap-affine
+:class:`~repro.core.penalties.Penalties` triple or any
+:class:`~repro.core.scoring.PenaltyModel`; the model's ``kind`` statically
+selects the recurrence:
 
-and the alignment is found at the first ``s`` with
-``M_s[m-n] == m``.  Invalid cells hold ``NEG`` and all candidates are masked
-against the rectangle ``0 <= h <= m, 0 <= v <= n`` so out-of-board offsets
-never propagate.
+* ``"affine"`` (gap cost o + L*e) — the classic three-matrix scheme:
+
+      I_s[k] = max(M_{s-o-e}[k-1], I_{s-e}[k-1]) + 1    (gap consuming text)
+      D_s[k] = max(M_{s-o-e}[k+1], D_{s-e}[k+1])        (gap consuming pat)
+      M_s[k] = max(M_{s-x}[k] + 1, I_s[k], D_s[k])      (mismatch/close gap)
+
+* ``"linear"`` (gap cost L*e; includes ``Edit`` where x = e = 1) — with no
+  open cost the I/D fronts are redundant and the whole recurrence collapses
+  to **one matrix** (one ring buffer, one backtrace plane, ~3x less state):
+
+      M_s[k] = max(M_{s-x}[k] + 1, M_{s-e}[k-1] + 1, M_{s-e}[k+1])
+
+Both kinds share the extend step ``M_s[k] += LCP(t[h:], p[v:])`` (free
+matches) and terminate at the first ``s`` with ``M_s[m-n] == m``.  Invalid
+cells hold ``NEG`` and all candidates are masked against the rectangle
+``0 <= h <= m, 0 <= v <= n`` so out-of-board offsets never propagate.
+
+A :class:`~repro.core.scoring.WavefrontHeuristic` (``heur=``) optionally
+prunes k-lanes after each score step (WFA-adaptive band / z-drop): pruned
+lanes are written back as ``NEG`` so they cost no extension work on any
+later step and their provenance chains die.  On the step where a pair
+*reaches* its target, that lane cannot be pruned under either built-in
+policy (its remaining-distance estimate is 0 / its antidiagonal progress
+maximal), so a reached score is always traceable — but mid-run the lane
+carrying the eventual optimal path *can* lag and be pruned, which is
+precisely how heuristic scores become approximate (an upper bound;
+divergent pairs may stay unresolved at ``-1``).
 
 Three modes:
 
-* ``wfa_forward(..., keep_history=True)`` — full ``[s_max+1, B, K]`` M/I/D
-  history, enabling exact traceback (``core.cigar``).
-* ``wfa_scores`` — ring buffer of depth ``window = max(x, o+e) + 1``
-  (the paper's WRAM-resident working set), score-only throughput mode.
+* ``wfa_forward(..., keep_history=True)`` — full ``[s_max+1, B, K]``
+  offset history (M/I/D for affine, M only for linear), enabling exact
+  traceback (``core.cigar``).
+* ``wfa_scores`` — ring buffer of depth ``window`` (the paper's
+  WRAM-resident working set), score-only throughput mode.
 * ``wfa_scores_packed`` — the ring buffer *plus* a packed backtrace: 2-bit
-  per-cell provenance codes for M/I/D (which predecessor produced each
+  per-cell provenance codes (which predecessor produced each
   furthest-reaching offset) packed 16 cells to an int32 word along the
-  score axis.  ``core.cigar.traceback_packed_batch`` re-derives the exact
-  alignment from the codes alone by replaying the provenance chain forward
-  and re-extending matches against the sequences, so full CIGARs cost
-  ``3 * ceil((s_max+1)/16) * B * K`` int32 words — ~16x less memory than
-  the full history, small enough for bucketed batches on-device.
+  score axis.  ``core.cigar`` re-derives the exact alignment from the
+  codes alone by replaying the provenance chain forward and re-extending
+  matches against the sequences, so full CIGARs cost
+  ``ceil((s_max+1)/16) * B * K`` int32 words per plane (3 planes for
+  affine, 1 for linear) — ~16x less memory than the full history.
 
 Provenance code values (2 bits each, 0 = invalid/never-written):
 
-    M cell: 1 = from mismatch (M_{s-x}[k]+1), 2 = folded I_s[k],
-            3 = folded D_s[k]
-    I cell: 1 = gap open  (M_{s-o-e}[k-1]+1), 2 = gap extend (I_{s-e}[k-1]+1)
-    D cell: 1 = gap open  (M_{s-o-e}[k+1]),   2 = gap extend (D_{s-e}[k+1])
+    affine M cell: 1 = from mismatch (M_{s-x}[k]+1), 2 = folded I_s[k],
+                   3 = folded D_s[k]
+    affine I cell: 1 = gap open (M_{s-o-e}[k-1]+1), 2 = extend (I_{s-e}[k-1]+1)
+    affine D cell: 1 = gap open (M_{s-o-e}[k+1]),   2 = extend (D_{s-e}[k+1])
+    linear M cell: 1 = mismatch (M_{s-x}[k]+1), 2 = insertion
+                   (M_{s-e}[k-1]+1), 3 = deletion (M_{s-e}[k+1])
 """
 from __future__ import annotations
 
@@ -53,10 +79,12 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.penalties import Penalties
+from repro.core import scoring
+from repro.core.scoring import AdaptiveBand, ZDrop
 
 NEG = -(1 << 20)  # invalid-cell sentinel; survives +1 arithmetic harmlessly
 _VALID_THRESH = NEG // 2
+_BIG = 1 << 20
 
 # Packed-backtrace provenance codes (2 bits per cell; 0 = invalid).
 BT_NONE = 0
@@ -70,15 +98,20 @@ def n_trace_words(s_max: int) -> int:
     return (int(s_max) + TRACE_CELLS_PER_WORD) // TRACE_CELLS_PER_WORD
 
 
+def _resolve(pen, heur):
+    """Normalize (pen, heur) to (PenaltyModel, WavefrontHeuristic)."""
+    return scoring.as_model(pen), scoring.as_heuristic(heur)
+
+
 class WFAResult(NamedTuple):
     score: jax.Array            # [B] int32 alignment cost, -1 if > s_max
     m_hist: Optional[jax.Array]  # [s_max+1, B, K] or None
-    i_hist: Optional[jax.Array]
+    i_hist: Optional[jax.Array]  # None for linear models (no I/D fronts)
     d_hist: Optional[jax.Array]
     n_steps: jax.Array          # [] int32: score loop trips taken (telemetry)
     m_bt: Optional[jax.Array] = None  # [n_trace_words, B, K] packed 2-bit
-    i_bt: Optional[jax.Array] = None  # provenance codes, or None (score mode)
-    d_bt: Optional[jax.Array] = None
+    i_bt: Optional[jax.Array] = None  # provenance codes, or None (score mode
+    d_bt: Optional[jax.Array] = None  # / linear models)
 
 
 def _shift_from_km1(w):
@@ -121,17 +154,73 @@ def _extend(M, pattern, text, plen, tlen, ks):
     return M
 
 
-def _next_wavefronts(pen: Penalties, read_m, s, M_prev_none, pattern, text,
-                     plen, tlen, ks, read_i, read_d, with_codes=False):
-    """Compute (M_s, I_s, D_s) from history accessors.
+def keep_mask(heur, M, plen, tlen, ks):
+    """[B, K] bool: lanes the heuristic keeps live after this score step.
 
-    ``read_m/read_i/read_d(delta)`` return the wavefront at score ``s - delta``
-    (NEG-filled when s - delta < 0).  With ``with_codes`` also returns the
-    2-bit provenance code planes ``(code_m, code_i, code_d)`` recording which
-    predecessor produced each cell (the packed-backtrace payload).
+    ``M`` is the post-extend M wavefront; ``plen``/``tlen`` must be
+    column-broadcastable (``[B, 1]``) and ``ks`` row-broadcastable
+    (``[1, K]`` or ``[B, K]``) against it — the shared implementation for
+    the jnp solvers *and* the Pallas kernel (whose inputs are natively
+    ``[BP, 1]`` / ``[BP, K]``), so a new heuristic lands here once and
+    every backend prunes identically.
+
+    Exact heuristics keep every lane; :class:`AdaptiveBand` prunes lanes
+    whose remaining-distance estimate ``max(m - h, n - v)`` exceeds the
+    front's best by more than ``max_distance_diff`` (only once more than
+    ``min_wf_len`` lanes are live); :class:`ZDrop` prunes lanes whose
+    antidiagonal progress ``h + v`` trails the front's best by more than
+    ``zdrop``.  On its *reaching* step the target lane estimates 0 /
+    progresses furthest and so survives (reached scores stay traceable);
+    on earlier steps it can lag and be pruned — that is the
+    approximation.
     """
-    del M_prev_none
-    x, o, e = pen.x, pen.o, pen.e
+    if heur.exact:
+        return None
+    valid = M > _VALID_THRESH
+    h = M
+    v = M - ks
+    if isinstance(heur, AdaptiveBand):
+        d = jnp.maximum(tlen - h, plen - v)
+        d = jnp.where(valid, d, _BIG)
+        d_min = jnp.min(d, axis=-1, keepdims=True)
+        n_live = jnp.sum(valid.astype(jnp.int32), axis=-1, keepdims=True)
+        return valid & ((n_live <= heur.min_wf_len)
+                        | (d - d_min <= heur.max_distance_diff))
+    if isinstance(heur, ZDrop):
+        a = jnp.where(valid, h + v, -_BIG)
+        best = jnp.max(a, axis=-1, keepdims=True)
+        return valid & (best - a <= heur.zdrop)
+    raise TypeError(f"unknown heuristic {heur!r}")
+
+
+def _pruned(keep, *fronts):
+    """Apply a keep mask to each non-None wavefront (None mask = exact)."""
+    if keep is None:
+        return fronts if len(fronts) > 1 else fronts[0]
+    out = tuple(w if w is None else jnp.where(keep, w, NEG) for w in fronts)
+    return out if len(out) > 1 else out[0]
+
+
+def _prune_step(heur, plen, tlen, ks, *fronts):
+    """One solver-side pruning step: mask from M (``fronts[0]``), applied
+    to every front.  Broadcasts the solvers' [B]/[K] layout into
+    :func:`keep_mask`'s 2-D convention."""
+    keep = keep_mask(heur, fronts[0], plen[:, None], tlen[:, None],
+                     ks[None, :])
+    return _pruned(keep, *fronts)
+
+
+def _next_affine(model, read_m, pattern, text, plen, tlen, ks,
+                 read_i, read_d, with_codes=False):
+    """One gap-affine step: (M_s, I_s, D_s) from history accessors.
+
+    ``read_m/read_i/read_d(delta)`` return the wavefront at score
+    ``s - delta`` (NEG-filled when s - delta < 0).  With ``with_codes``
+    also returns the 2-bit provenance code planes ``(code_m, code_i,
+    code_d)`` recording which predecessor produced each cell (the
+    packed-backtrace payload).
+    """
+    x, o, e = model.x, model.o, model.e
     m_owe = read_m(o + e)
     m_x = read_m(x)
     i_e = read_i(e)
@@ -182,6 +271,46 @@ def _next_wavefronts(pen: Penalties, read_m, s, M_prev_none, pattern, text,
     return M_new, I_new, D_new, code_m, code_i, code_d
 
 
+def _next_linear(model, read_m, pattern, text, plen, tlen, ks,
+                 with_codes=False):
+    """One gap-linear step: M_s from the single M-history accessor.
+
+    The one-matrix recurrence (module doc): gaps open and extend at the
+    same cost, so insertions/deletions source directly from M at
+    ``s - e``.  With ``with_codes`` also returns the M provenance plane
+    (1 = mismatch, 2 = insertion, 3 = deletion).
+    """
+    x, e = model.x, model.e
+    m_x = read_m(x)
+    m_e = m_x if x == e else read_m(e)
+
+    tl = tlen[:, None]
+    pl = plen[:, None]
+
+    i_src = _shift_from_km1(m_e)
+    I_new = i_src + 1
+    I_new = jnp.where((i_src > _VALID_THRESH) & (I_new <= tl), I_new, NEG)
+
+    d_src = _shift_from_kp1(m_e)
+    D_new = jnp.where((d_src > _VALID_THRESH)
+                      & (d_src - ks[None, :] <= pl), d_src, NEG)
+
+    X_new = m_x + 1
+    X_new = jnp.where((m_x > _VALID_THRESH) & (X_new <= tl)
+                      & (X_new - ks[None, :] <= pl), X_new, NEG)
+
+    M_pre = jnp.maximum(jnp.maximum(X_new, I_new), D_new)
+    M_new = _extend(M_pre, pattern, text, plen, tlen, ks)
+    if not with_codes:
+        return M_new
+    code_m = jnp.where(
+        M_pre > _VALID_THRESH,
+        jnp.where(M_pre == X_new, BT_M_FROM_X,
+                  jnp.where(M_pre == I_new, BT_M_FROM_I, BT_M_FROM_D)),
+        BT_NONE).astype(jnp.int32)
+    return M_new, code_m
+
+
 def _target_reached(M, plen, tlen, k_max):
     """[B] bool: does M hold offset == tlen on the final diagonal?"""
     k_final = tlen - plen + k_max                   # index into K axis
@@ -203,24 +332,28 @@ def _prep(pattern, text, plen, tlen):
 
 
 @functools.partial(jax.jit, static_argnames=("pen", "s_max", "k_max",
-                                             "keep_history"))
-def wfa_forward(pattern, text, plen, tlen, *, pen: Penalties, s_max: int,
-                k_max: int, keep_history: bool = True) -> WFAResult:
+                                             "keep_history", "heur"))
+def wfa_forward(pattern, text, plen, tlen, *, pen, s_max: int,
+                k_max: int, keep_history: bool = True,
+                heur=None) -> WFAResult:
     """Full-history batched WFA.
 
     pattern/text: [B, Lp]/[B, Lt] integer codes (padding values arbitrary —
-    bounds masking never reads past plen/tlen).  Returns per-pair cost and the
-    M/I/D wavefront history for traceback.
+    bounds masking never reads past plen/tlen).  Returns per-pair cost and
+    the wavefront history for traceback (M/I/D for affine models, M only
+    for linear ones).
     """
+    model, heur = _resolve(pen, heur)
     pattern, text, plen, tlen = _prep(pattern, text, plen, tlen)
     B = pattern.shape[0]
     K = 2 * k_max + 1
     ks = jnp.arange(K, dtype=jnp.int32) - k_max
+    affine = model.kind == "affine"
 
     hist_shape = (s_max + 1, B, K)
     m_hist = jnp.full(hist_shape, NEG, jnp.int32)
-    i_hist = jnp.full(hist_shape, NEG, jnp.int32)
-    d_hist = jnp.full(hist_shape, NEG, jnp.int32)
+    i_hist = jnp.full(hist_shape, NEG, jnp.int32) if affine else None
+    d_hist = jnp.full(hist_shape, NEG, jnp.int32) if affine else None
 
     # s = 0: M_0[k=0] = LCP(p, t); I/D invalid.
     M0 = jnp.full((B, K), NEG, jnp.int32).at[:, k_max].set(0)
@@ -234,52 +367,73 @@ def wfa_forward(pattern, text, plen, tlen, *, pen: Penalties, s_max: int,
                                        keepdims=False)
         return jnp.where(s >= delta, row, NEG)
 
-    def body(carry):
-        s, score, m_hist, i_hist, d_hist = carry
-        M_new, I_new, D_new = _next_wavefronts(
-            pen, lambda d: read(m_hist, s, d), s, None, pattern, text,
-            plen, tlen, ks, lambda d: read(i_hist, s, d),
-            lambda d: read(d_hist, s, d))
-        m_hist = lax.dynamic_update_index_in_dim(m_hist, M_new, s, axis=0)
-        i_hist = lax.dynamic_update_index_in_dim(i_hist, I_new, s, axis=0)
-        d_hist = lax.dynamic_update_index_in_dim(d_hist, D_new, s, axis=0)
-        reached = _target_reached(M_new, plen, tlen, k_max)
-        score = jnp.where((score < 0) & reached, s, score)
-        return s + 1, score, m_hist, i_hist, d_hist
+    if affine:
+        def body(carry):
+            s, score, m_hist, i_hist, d_hist = carry
+            M_new, I_new, D_new = _next_affine(
+                model, lambda d: read(m_hist, s, d), pattern, text,
+                plen, tlen, ks, lambda d: read(i_hist, s, d),
+                lambda d: read(d_hist, s, d))
+            reached = _target_reached(M_new, plen, tlen, k_max)
+            score = jnp.where((score < 0) & reached, s, score)
+            M_new, I_new, D_new = _prune_step(heur, plen, tlen, ks,
+                                              M_new, I_new, D_new)
+            m_hist = lax.dynamic_update_index_in_dim(m_hist, M_new, s, axis=0)
+            i_hist = lax.dynamic_update_index_in_dim(i_hist, I_new, s, axis=0)
+            d_hist = lax.dynamic_update_index_in_dim(d_hist, D_new, s, axis=0)
+            return s + 1, score, m_hist, i_hist, d_hist
 
-    def cond(carry):
-        s, score, *_ = carry
-        return (s <= s_max) & jnp.any(score < 0)
+        def cond(carry):
+            s, score, *_ = carry
+            return (s <= s_max) & jnp.any(score < 0)
 
-    s, score, m_hist, i_hist, d_hist = lax.while_loop(
-        cond, body, (jnp.int32(1), score0, m_hist, i_hist, d_hist))
+        s, score, m_hist, i_hist, d_hist = lax.while_loop(
+            cond, body, (jnp.int32(1), score0, m_hist, i_hist, d_hist))
+    else:
+        def body(carry):
+            s, score, m_hist = carry
+            M_new = _next_linear(model, lambda d: read(m_hist, s, d),
+                                 pattern, text, plen, tlen, ks)
+            reached = _target_reached(M_new, plen, tlen, k_max)
+            score = jnp.where((score < 0) & reached, s, score)
+            M_new = _prune_step(heur, plen, tlen, ks, M_new)
+            m_hist = lax.dynamic_update_index_in_dim(m_hist, M_new, s, axis=0)
+            return s + 1, score, m_hist
+
+        def cond(carry):
+            s, score, _ = carry
+            return (s <= s_max) & jnp.any(score < 0)
+
+        s, score, m_hist = lax.while_loop(
+            cond, body, (jnp.int32(1), score0, m_hist))
 
     if keep_history:
         return WFAResult(score, m_hist, i_hist, d_hist, s)
     return WFAResult(score, None, None, None, s)
 
 
-@functools.partial(jax.jit, static_argnames=("pen", "s_max", "k_max"))
-def wfa_scores(pattern, text, plen, tlen, *, pen: Penalties, s_max: int,
-               k_max: int) -> WFAResult:
+@functools.partial(jax.jit, static_argnames=("pen", "s_max", "k_max", "heur"))
+def wfa_scores(pattern, text, plen, tlen, *, pen, s_max: int,
+               k_max: int, heur=None) -> WFAResult:
     """Ring-buffer batched WFA — score-only throughput mode.
 
-    Memory: 3 rings of ``[window, B, K]`` with ``window = max(x, o+e) + 1``,
-    the WFA metadata the paper keeps hot in WRAM.  This is the jnp reference
-    for the Pallas kernel (same rolling-window discipline).
+    Memory: rings of ``[window, B, K]`` (3 for affine, 1 for linear) with
+    ``window = max(x, o+e) + 1``, the WFA metadata the paper keeps hot in
+    WRAM.  This is the jnp reference for the Pallas kernel (same rolling-
+    window discipline).
     """
+    model, heur = _resolve(pen, heur)
     pattern, text, plen, tlen = _prep(pattern, text, plen, tlen)
     B = pattern.shape[0]
     K = 2 * k_max + 1
-    W = pen.window
+    W = model.window
     ks = jnp.arange(K, dtype=jnp.int32) - k_max
+    affine = model.kind == "affine"
 
     # data-dependent zero: keeps the while-loop carries' varying-manual-axes
     # consistent when this solver runs inside shard_map (per-shard loops)
     taint = (plen.reshape(-1)[0] * 0).astype(jnp.int32)
     m_ring = jnp.full((W, B, K), NEG, jnp.int32) + taint
-    i_ring = jnp.full((W, B, K), NEG, jnp.int32) + taint
-    d_ring = jnp.full((W, B, K), NEG, jnp.int32) + taint
 
     M0 = jnp.full((B, K), NEG, jnp.int32).at[:, k_max].set(0)
     M0 = _extend(M0, pattern, text, plen, tlen, ks)
@@ -291,57 +445,79 @@ def wfa_scores(pattern, text, plen, tlen, *, pen: Penalties, s_max: int,
                                                      W), keepdims=False)
         return jnp.where(s >= delta, row, NEG)
 
-    def body(carry):
-        s, score, m_ring, i_ring, d_ring = carry
-        M_new, I_new, D_new = _next_wavefronts(
-            pen, lambda d: read(m_ring, s, d), s, None, pattern, text,
-            plen, tlen, ks, lambda d: read(i_ring, s, d),
-            lambda d: read(d_ring, s, d))
-        row = lax.rem(s, W)
-        m_ring = lax.dynamic_update_index_in_dim(m_ring, M_new, row, axis=0)
-        i_ring = lax.dynamic_update_index_in_dim(i_ring, I_new, row, axis=0)
-        d_ring = lax.dynamic_update_index_in_dim(d_ring, D_new, row, axis=0)
-        reached = _target_reached(M_new, plen, tlen, k_max)
-        score = jnp.where((score < 0) & reached, s, score)
-        return s + 1, score, m_ring, i_ring, d_ring
+    if affine:
+        i_ring = jnp.full((W, B, K), NEG, jnp.int32) + taint
+        d_ring = jnp.full((W, B, K), NEG, jnp.int32) + taint
 
-    def cond(carry):
-        s, score, *_ = carry
-        return (s <= s_max) & jnp.any(score < 0)
+        def body(carry):
+            s, score, m_ring, i_ring, d_ring = carry
+            M_new, I_new, D_new = _next_affine(
+                model, lambda d: read(m_ring, s, d), pattern, text,
+                plen, tlen, ks, lambda d: read(i_ring, s, d),
+                lambda d: read(d_ring, s, d))
+            reached = _target_reached(M_new, plen, tlen, k_max)
+            score = jnp.where((score < 0) & reached, s, score)
+            M_new, I_new, D_new = _prune_step(heur, plen, tlen, ks,
+                                              M_new, I_new, D_new)
+            row = lax.rem(s, W)
+            m_ring = lax.dynamic_update_index_in_dim(m_ring, M_new, row, axis=0)
+            i_ring = lax.dynamic_update_index_in_dim(i_ring, I_new, row, axis=0)
+            d_ring = lax.dynamic_update_index_in_dim(d_ring, D_new, row, axis=0)
+            return s + 1, score, m_ring, i_ring, d_ring
 
-    s, score, *_ = lax.while_loop(
-        cond, body, (jnp.int32(1), score0, m_ring, i_ring, d_ring))
+        def cond(carry):
+            s, score, *_ = carry
+            return (s <= s_max) & jnp.any(score < 0)
+
+        s, score, *_ = lax.while_loop(
+            cond, body, (jnp.int32(1), score0, m_ring, i_ring, d_ring))
+    else:
+        def body(carry):
+            s, score, m_ring = carry
+            M_new = _next_linear(model, lambda d: read(m_ring, s, d),
+                                 pattern, text, plen, tlen, ks)
+            reached = _target_reached(M_new, plen, tlen, k_max)
+            score = jnp.where((score < 0) & reached, s, score)
+            M_new = _prune_step(heur, plen, tlen, ks, M_new)
+            m_ring = lax.dynamic_update_index_in_dim(m_ring, M_new,
+                                                     lax.rem(s, W), axis=0)
+            return s + 1, score, m_ring
+
+        def cond(carry):
+            s, score, _ = carry
+            return (s <= s_max) & jnp.any(score < 0)
+
+        s, score, _ = lax.while_loop(
+            cond, body, (jnp.int32(1), score0, m_ring))
     return WFAResult(score, None, None, None, s)
 
 
-@functools.partial(jax.jit, static_argnames=("pen", "s_max", "k_max"))
-def wfa_scores_packed(pattern, text, plen, tlen, *, pen: Penalties,
-                      s_max: int, k_max: int) -> WFAResult:
+@functools.partial(jax.jit, static_argnames=("pen", "s_max", "k_max", "heur"))
+def wfa_scores_packed(pattern, text, plen, tlen, *, pen,
+                      s_max: int, k_max: int, heur=None) -> WFAResult:
     """Ring-buffer batched WFA *with* a packed backtrace.
 
     Identical wavefront recurrence and rolling-window memory discipline as
-    :func:`wfa_scores`, plus three ``[n_trace_words, B, K]`` int32 arrays of
+    :func:`wfa_scores`, plus ``[n_trace_words, B, K]`` int32 arrays of
     2-bit provenance codes (16 score steps per word, OR-accumulated in the
-    score loop).  ``core.cigar.traceback_packed_batch`` decodes them into
-    exact CIGARs without ever materializing the full offset history —
-    ~16x smaller than ``wfa_forward(keep_history=True)``.
+    score loop) — three planes for affine models, one for linear.
+    ``core.cigar`` decodes them into exact CIGARs without ever
+    materializing the full offset history.
     """
+    model, heur = _resolve(pen, heur)
     pattern, text, plen, tlen = _prep(pattern, text, plen, tlen)
     B = pattern.shape[0]
     K = 2 * k_max + 1
-    W = pen.window
+    W = model.window
     NW = n_trace_words(s_max)
     ks = jnp.arange(K, dtype=jnp.int32) - k_max
+    affine = model.kind == "affine"
 
     # data-dependent zero: keeps while-loop carries shard_map-compatible
     # (same trick as wfa_scores)
     taint = (plen.reshape(-1)[0] * 0).astype(jnp.int32)
     m_ring = jnp.full((W, B, K), NEG, jnp.int32) + taint
-    i_ring = jnp.full((W, B, K), NEG, jnp.int32) + taint
-    d_ring = jnp.full((W, B, K), NEG, jnp.int32) + taint
     m_bt = jnp.zeros((NW, B, K), jnp.int32) + taint
-    i_bt = jnp.zeros((NW, B, K), jnp.int32) + taint
-    d_bt = jnp.zeros((NW, B, K), jnp.int32) + taint
 
     M0 = jnp.full((B, K), NEG, jnp.int32).at[:, k_max].set(0)
     M0 = _extend(M0, pattern, text, plen, tlen, ks)
@@ -361,66 +537,114 @@ def wfa_scores_packed(pattern, text, plen, tlen, *, pen: Penalties,
         return lax.dynamic_update_index_in_dim(
             bt, word | jnp.left_shift(code, off), w, axis=0)
 
+    if affine:
+        i_ring = jnp.full((W, B, K), NEG, jnp.int32) + taint
+        d_ring = jnp.full((W, B, K), NEG, jnp.int32) + taint
+        i_bt = jnp.zeros((NW, B, K), jnp.int32) + taint
+        d_bt = jnp.zeros((NW, B, K), jnp.int32) + taint
+
+        def body(carry):
+            s, score, m_ring, i_ring, d_ring, m_bt, i_bt, d_bt = carry
+            M_new, I_new, D_new, cm, ci, cd = _next_affine(
+                model, lambda d: read(m_ring, s, d), pattern, text,
+                plen, tlen, ks, lambda d: read(i_ring, s, d),
+                lambda d: read(d_ring, s, d), with_codes=True)
+            reached = _target_reached(M_new, plen, tlen, k_max)
+            score = jnp.where((score < 0) & reached, s, score)
+            M_new, I_new, D_new = _prune_step(heur, plen, tlen, ks,
+                                              M_new, I_new, D_new)
+            row = lax.rem(s, W)
+            m_ring = lax.dynamic_update_index_in_dim(m_ring, M_new, row, axis=0)
+            i_ring = lax.dynamic_update_index_in_dim(i_ring, I_new, row, axis=0)
+            d_ring = lax.dynamic_update_index_in_dim(d_ring, D_new, row, axis=0)
+            m_bt = pack(m_bt, s, cm)
+            i_bt = pack(i_bt, s, ci)
+            d_bt = pack(d_bt, s, cd)
+            return s + 1, score, m_ring, i_ring, d_ring, m_bt, i_bt, d_bt
+
+        def cond(carry):
+            s, score, *_ = carry
+            return (s <= s_max) & jnp.any(score < 0)
+
+        s, score, _, _, _, m_bt, i_bt, d_bt = lax.while_loop(
+            cond, body, (jnp.int32(1), score0, m_ring, i_ring, d_ring,
+                         m_bt, i_bt, d_bt))
+        return WFAResult(score, None, None, None, s, m_bt, i_bt, d_bt)
+
     def body(carry):
-        s, score, m_ring, i_ring, d_ring, m_bt, i_bt, d_bt = carry
-        M_new, I_new, D_new, cm, ci, cd = _next_wavefronts(
-            pen, lambda d: read(m_ring, s, d), s, None, pattern, text,
-            plen, tlen, ks, lambda d: read(i_ring, s, d),
-            lambda d: read(d_ring, s, d), with_codes=True)
-        row = lax.rem(s, W)
-        m_ring = lax.dynamic_update_index_in_dim(m_ring, M_new, row, axis=0)
-        i_ring = lax.dynamic_update_index_in_dim(i_ring, I_new, row, axis=0)
-        d_ring = lax.dynamic_update_index_in_dim(d_ring, D_new, row, axis=0)
-        m_bt = pack(m_bt, s, cm)
-        i_bt = pack(i_bt, s, ci)
-        d_bt = pack(d_bt, s, cd)
+        s, score, m_ring, m_bt = carry
+        M_new, cm = _next_linear(model, lambda d: read(m_ring, s, d),
+                                 pattern, text, plen, tlen, ks,
+                                 with_codes=True)
         reached = _target_reached(M_new, plen, tlen, k_max)
         score = jnp.where((score < 0) & reached, s, score)
-        return s + 1, score, m_ring, i_ring, d_ring, m_bt, i_bt, d_bt
+        M_new = _prune_step(heur, plen, tlen, ks, M_new)
+        m_ring = lax.dynamic_update_index_in_dim(m_ring, M_new,
+                                                 lax.rem(s, W), axis=0)
+        m_bt = pack(m_bt, s, cm)
+        return s + 1, score, m_ring, m_bt
 
     def cond(carry):
         s, score, *_ = carry
         return (s <= s_max) & jnp.any(score < 0)
 
-    s, score, _, _, _, m_bt, i_bt, d_bt = lax.while_loop(
-        cond, body, (jnp.int32(1), score0, m_ring, i_ring, d_ring,
-                     m_bt, i_bt, d_bt))
-    return WFAResult(score, None, None, None, s, m_bt, i_bt, d_bt)
+    s, score, _, m_bt = lax.while_loop(
+        cond, body, (jnp.int32(1), score0, m_ring, m_bt))
+    return WFAResult(score, None, None, None, s, m_bt, None, None)
 
 
-def wfa_trace_shardmap(pattern, text, plen, tlen, *, pen: Penalties,
-                       s_max: int, k_max: int, mesh, axis_names=None):
+def wfa_trace_shardmap(pattern, text, plen, tlen, *, pen,
+                       s_max: int, k_max: int, mesh, axis_names=None,
+                       heur=None):
     """Per-shard packed-backtrace WFA under ``shard_map``.
 
     The shardmap backend's CIGAR fallback: each shard runs the packed ring
     solver to local termination (no collectives, per-shard early exit — same
     discipline as :func:`wfa_scores_shardmap`) and the packed provenance
     words come back sharded on the pair axis for host-side traceback.
+    Returns ``(score, m_bt, i_bt, d_bt)`` with ``i_bt = d_bt = None`` for
+    linear models.
     """
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
 
+    model = scoring.as_model(pen)
     names = tuple(axis_names if axis_names is not None else mesh.axis_names)
     spec2 = P(names, None)
     spec1 = P(names)
     spec_bt = P(None, names, None)
+    affine = model.kind == "affine"
 
-    def local(p, t, pl, tl):
-        r = wfa_scores_packed(p, t, pl, tl, pen=pen, s_max=s_max,
-                              k_max=k_max)
-        return r.score, r.m_bt, r.i_bt, r.d_bt
+    if affine:
+        def local(p, t, pl, tl):
+            r = wfa_scores_packed(p, t, pl, tl, pen=pen, s_max=s_max,
+                                  k_max=k_max, heur=heur)
+            return r.score, r.m_bt, r.i_bt, r.d_bt
+
+        out_specs = (spec1, spec_bt, spec_bt, spec_bt)
+    else:
+        def local(p, t, pl, tl):
+            r = wfa_scores_packed(p, t, pl, tl, pen=pen, s_max=s_max,
+                                  k_max=k_max, heur=heur)
+            return r.score, r.m_bt
+
+        out_specs = (spec1, spec_bt)
 
     kwargs = dict(mesh=mesh, in_specs=(spec2, spec2, spec1, spec1),
-                  out_specs=(spec1, spec_bt, spec_bt, spec_bt))
+                  out_specs=out_specs)
     try:
         fn = shard_map(local, check_rep=False, **kwargs)
     except TypeError:  # newer jax dropped the check_rep kwarg
         fn = shard_map(local, **kwargs)
-    return fn(pattern, text, plen, tlen)
+    out = fn(pattern, text, plen, tlen)
+    if affine:
+        return out
+    return out[0], out[1], None, None
 
 
-def wfa_scores_shardmap(pattern, text, plen, tlen, *, pen: Penalties,
-                        s_max: int, k_max: int, mesh, axis_names=None):
+def wfa_scores_shardmap(pattern, text, plen, tlen, *, pen,
+                        s_max: int, k_max: int, mesh, axis_names=None,
+                        heur=None):
     """PIM-faithful distributed WFA: per-shard termination via shard_map.
 
     The pjit formulation's while-condition ``any(score < 0)`` spans the
@@ -439,7 +663,7 @@ def wfa_scores_shardmap(pattern, text, plen, tlen, *, pen: Penalties,
 
     def local(p, t, pl, tl):
         return wfa_scores(p, t, pl, tl, pen=pen, s_max=s_max,
-                          k_max=k_max).score
+                          k_max=k_max, heur=heur).score
 
     kwargs = dict(mesh=mesh, in_specs=(spec2, spec2, spec1, spec1),
                   out_specs=spec1)

@@ -1,2 +1,3 @@
 from repro.data.reads import ReadPairSpec, generate_pairs, generate_shard  # noqa: F401
+from repro.data.io import iter_seqs, load_pair_files, read_seqs  # noqa: F401
 from repro.data.tokens import TokenStreamSpec, batch_for_step  # noqa: F401

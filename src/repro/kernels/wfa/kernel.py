@@ -5,8 +5,8 @@ Hardware mapping (DESIGN.md §2):
 * one **grid program** ≙ one DPU: it owns a block of ``BP`` pairs and runs
   their entire alignment without leaving VMEM;
 * **BlockSpec** HBM→VMEM tiling of the pair batch ≙ the MRAM→WRAM DMA;
-* the M/I/D **ring buffers** (depth ``window = max(x,o+e)+1``) live in VMEM
-  scratch ≙ the WFA metadata the paper keeps hot in WRAM;
+* the wavefront **ring buffers** (depth ``window = max(x,o+e)+1``) live in
+  VMEM scratch ≙ the WFA metadata the paper keeps hot in WRAM;
 * wavefronts are laid out ``[pairs, diagonals]`` on (sublane, lane) —
   every arithmetic op is a full-width vector op;
 * character fetch during extension uses a **one-hot compare-and-reduce**
@@ -14,18 +14,27 @@ Hardware mapping (DESIGN.md §2):
   lack (UPMEM's scalar loads do not transfer);
 * no communication between grid programs ≙ no inter-DPU communication.
 
+The kernel is specialized per **penalty model** (``core.scoring``): affine
+models run the three-matrix M/I/D recurrence over three VMEM rings;
+linear models (``GapLinear`` / ``Edit``) collapse to the one-matrix
+recurrence over a **single** ring — a third of the per-step VMEM working
+set and fewer VPU ops per score step.  A **wavefront heuristic**
+(``AdaptiveBand`` / ``ZDrop``) optionally masks pruned k-lanes to the
+invalid sentinel after each step, so dead diagonals cost no further
+extension trips.
+
 Two output modes, built from the same kernel body:
 
 * score-only (throughput) — exactly like the ring-buffer jnp reference
   ``kernels.wfa.ref.ref_scores`` it is validated against;
 * packed backtrace (``trace=True``) — additionally OR-accumulates 2-bit
-  per-cell provenance codes for M/I/D into ``[n_words, B, K]`` int32 words
-  (16 score steps per word, same encoding as
-  ``core.wavefront.wfa_scores_packed``), which
-  ``core.cigar.traceback_packed_batch`` decodes into exact CIGARs on the
-  host.  The rings stay the only per-step working set in VMEM; the packed
-  words are ~16x smaller than a full offset history, so full alignments fit
-  the same bucketed batches the score path serves.
+  per-cell provenance codes into ``[n_words, B, K]`` int32 words (16 score
+  steps per word, same encoding as ``core.wavefront.wfa_scores_packed``;
+  three planes for affine, one for linear), which ``core.cigar`` decodes
+  into exact CIGARs on the host.  The rings stay the only per-step working
+  set in VMEM; the packed words are ~16x smaller than a full offset
+  history, so full alignments fit the same bucketed batches the score path
+  serves.
 """
 from __future__ import annotations
 
@@ -37,10 +46,11 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.penalties import Penalties
+from repro.core import scoring
 from repro.core.wavefront import (BT_GAP_EXT, BT_GAP_OPEN, BT_M_FROM_D,
                                   BT_M_FROM_I, BT_M_FROM_X,
-                                  TRACE_CELLS_PER_WORD, n_trace_words)
+                                  TRACE_CELLS_PER_WORD, keep_mask,
+                                  n_trace_words)
 
 NEG = -(1 << 20)
 _THRESH = NEG // 2
@@ -60,15 +70,19 @@ def _gather_chars(seq, idx):
     return jnp.sum(jnp.where(hit, seq[:, None, :], 0), axis=2)
 
 
-def _make_kernel(pen: Penalties, s_max: int, trace: bool = False):
-    x, o, e = pen.x, pen.o, pen.e
-    W = pen.window
+def _make_kernel(model, heur, s_max: int, trace: bool = False):
+    x, o, e = model.x, model.o, model.e
+    W = model.window
+    affine = model.kind == "affine"
+    n_bt = (3 if affine else 1) if trace else 0
 
     def kernel(p_ref, t_ref, pl_ref, tl_ref, out_ref, steps_ref, *refs):
-        if trace:
-            bt_m, bt_i, bt_d, m_ring, i_ring, d_ring = refs
+        bt_refs = refs[:n_bt]
+        rings = refs[n_bt:]
+        if affine:
+            m_ring, i_ring, d_ring = rings
         else:
-            m_ring, i_ring, d_ring = refs
+            (m_ring,) = rings
         BP, Lp = p_ref.shape
         _, Lt = t_ref.shape
         K = m_ring.shape[-1]
@@ -101,6 +115,14 @@ def _make_kernel(pen: Penalties, s_max: int, trace: bool = False):
             hit = (ks == k_final) & (M >= tlen) & (M > _THRESH)
             return jnp.any(hit, axis=1, keepdims=True)
 
+        def prune(M):
+            # shared policy implementation; plen/tlen/ks are already in
+            # keep_mask's 2-D convention ([BP, 1] / [BP, K])
+            keep = keep_mask(heur, M, plen, tlen, ks)
+            if keep is None:
+                return M, None
+            return jnp.where(keep, M, NEG), keep
+
         def store_row(ring, row, val):
             ring[pl.ds(row, 1)] = val[None]
 
@@ -119,33 +141,38 @@ def _make_kernel(pen: Penalties, s_max: int, trace: bool = False):
         # s = 0
         if trace:
             # out buffers are uninitialized; codes are OR-accumulated
-            bt_m[...] = jnp.zeros_like(bt_m)
-            bt_i[...] = jnp.zeros_like(bt_i)
-            bt_d[...] = jnp.zeros_like(bt_d)
+            for bt in bt_refs:
+                bt[...] = jnp.zeros_like(bt)
         M0 = jnp.where(ks == 0, 0, NEG)
         M0 = extend(M0)
         store_row(m_ring, 0, M0)
-        store_row(i_ring, 0, jnp.full((BP, K), NEG, jnp.int32))
-        store_row(d_ring, 0, jnp.full((BP, K), NEG, jnp.int32))
+        if affine:
+            store_row(i_ring, 0, jnp.full((BP, K), NEG, jnp.int32))
+            store_row(d_ring, 0, jnp.full((BP, K), NEG, jnp.int32))
         score0 = jnp.where(reached(M0), 0, -1)
+
+        neg_col = jnp.full((BP, 1), NEG, jnp.int32)
+        sh_r = lambda w: jnp.concatenate([neg_col, w[:, :-1]], axis=1)
+        sh_l = lambda w: jnp.concatenate([w[:, 1:], neg_col], axis=1)
 
         def body(carry):
             s, score = carry
-            m_owe = load_row(m_ring, s, o + e)
             m_x = load_row(m_ring, s, x)
-            i_e = load_row(i_ring, s, e)
-            d_e = load_row(d_ring, s, e)
+            if affine:
+                m_owe = load_row(m_ring, s, o + e)
+                i_e = load_row(i_ring, s, e)
+                d_e = load_row(d_ring, s, e)
+                i_open, i_ext = sh_r(m_owe), sh_r(i_e)
+                i_src = jnp.maximum(i_open, i_ext)
+                d_open, d_ext = sh_l(m_owe), sh_l(d_e)
+                d_src = jnp.maximum(d_open, d_ext)
+            else:
+                m_e = m_x if x == e else load_row(m_ring, s, e)
+                i_src = sh_r(m_e)
+                d_src = sh_l(m_e)
 
-            neg_col = jnp.full((BP, 1), NEG, jnp.int32)
-            sh_r = lambda w: jnp.concatenate([neg_col, w[:, :-1]], axis=1)
-            sh_l = lambda w: jnp.concatenate([w[:, 1:], neg_col], axis=1)
-
-            i_open, i_ext = sh_r(m_owe), sh_r(i_e)
-            i_src = jnp.maximum(i_open, i_ext)
             I_new = jnp.where((i_src > _THRESH) & (i_src + 1 <= tlen),
                               i_src + 1, NEG)
-            d_open, d_ext = sh_l(m_owe), sh_l(d_e)
-            d_src = jnp.maximum(d_open, d_ext)
             D_new = jnp.where((d_src > _THRESH) & (d_src - ks <= plen),
                               d_src, NEG)
             X_new = jnp.where((m_x > _THRESH) & (m_x + 1 <= tlen)
@@ -153,27 +180,39 @@ def _make_kernel(pen: Penalties, s_max: int, trace: bool = False):
             M_pre = jnp.maximum(jnp.maximum(X_new, I_new), D_new)
             M_new = extend(M_pre)
 
-            row = lax.rem(s, W)
-            store_row(m_ring, row, M_new)
-            store_row(i_ring, row, I_new)
-            store_row(d_ring, row, D_new)
             if trace:
-                # same codes and tie-breaks as wfa_scores_packed
+                # codes from the PRE-prune fronts — bit-identical to
+                # wfa_scores_packed even on lanes a heuristic then kills
+                # (those codes are unreachable in traceback either way)
                 code_m = jnp.where(
                     M_pre > _THRESH,
                     jnp.where(M_pre == X_new, BT_M_FROM_X,
                               jnp.where(M_pre == I_new, BT_M_FROM_I,
                                         BT_M_FROM_D)), 0)
-                code_i = jnp.where(
-                    I_new > _THRESH,
-                    jnp.where(i_ext >= i_open, BT_GAP_EXT, BT_GAP_OPEN), 0)
-                code_d = jnp.where(
-                    D_new > _THRESH,
-                    jnp.where(d_ext >= d_open, BT_GAP_EXT, BT_GAP_OPEN), 0)
-                pack_code(bt_m, s, code_m)
-                pack_code(bt_i, s, code_i)
-                pack_code(bt_d, s, code_d)
+                pack_code(bt_refs[0], s, code_m)
+                if affine:
+                    code_i = jnp.where(
+                        I_new > _THRESH,
+                        jnp.where(i_ext >= i_open, BT_GAP_EXT,
+                                  BT_GAP_OPEN), 0)
+                    code_d = jnp.where(
+                        D_new > _THRESH,
+                        jnp.where(d_ext >= d_open, BT_GAP_EXT,
+                                  BT_GAP_OPEN), 0)
+                    pack_code(bt_refs[1], s, code_i)
+                    pack_code(bt_refs[2], s, code_d)
+
             score = jnp.where((score < 0) & reached(M_new), s, score)
+            M_new, keep = prune(M_new)
+            if affine and keep is not None:
+                I_new = jnp.where(keep, I_new, NEG)
+                D_new = jnp.where(keep, D_new, NEG)
+
+            row = lax.rem(s, W)
+            store_row(m_ring, row, M_new)
+            if affine:
+                store_row(i_ring, row, I_new)
+                store_row(d_ring, row, D_new)
             return s + 1, score
 
         def cond(carry):
@@ -184,25 +223,29 @@ def _make_kernel(pen: Penalties, s_max: int, trace: bool = False):
         out_ref[...] = score
         steps_ref[...] = jnp.broadcast_to(s_end, steps_ref.shape)
 
-    return kernel, W
+    return kernel, W, affine
 
 
 @functools.partial(jax.jit, static_argnames=("pen", "s_max", "k_pad",
                                              "block_pairs", "interpret",
-                                             "trace"))
-def wfa_pallas(pattern, text, plen, tlen, *, pen: Penalties, s_max: int,
+                                             "trace", "heur"))
+def wfa_pallas(pattern, text, plen, tlen, *, pen, s_max: int,
                k_pad: int, block_pairs: int = 8, interpret: bool = True,
-               trace: bool = False):
+               trace: bool = False, heur=None):
     """pattern/text [B, L*] int32 (B % block_pairs == 0, L* % 128 == 0),
     plen/tlen [B, 1] int32, k_pad % 128 == 0 is the padded diagonal count.
     -> (score [B, 1] int32, steps [B, 1] int32); with ``trace`` additionally
-    three [n_words, B, k_pad] int32 packed provenance arrays."""
+    the [n_words, B, k_pad] int32 packed provenance arrays (three for
+    affine models, one for linear)."""
     B, Lp = pattern.shape
     Lt = text.shape[1]
     BP = block_pairs
     assert B % BP == 0, (B, BP)
-    kernel, W = _make_kernel(pen, s_max, trace=trace)
+    model = scoring.as_model(pen)
+    heur = scoring.as_heuristic(heur)
+    kernel, W, affine = _make_kernel(model, heur, s_max, trace=trace)
     grid = (B // BP,)
+    n_rings = 3 if affine else 1
 
     spec2 = lambda L: pl.BlockSpec((BP, L), lambda i: (i, 0))
     out_specs = [spec2(1), spec2(1)]
@@ -210,15 +253,16 @@ def wfa_pallas(pattern, text, plen, tlen, *, pen: Penalties, s_max: int,
                  jax.ShapeDtypeStruct((B, 1), jnp.int32)]
     if trace:
         NW = n_trace_words(s_max)
+        n_bt = 3 if affine else 1
         bt_spec = pl.BlockSpec((NW, BP, k_pad), lambda i: (0, i, 0))
-        out_specs += [bt_spec] * 3
-        out_shape += [jax.ShapeDtypeStruct((NW, B, k_pad), jnp.int32)] * 3
+        out_specs += [bt_spec] * n_bt
+        out_shape += [jax.ShapeDtypeStruct((NW, B, k_pad), jnp.int32)] * n_bt
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[spec2(Lp), spec2(Lt), spec2(1), spec2(1)],
         out_specs=out_specs,
         out_shape=out_shape,
-        scratch_shapes=[pltpu.VMEM((W, BP, k_pad), jnp.int32)] * 3,
+        scratch_shapes=[pltpu.VMEM((W, BP, k_pad), jnp.int32)] * n_rings,
         interpret=interpret,
     )(pattern, text, plen, tlen)

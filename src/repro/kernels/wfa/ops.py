@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.penalties import Penalties
+from repro.core import scoring
 from repro.kernels.wfa.kernel import wfa_pallas
 
 LANE = 128
@@ -32,14 +32,17 @@ def _pad_axis(x, axis: int, to: int, value=0):
     return jnp.pad(x, widths, constant_values=value)
 
 
-def wfa_align(pattern, text, plen, tlen, *, pen: Penalties, s_max: int,
+def wfa_align(pattern, text, plen, tlen, *, pen, s_max: int,
               k_max: int, block_pairs: int = 8,
-              interpret: Optional[bool] = None):
+              interpret: Optional[bool] = None, heur=None):
     """Batched WFA scores via the Pallas kernel.
 
     pattern/text: [B, L*] int; plen/tlen: [B] int.  Returns [B] int32 costs
-    (-1 where the optimal cost exceeds ``s_max``).  ``interpret`` defaults to
-    True off-TPU (CPU validation) and False on TPU.
+    (-1 where the optimal cost exceeds ``s_max``).  ``pen`` may be any
+    ``PenaltyModel`` (or a legacy ``Penalties`` triple) and ``heur`` an
+    optional ``WavefrontHeuristic``; both specialize the kernel statically.
+    ``interpret`` defaults to True off-TPU (CPU validation) and False on
+    TPU.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -63,20 +66,22 @@ def wfa_align(pattern, text, plen, tlen, *, pen: Penalties, s_max: int,
 
     score, _ = wfa_pallas(pattern, text, plen2, tlen2, pen=pen, s_max=s_max,
                           k_pad=k_pad, block_pairs=block_pairs,
-                          interpret=interpret)
+                          interpret=interpret,
+                          heur=scoring.as_heuristic(heur))
     return score[:B, 0]
 
 
-def wfa_align_trace(pattern, text, plen, tlen, *, pen: Penalties, s_max: int,
+def wfa_align_trace(pattern, text, plen, tlen, *, pen, s_max: int,
                     k_max: int, block_pairs: int = 8,
-                    interpret: Optional[bool] = None):
+                    interpret: Optional[bool] = None, heur=None):
     """Batched WFA scores *plus* packed backtrace via the Pallas kernel.
 
     Same padding contract as :func:`wfa_align`; returns
     ``(score [B], m_bt, i_bt, d_bt)`` where the bt arrays are
     ``[n_words, B, k_pad]`` int32 packed 2-bit provenance words
     (``core.cigar.traceback_packed_batch`` decodes them; the diagonal
-    center is ``k_pad // 2``).
+    center is ``k_pad // 2``).  Linear penalty models record a single M
+    plane: ``i_bt = d_bt = None``.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -97,9 +102,14 @@ def wfa_align_trace(pattern, text, plen, tlen, *, pen: Penalties, s_max: int,
     plen2 = _pad_axis(plen[:, None], 0, Bp)
     tlen2 = _pad_axis(tlen[:, None], 0, Bp)
 
-    score, _, m_bt, i_bt, d_bt = wfa_pallas(
+    out = wfa_pallas(
         pattern, text, plen2, tlen2, pen=pen, s_max=s_max, k_pad=k_pad,
-        block_pairs=block_pairs, interpret=interpret, trace=True)
+        block_pairs=block_pairs, interpret=interpret, trace=True,
+        heur=scoring.as_heuristic(heur))
+    if scoring.as_model(pen).kind == "linear":
+        score, _, m_bt = out
+        return score[:B, 0], m_bt[:, :B, :], None, None
+    score, _, m_bt, i_bt, d_bt = out
     return (score[:B, 0], m_bt[:, :B, :], i_bt[:, :B, :], d_bt[:, :B, :])
 
 

@@ -13,6 +13,7 @@ QUICK_MODULES = {
     "test_engine",
     "test_session",
     "test_cigar_pipeline",
+    "test_scoring_models",
     "test_wfa_property",
     "test_analysis",
     "test_fault_dist",

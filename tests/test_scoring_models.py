@@ -1,0 +1,370 @@
+"""Scoring-model & wavefront-heuristic subsystem (``core.scoring``).
+
+Every backend must produce oracle-exact scores and re-scorable CIGARs for
+every penalty model (edit / gap-linear / gap-affine); adaptive-band
+pruning must stay score-safe on the paper's regime and flag its results
+approximate; mixed-model tickets must coexist in one streaming session;
+and the deprecated shims must forward the engine-era ``penalties`` kwarg
+instead of raising.
+"""
+import gzip
+
+import numpy as np
+import pytest
+from conftest import random_pairs as _random_pairs
+
+from repro.core.engine import AlignmentEngine
+from repro.core.gotoh import gotoh_score_vec, score_cigar
+from repro.core.penalties import DEFAULT, Penalties
+from repro.core.scoring import (EXACT, AdaptiveBand, Edit, GapAffine,
+                                GapLinear, NoHeuristic, ZDrop, as_heuristic,
+                                as_model, parse_heuristic, parse_penalties)
+
+MODELS = [Edit(), GapLinear(mismatch=3, gap_extend=2), GapAffine(4, 6, 2)]
+
+
+def _oracle(pats, txts, model):
+    pen = model.as_penalties()
+    return np.asarray([
+        gotoh_score_vec(np.frombuffer(p.encode(), np.uint8),
+                        np.frombuffer(t.encode(), np.uint8), pen)
+        for p, t in zip(pats, txts)], np.int32)
+
+
+def _levenshtein(p, t):
+    """Independent O(nm) edit distance (no shared code with Gotoh/WFA)."""
+    prev = list(range(len(t) + 1))
+    for i, pc in enumerate(p, 1):
+        cur = [i]
+        for j, tc in enumerate(t, 1):
+            cur.append(min(prev[j] + 1, cur[j - 1] + 1,
+                           prev[j - 1] + (pc != tc)))
+        prev = cur
+    return prev[-1]
+
+
+def _assert_rescore(res, pats, txts, model, oracle):
+    pen = model.as_penalties()
+    np.testing.assert_array_equal(res.scores, oracle)
+    assert res.cigars is not None
+    for i, (p, t) in enumerate(zip(pats, txts)):
+        pa = np.frombuffer(p.encode(), np.uint8)
+        ta = np.frombuffer(t.encode(), np.uint8)
+        cost, ci, cj, ok = score_cigar(res.cigars[i], pa, ta, pen)
+        assert ok, (i, p, t)
+        assert cost == oracle[i], (i, cost, oracle[i])
+        assert ci == len(p) and cj == len(t), (i, ci, cj)
+
+
+# ------------------------------------------------ model/heuristic types ----
+
+
+def test_model_normalization_and_attrs():
+    assert as_model(Penalties(4, 6, 2)) == GapAffine(4, 6, 2)
+    assert as_model(None) == GapAffine()
+    assert as_model(Edit()) is not None
+    e = Edit()
+    assert (e.x, e.o, e.e, e.kind, e.window) == (1, 0, 1, "linear", 2)
+    lin = GapLinear(mismatch=4, gap_extend=2)
+    assert (lin.o, lin.kind) == (0, "linear")
+    aff = GapAffine(4, 6, 2)
+    assert (aff.kind, aff.window) == ("affine", 9)
+    # hashable: usable as jit static args / cache keys
+    assert len({Edit(), Edit(), GapLinear(), aff}) == 3
+    assert as_heuristic(None) == EXACT and EXACT.exact
+    assert not AdaptiveBand().exact and not ZDrop().exact
+
+
+def test_parse_specs():
+    assert parse_penalties("edit") == Edit()
+    assert parse_penalties("linear:3,2") == GapLinear(3, 2)
+    assert parse_penalties("affine:4,6,2") == GapAffine(4, 6, 2)
+    assert parse_penalties("4,6,2") == GapAffine(4, 6, 2)
+    with pytest.raises(ValueError):
+        parse_penalties("bogus")
+    assert parse_heuristic("none") == NoHeuristic()
+    assert parse_heuristic("adaptive:8,40") == AdaptiveBand(8, 40)
+    assert parse_heuristic("zdrop:64") == ZDrop(64)
+    with pytest.raises(ValueError):
+        parse_heuristic("adaptive:1")
+
+
+def test_model_bounds_shrink_with_model():
+    # the E-derived score cap shrinks with the per-edit unit cost
+    aff, ed = GapAffine(4, 6, 2), Edit()
+    assert ed.unit_cost() == 1 < aff.unit_cost()
+    assert ed.score_bound(100, 0.04) < aff.score_bound(100, 0.04)
+    assert ed.worst_score(50, 60) == 50 + 10
+
+
+# ------------------------------------------------ backend parity suite ----
+
+
+@pytest.mark.parametrize("model", MODELS, ids=["edit", "linear", "affine"])
+@pytest.mark.parametrize("backend", ["ref", "ring"])
+def test_model_oracle_parity_score_and_cigar(rng, model, backend):
+    pats, txts = _random_pairs(rng, 10, lo=4, hi=70)
+    pats += ["ACGT" * 10, ""]            # divergent + empty edges
+    txts += ["TTTT" * 11, "ACG"]
+    oracle = _oracle(pats, txts, model)
+    eng = AlignmentEngine(model, backend=backend, edit_frac=0.05)
+    res = eng.align(pats, txts)
+    np.testing.assert_array_equal(res.scores, oracle)
+    assert not res.approximate
+    resc = eng.align(pats, txts, output="cigar")
+    _assert_rescore(resc, pats, txts, model, oracle)
+
+
+@pytest.mark.parametrize("model", MODELS, ids=["edit", "linear", "affine"])
+def test_kernel_model_parity(rng, model):
+    # one bucket shape: pallas interpret-mode compiles dominate, keep small
+    pats, txts = _random_pairs(rng, 6, lo=8, hi=56)
+    oracle = _oracle(pats, txts, model)
+    eng = AlignmentEngine(model, backend="kernel", edit_frac=0.08,
+                          bucket_by_length=False)
+    res = eng.align(pats, txts, output="cigar")
+    _assert_rescore(res, pats, txts, model, oracle)
+
+
+@pytest.mark.parametrize("model", MODELS, ids=["edit", "linear", "affine"])
+def test_shardmap_model_parity(rng, model):
+    import jax
+    from repro.distributed.compat import make_mesh
+    mesh = make_mesh((jax.device_count(),), ("pairs",))
+    pats, txts = _random_pairs(rng, 8, lo=6, hi=48)
+    oracle = _oracle(pats, txts, model)
+    eng = AlignmentEngine(model, backend="shardmap", mesh=mesh,
+                          edit_frac=0.08, bucket_by_length=False)
+    res = eng.align(pats, txts, output="cigar")
+    _assert_rescore(res, pats, txts, model, oracle)
+
+
+def test_edit_model_is_levenshtein(rng):
+    pats, txts = _random_pairs(rng, 12, lo=3, hi=60)
+    eng = AlignmentEngine(Edit(), backend="ring", edit_frac=0.1)
+    res = eng.align(pats, txts)
+    want = [_levenshtein(p, t) for p, t in zip(pats, txts)]
+    np.testing.assert_array_equal(res.scores, want)
+
+
+def test_per_call_model_override_shares_engine(rng):
+    pats, txts = _random_pairs(rng, 8, lo=5, hi=50)
+    eng = AlignmentEngine(backend="ring", edit_frac=0.1)   # affine default
+    r_aff = eng.align(pats, txts)
+    r_edit = eng.align(pats, txts, penalties=Edit())
+    np.testing.assert_array_equal(r_aff.scores,
+                                  _oracle(pats, txts, GapAffine()))
+    np.testing.assert_array_equal(r_edit.scores, _oracle(pats, txts, Edit()))
+    # both models' executables coexist in one cache; re-running re-traces
+    # nothing
+    before = eng.cache_traces()
+    eng.align(pats, txts, penalties=Edit())
+    eng.align(pats, txts)
+    assert eng.cache_traces() == before
+
+
+# ------------------------------------------------ heuristics --------------
+
+
+def test_adaptive_band_score_safety(rng):
+    # the paper's regime: reads with bounded divergence — the adaptive band
+    # must not change any score, only flag approximation
+    pats, txts = _random_pairs(rng, 16, lo=20, hi=120, drift=5)
+    eng = AlignmentEngine(backend="ring", edit_frac=0.1)
+    exact = eng.align(pats, txts)
+    approx = eng.align(pats, txts, heuristic=AdaptiveBand())
+    assert approx.approximate and not exact.approximate
+    np.testing.assert_array_equal(exact.scores, approx.scores)
+
+
+def test_heuristic_upper_bound_on_divergent_pairs(rng):
+    # truly divergent pairs: a tight band may miss the optimum, but any
+    # resolved heuristic score must stay an upper bound on the exact cost
+    pats = ["".join(rng.choice(list("ACGT"), size=60)) for _ in range(6)]
+    txts = ["".join(rng.choice(list("ACGT"), size=60)) for _ in range(6)]
+    eng = AlignmentEngine(backend="ring")        # exact worst-case bounds
+    exact = eng.align(pats, txts)
+    approx = eng.align(pats, txts,
+                       heuristic=AdaptiveBand(min_wf_len=4,
+                                              max_distance_diff=8))
+    found = approx.scores >= 0
+    assert (approx.scores[found] >= exact.scores[found]).all()
+
+
+def test_heuristic_cigars_rescore_to_reported_score(rng):
+    pats, txts = _random_pairs(rng, 10, lo=10, hi=80)
+    eng = AlignmentEngine(backend="ring", edit_frac=0.1,
+                          heuristic=AdaptiveBand())
+    res = eng.align(pats, txts, output="cigar")
+    assert res.approximate
+    for i, (p, t) in enumerate(zip(pats, txts)):
+        if res.scores[i] < 0:
+            continue
+        cost, ci, cj, ok = score_cigar(
+            res.cigars[i], np.frombuffer(p.encode(), np.uint8),
+            np.frombuffer(t.encode(), np.uint8), DEFAULT)
+        assert ok and cost == res.scores[i], (i, cost, res.scores[i])
+
+
+def test_zdrop_on_kernel_backend(rng):
+    pats, txts = _random_pairs(rng, 6, lo=8, hi=56)
+    eng = AlignmentEngine(backend="kernel", edit_frac=0.08,
+                          bucket_by_length=False)
+    exact = eng.align(pats, txts)
+    zd = eng.align(pats, txts, heuristic=ZDrop(zdrop=100))
+    assert zd.approximate
+    np.testing.assert_array_equal(exact.scores, zd.scores)
+
+
+def test_heuristic_unaware_plugin_fails_loudly(rng):
+    from repro.core import wavefront as wf
+    from repro.core.backends import register_backend, unregister_backend
+
+    @register_backend("no-heur")
+    def _plain(pattern, text, plen, tlen, *, pen, s_max, k_max):
+        return wf.wfa_scores(pattern, text, plen, tlen, pen=pen,
+                             s_max=s_max, k_max=k_max)
+
+    try:
+        eng = AlignmentEngine(backend="no-heur", edit_frac=0.1)
+        pats, txts = _random_pairs(rng, 4, lo=5, hi=30)
+        res = eng.align(pats, txts)            # exact path still serves
+        np.testing.assert_array_equal(res.scores,
+                                      _oracle(pats, txts, GapAffine()))
+        with pytest.raises(ValueError, match="heuristic"):
+            eng.align(pats, txts, heuristic=AdaptiveBand())
+        with pytest.raises(ValueError, match="linear"):
+            eng.align(pats, txts, penalties=Edit())   # affine-only plug-in
+        # a rejected submit must not brick the session: validation happens
+        # before the ticket exists, so prior tickets still complete
+        with eng.stream() as sess:
+            ok = sess.submit(pats, txts)
+            with pytest.raises(ValueError, match="heuristic"):
+                sess.submit(pats, txts, heuristic=AdaptiveBand())
+            np.testing.assert_array_equal(ok.result().scores,
+                                          _oracle(pats, txts, GapAffine()))
+    finally:
+        unregister_backend("no-heur")
+
+
+def test_linear_only_plugin_serves_cigar(rng):
+    # a backend declaring only the linear recurrence must serve
+    # output="cigar" for linear models (the kind check must use the model
+    # in play, not assume affine)
+    from repro.core import wavefront as wf
+    from repro.core.backends import register_backend, unregister_backend
+
+    def _trace(pattern, text, plen, tlen, *, pen, s_max, k_max):
+        return wf.wfa_scores_packed(pattern, text, plen, tlen, pen=pen,
+                                    s_max=s_max, k_max=k_max)
+
+    @register_backend("lin-only", trace_variant=_trace, models=("linear",))
+    def _score(pattern, text, plen, tlen, *, pen, s_max, k_max):
+        return wf.wfa_scores(pattern, text, plen, tlen, pen=pen,
+                             s_max=s_max, k_max=k_max)
+
+    try:
+        pats, txts = _random_pairs(rng, 6, lo=5, hi=40)
+        eng = AlignmentEngine(Edit(), backend="lin-only", edit_frac=0.1)
+        res = eng.align(pats, txts, output="cigar")
+        _assert_rescore(res, pats, txts, Edit(), _oracle(pats, txts, Edit()))
+        with pytest.raises(ValueError, match="affine"):
+            eng.align(pats, txts, penalties=GapAffine())
+    finally:
+        unregister_backend("lin-only")
+
+
+# ------------------------------------------------ sessions ---------------
+
+
+def test_mixed_model_tickets_one_session(rng):
+    pats, txts = _random_pairs(rng, 12, lo=5, hi=60)
+    eng = AlignmentEngine(backend="ring", edit_frac=0.1, chunk_pairs=8)
+    with eng.stream(max_inflight_waves=2) as sess:
+        by_index = {}
+        for model in MODELS:
+            tk = sess.submit(pats, txts, penalties=model, output="cigar")
+            by_index[tk.index] = model
+        tk_h = sess.submit(pats, txts, heuristic=AdaptiveBand())
+        seen = 0
+        for tk in sess.as_completed():
+            seen += 1
+            res = tk.result()
+            if tk.index == tk_h.index:
+                assert res.approximate
+                continue
+            model = by_index[tk.index]
+            _assert_rescore(res, pats, txts, model,
+                            _oracle(pats, txts, model))
+    assert seen == len(MODELS) + 1
+
+
+# ------------------------------------------------ deprecated shims -------
+
+
+def test_wfaligner_forwards_penalties_kwarg():
+    from repro.core.aligner import WFAligner
+    with pytest.warns(DeprecationWarning):
+        al = WFAligner(penalties=Edit(), backend="ring")
+    assert al.engine.pen == Edit()
+    r = al.align(["GATTACA"], ["GATTTACA"])
+    assert r.scores[0] == 1
+
+
+def test_pim_batch_aligner_forwards_penalties_kwarg():
+    from repro.core.aligner import WFAligner
+    from repro.core.pim import PIMBatchAligner
+    with pytest.warns(DeprecationWarning):
+        al = WFAligner(backend="ring")
+        ex = PIMBatchAligner(al, penalties=Edit())
+    assert ex.engine.pen == Edit()
+    scores, stats = ex.run(["GATTACA"], ["GATTTACA"])
+    assert scores[0] == 1 and stats.n_pairs == 1
+
+
+# ------------------------------------------------ FASTA/FASTQ reader -----
+
+
+def test_fasta_fastq_readers(tmp_path):
+    from repro.data.io import load_pair_files, read_seqs
+    fa = tmp_path / "refs.fa"
+    fa.write_text(">r0 desc\nACGT\nACGT\n>r1\nGATTACA\n")
+    fq_plain = tmp_path / "reads.fq"
+    fq_plain.write_text("@q0\nACGTACGA\n+\nIIIIIIII\n@q1 x\nGATTTACA\n+q1\n"
+                        "IIIIIIII\n")
+    # gzip the fastq under a lying extension: magic-byte sniff must win
+    fq = tmp_path / "reads.fastq"
+    fq.write_bytes(gzip.compress(fq_plain.read_bytes()))
+
+    names, seqs = read_seqs(str(fa))
+    assert names == ["r0", "r1"]
+    assert [bytes(s.tobytes()).decode() for s in seqs] == ["ACGTACGT",
+                                                           "GATTACA"]
+    names, seqs = read_seqs(str(fq))
+    assert names == ["q0", "q1"]
+    assert len(seqs[0]) == 8
+
+    P, plen, T, tlen = load_pair_files(str(fq), str(fa))
+    assert P.shape[0] == 2 and plen.tolist() == [8, 7]
+    assert tlen.tolist() == [8, 8]
+    eng = AlignmentEngine(backend="ring")
+    res = eng.align_packed(P, plen, T, tlen, penalties=Edit())
+    assert res.scores[1] == 1          # GATTACA vs GATTTACA
+
+
+def test_reader_rejects_mismatched_and_malformed(tmp_path):
+    from repro.data.io import load_pair_files, read_seqs
+    fa = tmp_path / "a.fa"
+    fa.write_text(">only\nACGT\n")
+    fb = tmp_path / "b.fa"
+    fb.write_text(">x\nAC\n>y\nGT\n")
+    with pytest.raises(ValueError, match="disagree"):
+        load_pair_files(str(fa), str(fb))
+    bad = tmp_path / "bad.txt"
+    bad.write_text("not a sequence file\n")
+    with pytest.raises(ValueError, match="not FASTA or FASTQ"):
+        read_seqs(str(bad))
+    trunc = tmp_path / "trunc.fq"
+    trunc.write_text("@q0\nACGT\n+\n")
+    with pytest.raises(ValueError, match="truncated"):
+        read_seqs(str(trunc))
