@@ -1,0 +1,170 @@
+"""Read-mapping throughput: index build, candidate generation, end-to-end.
+
+The mapping subsystem's contract is that the WFA extension stage — the
+part the paper accelerates — dominates end-to-end time, with seeding and
+chaining as bounded overhead on top.  This suite tracks the stages
+separately and the ratio that enforces the contract:
+
+* ``mapping/index_build`` — minimizer index construction rate (Mbp/s);
+* ``mapping/candidates``  — seed + chain only (candidates/read derived);
+* ``mapping/map``         — full seed-chain-extend-trim per read through
+  ``AlignmentEngine.stream()`` (mappings/s);
+* ``mapping/pairwise``    — the same engine aligning the same number of
+  same-length pairs with CIGARs, no mapping stages (pairs/s) — the
+  paper's raw workload as the baseline.
+
+``main(--check)`` is the CI gate: end-to-end mappings/s must stay within
+``--max-ratio`` (default 10x) of raw pairwise pairs/s at the same read
+count.  If indexing or chaining ever swamps extension, the ratio blows
+past the bound and the build fails.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.data.dna import random_reference
+from repro.data.reads import (ReadPairSpec, generate_pairs,
+                              sample_from_reference)
+from repro.mapping.chain import candidates
+from repro.mapping.extend import ReadMapper
+from repro.mapping.index import MinimizerIndex
+
+
+def run(reads: int = 512, read_len: int = 100, ref_len: int = 200_000,
+        edit_frac: float = 0.02, backend: str = "ring",
+        rounds: int = 3) -> list[Row]:
+    rows: list[Row] = []
+    ref = random_reference(ref_len, seed=5)
+
+    # index build rate (fresh build each round — build cost is the point)
+    best = float("inf")
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        index = MinimizerIndex.build([ref], ["chr1"])
+        best = min(best, time.perf_counter() - t0)
+    rows.append(("mapping/index_build", best * 1e6,
+                 f"{ref_len / best / 1e6:.1f}Mbp/s "
+                 f"{index.nbytes() / 1e6:.1f}MB"))
+
+    sampled = sample_from_reference(ref, reads, read_len=read_len,
+                                    edit_frac=edit_frac, seed=9)
+    batch = [r.read for r in sampled]
+
+    # seed + chain only (no extension)
+    def run_candidates():
+        for r in batch:
+            candidates(index, r, top_n=2)
+    run_candidates()
+    best = float("inf")
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        run_candidates()
+        best = min(best, time.perf_counter() - t0)
+    n_cand = sum(len(candidates(index, r, top_n=2)) for r in batch)
+    rows.append(("mapping/candidates", best / reads * 1e6,
+                 f"{reads / best:,.0f}reads/s "
+                 f"{n_cand / reads:.2f}cand/read"))
+
+    # end-to-end mapping vs raw pairwise through the SAME engine: the
+    # pairwise batch lands in the same length bucket, so the ratio
+    # isolates the mapping stages + window padding, not compile shapes
+    mapper = ReadMapper(index, top_n=2, edit_frac=edit_frac,
+                        read_len=read_len, backend=backend)
+    spec = ReadPairSpec(n_pairs=reads, read_len=read_len,
+                        edit_frac=edit_frac, seed=9)
+    P, plen, T, tlen = generate_pairs(spec)
+
+    def run_map():
+        mapper.map(batch)
+
+    def run_pairwise():
+        mapper.engine.align_packed(P, plen, T, tlen, output="cigar")
+
+    variants = []
+    for name, fn in (("mapping/map", run_map),
+                     ("mapping/pairwise", run_pairwise)):
+        fn()                               # warm executables
+        variants.append((name, fn))
+    best = {name: float("inf") for name, _ in variants}
+    for _ in range(rounds):                # interleaved: fair under drift
+        for name, fn in variants:
+            t0 = time.perf_counter()
+            fn()
+            best[name] = min(best[name], time.perf_counter() - t0)
+    rows.append(("mapping/map", best["mapping/map"] / reads * 1e6,
+                 f"{reads / best['mapping/map']:,.0f}mappings/s"))
+    rows.append(("mapping/pairwise",
+                 best["mapping/pairwise"] / reads * 1e6,
+                 f"{reads / best['mapping/pairwise']:,.0f}pairs/s"))
+    return rows
+
+
+def _per_s(rows: list[Row], name: str) -> float:
+    for n, us, _ in rows:
+        if n == name:
+            return 1e6 / us
+    raise KeyError(name)
+
+
+def check(rows: list[Row], max_ratio: float = 10.0) -> list[str]:
+    """CI gate: extension must dominate end-to-end mapping time."""
+    mapped = _per_s(rows, "mapping/map")
+    pairwise = _per_s(rows, "mapping/pairwise")
+    if mapped * max_ratio < pairwise:
+        return [f"mapping/map: {mapped:,.0f} mappings/s is more than "
+                f"{max_ratio:.0f}x below mapping/pairwise: "
+                f"{pairwise:,.0f} pairs/s — seeding/chaining dominates"]
+    return []
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reads", type=int, default=512)
+    ap.add_argument("--ref-len", type=int, default=200_000)
+    ap.add_argument("--max-ratio", type=float, default=10.0,
+                    help="--check: max allowed pairwise/mapping "
+                         "throughput ratio")
+    ap.add_argument("--check", action="store_true",
+                    help="fail (exit 1) when mappings/s falls more than "
+                         "--max-ratio below raw pairwise throughput")
+    ap.add_argument("--from-json", default=None, metavar="GLOB",
+                    help="with --check: read rows from the newest matching "
+                         "benchmarks.run --json snapshot instead of "
+                         "re-running")
+    args = ap.parse_args(argv)
+    from benchmarks.common import emit
+    if args.from_json:
+        import glob
+        import json
+        paths = sorted(glob.glob(args.from_json))
+        if not paths:
+            print(f"# no snapshot matches {args.from_json!r}",
+                  file=sys.stderr)
+            return 1
+        with open(paths[-1]) as f:
+            payload = json.load(f)
+        rows = [(r["name"], r["us_per_call"], r["derived"])
+                for r in payload["rows"] if r["name"].startswith("mapping/")]
+        print(f"# gating on {paths[-1]} ({len(rows)} mapping rows)",
+              file=sys.stderr)
+    else:
+        rows = run(reads=args.reads, ref_len=args.ref_len)
+        emit(rows)
+    if args.check:
+        failures = check(rows, max_ratio=args.max_ratio)
+        for f in failures:
+            print(f"# mapping REGRESSION: {f}", file=sys.stderr)
+        if failures:
+            return 1
+        print("# mapping gate passed: extension dominates end-to-end",
+              file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -52,7 +52,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,scaling,transfer,"
-                         "cigar,scoring,wfa_ops,lm")
+                         "cigar,scoring,mapping,wfa_ops,lm")
     ap.add_argument("--pairs", type=int, default=8192)
     ap.add_argument("--json", nargs="?", const="auto", default=None,
                     metavar="PATH",
@@ -82,6 +82,10 @@ def main(argv=None) -> int:
         suites.append(("scoring",
                        lambda: scoring_models.run(
                            pairs=min(args.pairs, 2048))))
+    if want is None or "mapping" in want:
+        from benchmarks import mapping
+        suites.append(("mapping",
+                       lambda: mapping.run(reads=min(args.pairs, 512))))
     if want is None or "wfa_ops" in want:
         from benchmarks import wfa_ops
         suites.append(("wfa_ops", wfa_ops.run))

@@ -82,11 +82,15 @@ class Ticket:
     """
 
     def __init__(self, session: "AlignmentSession", index: int, n_pairs: int,
-                 output: str = "score", pen=None, heur=None):
+                 output: str = "score", pen=None, heur=None, meta=None):
         eng = session.engine
         self.index = index
         self.n_pairs = n_pairs
         self.output = output
+        # opaque caller payload (e.g. repro.mapping's (read, locus, strand)
+        # records): rides the ticket through out-of-order retirement so
+        # as_completed() consumers can interpret rows without a side table
+        self.meta = meta
         self.pen = eng.pen if pen is None else pen          # PenaltyModel
         self.heur = eng.heuristic if heur is None else heur
         self.stats = EngineStats(n_pairs=n_pairs, n_workers=eng.n_workers)
@@ -202,7 +206,7 @@ class AlignmentSession:
 
     def submit(self, patterns: Sequence[Seq], texts: Sequence[Seq], *,
                output: Optional[str] = None, penalties=None,
-               heuristic=None) -> Ticket:
+               heuristic=None, meta=None) -> Ticket:
         """Enqueue one batch of python sequences; returns immediately.
 
         ``output="cigar"`` makes this ticket's waves run the backend's
@@ -210,17 +214,20 @@ class AlignmentSession:
         ``penalties=``/``heuristic=`` select this ticket's penalty model
         and wavefront heuristic (tickets with different models coexist in
         one session — each compiles and caches its own executables);
-        ``None`` uses the engine defaults.
+        ``None`` uses the engine defaults.  ``meta`` is an opaque payload
+        stored on the returned ticket (``ticket.meta``) — the session
+        never reads it.
         """
         assert len(patterns) == len(texts)
         p, plen = pack_batch(patterns)
         t, tlen = pack_batch(texts)
         return self.submit_packed(p, plen, t, tlen, output=output,
-                                  penalties=penalties, heuristic=heuristic)
+                                  penalties=penalties, heuristic=heuristic,
+                                  meta=meta)
 
     def submit_packed(self, p: np.ndarray, plen: np.ndarray, t: np.ndarray,
                       tlen: np.ndarray, *, output: Optional[str] = None,
-                      penalties=None, heuristic=None) -> Ticket:
+                      penalties=None, heuristic=None, meta=None) -> Ticket:
         """Enqueue pre-packed [B, L] codes + [B] lens; returns immediately."""
         self._check_open()
         n = int(p.shape[0])
@@ -229,7 +236,8 @@ class AlignmentSession:
         pen = self.engine.resolve_penalties(penalties)
         out = self.engine.resolve_output(output, pen)
         heur = self.engine.resolve_heuristic(heuristic, out)
-        ticket = Ticket(self, len(self._tickets), n, out, pen=pen, heur=heur)
+        ticket = Ticket(self, len(self._tickets), n, out, pen=pen, heur=heur,
+                        meta=meta)
         self._tickets.append(ticket)
         self.stats.n_submits += 1
         self.stats.n_pairs += n

@@ -1,3 +1,6 @@
-from repro.data.reads import ReadPairSpec, generate_pairs, generate_shard  # noqa: F401
+from repro.data.reads import (ReadPairSpec, SampledRead, generate_pairs,  # noqa: F401
+                              generate_shard, sample_from_reference)
 from repro.data.io import iter_seqs, load_pair_files, read_seqs  # noqa: F401
+from repro.data.dna import (NCODE, as_ascii, decode_2bit, encode_2bit,  # noqa: F401
+                            random_reference, revcomp)
 from repro.data.tokens import TokenStreamSpec, batch_for_step  # noqa: F401

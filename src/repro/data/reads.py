@@ -84,3 +84,51 @@ def generate_shard(spec: ReadPairSpec, shard: int, n_shards: int):
         seed=spec.seed * 1_000_003 + shard,
     )
     return generate_pairs(sub)
+
+
+@dataclasses.dataclass(frozen=True)
+class SampledRead:
+    """One ground-truth read: where it came from and how mutated it is.
+
+    ``pos`` is the 0-based start of the sampled window on the *forward*
+    reference strand; ``strand`` is 1 when the read is the reverse
+    complement of that window (mutations applied after the flip).
+    """
+    read: np.ndarray            # ASCII uint8 sequence as a mapper sees it
+    pos: int
+    strand: int                 # 0 = forward, 1 = reverse complement
+    n_edits: int
+
+
+def sample_from_reference(ref, n_reads: int, *, read_len: int = 100,
+                          edit_frac: float = 0.02, rc_frac: float = 0.5,
+                          sub_prob: float = 0.6, ins_prob: float = 0.2,
+                          seed: int = 0):
+    """Draw reads from a reference at known positions/strands -> ground truth.
+
+    The mapping-recall oracle: each read is a uniform window of ``ref``
+    (ASCII uint8 array or str), reverse-complemented with probability
+    ``rc_frac``, then mutated with at most ``ceil(edit_frac * read_len)``
+    edits under the paper's mutation model (same substitution/indel mix as
+    :func:`generate_pairs`).  Deterministic per seed, so recall/precision
+    numbers are reproducible.  Returns a list of :class:`SampledRead`.
+    """
+    from repro.data.dna import as_ascii, revcomp
+    ref = as_ascii(ref)
+    if len(ref) < read_len:
+        raise ValueError(f"reference ({len(ref)}bp) shorter than "
+                         f"read_len ({read_len})")
+    rng = np.random.default_rng(seed)
+    n_err = int(np.ceil(edit_frac * read_len))
+    out = []
+    for _ in range(int(n_reads)):
+        pos = int(rng.integers(0, len(ref) - read_len + 1))
+        strand = int(rng.random() < rc_frac)
+        window = ref[pos: pos + read_len]
+        if strand:
+            window = revcomp(window)
+        n_edits = int(rng.integers(0, n_err + 1))
+        read = _mutate(rng, window, n_edits, sub_prob, ins_prob)
+        out.append(SampledRead(read=read.astype(np.uint8), pos=pos,
+                               strand=strand, n_edits=n_edits))
+    return out

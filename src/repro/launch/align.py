@@ -57,32 +57,32 @@ def _run_sync(engine, P, plen, T, tlen, output):
     return res.scores, res.cigars, res.stats, time.perf_counter() - t0
 
 
-def _decode(row: np.ndarray, n: int) -> str:
-    return row[:n].astype(np.uint8).tobytes().decode("ascii")
+def write_sam(out, scores, cigars, plen, T, tlen, cl=None) -> None:
+    """Full SAM stream via the shared ``repro.mapping.sam`` writer: proper
+    @HD/@SQ/@PG header (one @SQ per reference read) + one record per pair.
 
-
-def sam_line(i: int, ops: np.ndarray, score: int, text: str) -> str:
-    """One SAM-style record: the mate (text) mapped onto reference read i.
-
-    Unresolved pairs (score < 0: no alignment produced) are emitted as
-    proper unmapped records — FLAG 4, no position, no alignment score —
-    not as mapped records with a placeholder CIGAR.
+    The mate (*text*) maps onto reference read i at POS 1, MAPQ 255
+    (unavailable — there is no candidate ranking here).  Unresolved pairs
+    (score < 0: no alignment produced) are emitted as proper unmapped
+    records — FLAG 4, no position, no alignment score — not as mapped
+    records with a placeholder CIGAR.
     """
-    if score < 0:
-        return "\t".join([f"read{i}", "4", "*", "0", "0", "*", "*", "0",
-                          "0", text or "*", "*"])
-    cig = cigar_mod.cigar_string(ops, mode="classic")
-    return "\t".join([
-        f"read{i}", "0", f"ref{i}", "1", "255", cig, "*", "0", "0",
-        text or "*", "*", f"AS:i:{-int(score)}",
-    ])
-
-
-def write_sam(out, scores, cigars, T, tlen) -> None:
-    out.write("@HD\tVN:1.6\tSO:unknown\n")
+    from repro.mapping.extend import Mapping
+    from repro.mapping.sam import (header_lines, mapping_record,
+                                   unmapped_record)
+    names = [f"ref{i}" for i in range(len(scores))]
+    for line in header_lines(names, [int(l) for l in plen],
+                             program="repro.launch.align", cl=cl):
+        out.write(line + "\n")
     for i, (s, ops) in enumerate(zip(scores, cigars)):
-        out.write(sam_line(i, ops, int(s), _decode(T[i], int(tlen[i]))))
-        out.write("\n")
+        text = T[i, : int(tlen[i])]
+        if int(s) < 0:
+            line = unmapped_record(f"read{i}", text)
+        else:
+            m = Mapping(read_id=i, ref_id=i, pos=0, strand=0, mapq=255,
+                        score=int(s), ops=ops)
+            line = mapping_record(m, text, f"read{i}", f"ref{i}")
+        out.write(line + "\n")
 
 
 def main(argv=None):
@@ -245,11 +245,12 @@ def main(argv=None):
               f"({t_sync / t_stream:.2f}x)")
 
     if args.output == "sam":
+        cl = "repro.launch.align " + " ".join(argv or sys.argv[1:])
         if args.sam_out == "-":
-            write_sam(sys.stdout, scores, cigars, T, tlen)
+            write_sam(sys.stdout, scores, cigars, plen, T, tlen, cl=cl)
         else:
             with open(args.sam_out, "w") as f:
-                write_sam(f, scores, cigars, T, tlen)
+                write_sam(f, scores, cigars, plen, T, tlen, cl=cl)
             log(f"[align] wrote {args.pairs} SAM records to "
                   f"{args.sam_out}")
 

@@ -1,0 +1,22 @@
+"""Read-mapping subsystem: minimizer index -> chain -> WFA extend -> SAM.
+
+The paper's throughput numbers exist to serve read mapping — millions of
+short reads located on reference sequences.  PRs 1-4 built the fast inner
+loop (engine, streaming sessions, CIGAR pipeline, scoring models); this
+package is the seed-chain-extend pipeline around it:
+
+* :mod:`repro.mapping.index`  — :class:`MinimizerIndex`: 2-bit packed,
+  strand-canonical minimizer seeds in an open-addressed hash table.
+* :mod:`repro.mapping.chain`  — per-read candidate generation + colinear
+  anchor chaining (ranked candidate loci with strand).
+* :mod:`repro.mapping.extend` — :class:`ReadMapper`: batched verification
+  of candidate windows through ``AlignmentEngine.stream()``.
+* :mod:`repro.mapping.sam`    — SAM header/record formatting (the writer
+  ``launch/align.py`` and ``launch/map_reads.py`` share).
+
+New candidate filters and seeding schemes land here (see ROADMAP).
+"""
+from repro.mapping.chain import Anchor, Chain, chain_anchors, read_anchors  # noqa: F401
+from repro.mapping.extend import Mapping, ReadMapper  # noqa: F401
+from repro.mapping.index import MinimizerIndex  # noqa: F401
+from repro.mapping.sam import header_lines, mapping_record, write_sam  # noqa: F401

@@ -14,6 +14,7 @@ QUICK_MODULES = {
     "test_session",
     "test_cigar_pipeline",
     "test_scoring_models",
+    "test_mapping",
     "test_wfa_property",
     "test_analysis",
     "test_fault_dist",

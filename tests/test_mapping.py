@@ -1,0 +1,501 @@
+"""Read-mapping subsystem: index invariants, chaining oracle, end-to-end
+recall on ground truth, SAM round-trip, out-of-order ticket retirement."""
+import io
+
+import numpy as np
+import pytest
+
+from repro.core.gotoh import score_cigar
+from repro.data.dna import (NCODE, as_ascii, decode_2bit, encode_2bit,
+                            random_reference, revcomp)
+from repro.data.reads import sample_from_reference
+from repro.mapping.chain import chain_anchors, read_anchors
+from repro.mapping.extend import ReadMapper
+from repro.mapping.index import MinimizerIndex, extract_minimizers
+from repro.mapping.sam import write_sam
+
+K, W = 15, 10
+
+
+# ---------------------------------------------------------------------------
+# DNA helpers vs string oracles.
+
+
+_COMP = {"A": "T", "C": "G", "G": "C", "T": "A"}
+
+
+def _revcomp_oracle(s: str) -> str:
+    return "".join(_COMP.get(c.upper(), "N") for c in reversed(s))
+
+
+class TestDNA:
+    def test_revcomp_string_oracle(self, rng):
+        for _ in range(20):
+            s = "".join(rng.choice(list("ACGTN"), size=int(rng.integers(1, 60))))
+            assert revcomp(s) == _revcomp_oracle(s)
+
+    def test_revcomp_types_and_involution(self):
+        s = "ACGTTGCA"
+        arr = as_ascii(s)
+        assert isinstance(revcomp(s), str)
+        assert revcomp(revcomp(s)) == s
+        out = revcomp(arr)
+        assert isinstance(out, np.ndarray)
+        assert out.tobytes().decode() == _revcomp_oracle(s)
+
+    def test_2bit_roundtrip(self, rng):
+        for _ in range(10):
+            s = "".join(rng.choice(list("ACGTN"), size=30))
+            assert decode_2bit(encode_2bit(s)) == s
+
+    def test_2bit_lowercase_and_iupac(self):
+        codes = encode_2bit("acgtRYN")
+        assert list(codes[:4]) == [0, 1, 2, 3]
+        assert all(c == NCODE for c in codes[4:])
+
+    def test_n_never_seeds(self):
+        # a sentinel inside any k-mer window suppresses that minimizer
+        seq = "ACGTAGCTTGCAGT" * 8
+        seq = seq[:40] + "N" + seq[41:]
+        _, pos, _ = extract_minimizers(seq, K, W)
+        assert all(not (p <= 40 < p + K) for p in pos)
+
+
+# ---------------------------------------------------------------------------
+# Minimizer-index invariants.
+
+
+@pytest.fixture(scope="module")
+def ref():
+    return random_reference(20000, seed=1)
+
+
+@pytest.fixture(scope="module")
+def index(ref):
+    return MinimizerIndex.build([ref], ["chr1"], k=K, w=W, occ_cap=64)
+
+
+class TestIndex:
+    def test_every_seed_retrievable(self, ref, index):
+        # each reference minimizer below the cap is stored at its position
+        seeds, pos, strand = extract_minimizers(ref, K, W)
+        start, count = index.lookup(seeds)
+        assert (count > 0).all()          # random 20kb: nothing capped
+        for i in range(0, len(seeds), 97):
+            occ = slice(int(start[i]), int(start[i]) + int(count[i]))
+            assert int(pos[i]) in index.occ_pos[occ]
+
+    def test_occurrence_cap_drops_repeats(self):
+        motif = random_reference(200, seed=7)
+        ref = np.concatenate([motif] * 12)       # every seed occurs ~12x
+        idx = MinimizerIndex.build([ref], occ_cap=4)
+        seeds, _, _ = extract_minimizers(motif, K, W)
+        _, count = idx.lookup(seeds)
+        assert (count == 0).all()                # capped wholesale
+        assert idx.n_seeds_capped > 0
+        # capped occurrences are reclaimed, not kept as unreachable rows
+        assert idx.n_occurrences == int(idx.table_count.sum())
+
+    def test_strand_canonicalization(self, ref, index):
+        # a reverse-complemented substring anchors to the same locus with
+        # the strand bit set and a consistent diagonal
+        sub = ref[3000:3120]
+        rid, rpos, qpos, strand = read_anchors(index, revcomp(sub))
+        assert len(rpos) > 0
+        assert (strand == 1).all()
+        assert (rpos - qpos == 3000).all()
+        # and the forward substring anchors on strand 0 at the same diag
+        rid, rpos, qpos, strand = read_anchors(index, sub)
+        assert (strand == 0).all()
+        assert (rpos - qpos == 3000).all()
+
+    def test_pickle_roundtrip(self, ref, index, tmp_path):
+        path = str(tmp_path / "idx.pkl")
+        index.save(path)
+        loaded = MinimizerIndex.load(path)
+        seeds, _, _ = extract_minimizers(ref[:2000], K, W)
+        s0, c0 = index.lookup(seeds)
+        s1, c1 = loaded.lookup(seeds)
+        np.testing.assert_array_equal(s0, s1)
+        np.testing.assert_array_equal(c0, c1)
+        assert loaded.names == ["chr1"]
+
+    def test_short_and_empty_sequences(self):
+        idx = MinimizerIndex.build(["ACGT", ""], ["a", "b"])
+        assert idx.n_occurrences == 0            # too short for any k-mer
+        assert read_anchors(idx, "ACGTACGT")[0].size == 0
+
+
+# ---------------------------------------------------------------------------
+# Chaining oracle on hand-built anchor sets.
+
+
+class TestChain:
+    def test_perfect_diagonal_single_chain(self):
+        n = 8
+        rpos = 500 + 20 * np.arange(n)
+        qpos = 10 + 20 * np.arange(n)
+        chains = chain_anchors(np.zeros(n), rpos, qpos, np.zeros(n), K)
+        assert len(chains) == 1
+        c = chains[0]
+        assert c.n_anchors == n
+        assert (c.rstart, c.qstart) == (500, 10)
+        assert (c.rend, c.qend) == (int(rpos[-1]) + K, int(qpos[-1]) + K)
+        assert c.diag == 490
+
+    def test_off_diagonal_noise_excluded(self):
+        rpos = np.array([100, 120, 140, 5000])
+        qpos = np.array([0, 20, 40, 60])
+        chains = chain_anchors(np.zeros(4), rpos, qpos, np.zeros(4), K)
+        best = chains[0]
+        assert best.n_anchors == 3               # the 5000 jump never chains
+        assert best.rend == 140 + K
+
+    def test_two_loci_ranked_by_score(self):
+        # locus A: 5 colinear anchors; locus B: 2 — A must rank first
+        rpos = np.array([100, 120, 140, 160, 180, 9000, 9020])
+        qpos = np.array([0, 20, 40, 60, 80, 0, 20])
+        chains = chain_anchors(np.zeros(7), rpos, qpos, np.zeros(7), K)
+        assert len(chains) == 2
+        assert chains[0].n_anchors == 5 and chains[1].n_anchors == 2
+        assert chains[0].score > chains[1].score
+
+    def test_branch_stub_does_not_inherit_primary_score(self):
+        # 6-anchor primary + one branch anchor off its prefix + a genuine
+        # 3-anchor second locus: the branch backtrack truncates at used
+        # anchors and must NOT keep the primary's full DP score, or it
+        # would outrank the real secondary
+        rpos = np.array([100, 120, 140, 160, 180, 200,   # primary
+                         165,                            # branch off prefix
+                         9000, 9020, 9040])              # second locus
+        qpos = np.array([0, 20, 40, 60, 80, 100,
+                         62,
+                         0, 20, 40])
+        chains = chain_anchors(np.zeros(10), rpos, qpos, np.zeros(10), K)
+        assert chains[0].n_anchors == 6
+        assert len(chains) >= 2
+        assert chains[1].rstart == 9000 and chains[1].n_anchors == 3
+        # any surviving branch stub ranks below the genuine second locus
+        assert all(c.score < chains[1].score for c in chains[2:])
+
+    def test_colinearity_is_strict(self):
+        # same qpos twice: the second anchor cannot extend the first
+        rpos = np.array([100, 120])
+        qpos = np.array([10, 10])
+        chains = chain_anchors(np.zeros(2), rpos, qpos, np.zeros(2), K)
+        assert all(c.n_anchors == 1 for c in chains)
+
+    def test_groups_never_mix(self):
+        # identical geometry on two strands stays two chains
+        rpos = np.array([100, 120, 100, 120])
+        qpos = np.array([0, 20, 0, 20])
+        strand = np.array([0, 0, 1, 1])
+        chains = chain_anchors(np.zeros(4), rpos, qpos, strand, K)
+        assert sorted(c.strand for c in chains) == [0, 1]
+        assert all(c.n_anchors == 2 for c in chains)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: ground-truth recall, re-scoring, MAPQ, out-of-order tickets.
+
+
+@pytest.fixture(scope="module")
+def mapper(index):
+    return ReadMapper(index, top_n=2, edit_frac=0.02, read_len=100)
+
+
+class TestMapping:
+    def test_recall_both_strands(self, ref, index, mapper):
+        reads = sample_from_reference(ref, 200, read_len=100,
+                                      edit_frac=0.02, seed=3)
+        assert {r.strand for r in reads} == {0, 1}
+        results = mapper.map([r.read for r in reads])
+        hits = sum(
+            m[0].mapped and m[0].strand == r.strand
+            and abs(m[0].pos - r.pos) <= 6
+            for r, m in zip(reads, results))
+        assert hits >= 0.95 * len(reads)
+        assert mapper.stats.n_reads == len(reads)
+        assert mapper.stats.n_mapped >= 0.95 * len(reads)
+
+    def test_cigar_pos_rescore_to_cost(self, ref, mapper):
+        reads = sample_from_reference(ref, 40, read_len=100,
+                                      edit_frac=0.02, seed=11)
+        results = mapper.map([r.read for r in reads])
+        pen = mapper.pen.as_penalties()
+        for r, maps in zip(reads, results):
+            for m in maps:
+                if not m.mapped:
+                    continue
+                txt = r.read if m.strand == 0 else revcomp(r.read)
+                window = ref[m.pos: m.pos + m.ref_span()]
+                cost, ci, cj, ok = score_cigar(m.ops, window, txt, pen)
+                assert ok and cost == m.score
+                assert ci == m.ref_span() and cj == len(txt)
+
+    def test_exact_read_maps_exactly(self, ref, mapper):
+        maps = mapper.map([ref[4000:4100]])[0]
+        m = maps[0]
+        assert (m.pos, m.strand, m.score) == (4000, 0, 0)
+        assert m.mapq == 60
+
+    def test_duplicate_locus_gets_mapq_zero(self, ref):
+        dup = np.concatenate([ref[:8000], ref[2000:2400]])
+        idx = MinimizerIndex.build([dup], ["chr"], k=K, w=W)
+        mapper = ReadMapper(idx, top_n=2, edit_frac=0.02, read_len=100)
+        maps = mapper.map([dup[2100:2200]])[0]
+        assert maps[0].mapq == 0                 # ambiguous: two ties
+        assert len(maps) == 2 and maps[1].secondary
+        assert {m.pos for m in maps} == {2100, 8100}
+
+    def test_unmappable_and_empty_reads(self, mapper):
+        results = mapper.map([random_reference(100, seed=99), "ACG"])
+        for maps in results:
+            assert len(maps) == 1 and not maps[0].mapped
+
+    def test_ticket_meta_rides_the_session(self, mapper):
+        payload = [("read", 0, "locus")]
+        with mapper.engine.stream() as sess:
+            t = sess.submit(["ACGTACGT"], ["ACGTACGT"], meta=payload)
+            t.result()
+        assert t.meta is payload
+
+    def test_out_of_order_retirement(self, ref, index):
+        # read 0: clean 35bp prefix (so it chains) + heavy mutation (so
+        # its extension overflows pass 1 into the recovery queue); read 1:
+        # clean.  One ticket per read => read 1 must retire first.
+        noisy = ref[6000:6100].copy()
+        noisy[35::3] = revcomp(noisy[35::3])[::-1]   # complement = sub each
+        clean = ref[9000:9100]
+        mapper = ReadMapper(index, top_n=1, edit_frac=0.02, read_len=100,
+                            batch_reads=1)
+        order = [maps[0].read_id for maps in mapper.map_stream([noisy, clean])]
+        assert order == [1, 0]
+        res = {m[0].read_id: m[0]
+               for m in mapper.map([noisy, clean])}
+        assert res[1].pos == 9000 and res[1].score == 0
+        assert res[0].mapped and res[0].score > 0
+
+    def test_per_submit_scoring_seam(self, index, ref):
+        from repro.core.scoring import Edit
+        mapper = ReadMapper(index, top_n=1, edit_frac=0.02, read_len=100,
+                            penalties=Edit())
+        reads = sample_from_reference(ref, 10, read_len=100,
+                                      edit_frac=0.02, seed=5)
+        results = mapper.map([r.read for r in reads])
+        pen = Edit().as_penalties()
+        # under edit distance (no gap-open) the global optimum may
+        # interleave the forced window end-gaps with matches, so the
+        # trimmed cost is only bounded by n_edits + the window padding
+        delta = 3                                # ceil(E*L) + extra_pad
+        for r, maps in zip(reads, results):
+            m = maps[0]
+            assert m.mapped and m.score <= r.n_edits + 2 * delta
+            txt = r.read if m.strand == 0 else revcomp(r.read)
+            cost, _, _, ok = score_cigar(
+                m.ops, ref[m.pos: m.pos + m.ref_span()], txt, pen)
+            assert ok and cost == m.score
+
+
+# ---------------------------------------------------------------------------
+# SAM round-trip (pysam-free parsing).
+
+
+def _parse_cigar_ops(cigar: str, seq: str, ref_window: str):
+    """Classic-CIGAR string -> core.cigar op codes, deriving =/X for M
+    runs by comparing SEQ to the reference window."""
+    import re
+    ops, i, j = [], 0, 0            # i: ref offset, j: read offset
+    for n, op in re.findall(r"(\d+)([MIDX=])", cigar):
+        n = int(n)
+        if op in "M=X":
+            for _ in range(n):
+                ops.append(0 if ref_window[i] == seq[j] else 1)
+                i, j = i + 1, j + 1
+        elif op == "I":
+            ops.extend([2] * n)
+            j += n
+        else:
+            ops.extend([3] * n)
+            i += n
+    return np.asarray(ops, np.int8), i, j
+
+
+class TestSAM:
+    def test_roundtrip_fields(self, ref, index, mapper):
+        reads = sample_from_reference(ref, 30, read_len=100,
+                                      edit_frac=0.02, seed=21)
+        seqs = [r.read for r in reads]
+        names = [f"r{i}" for i in range(len(reads))]
+        results = mapper.map(seqs)
+        buf = io.StringIO()
+        n = write_sam(buf, results, seqs, names, index.names, index.lengths)
+        lines = buf.getvalue().splitlines()
+        header = [ln for ln in lines if ln.startswith("@")]
+        records = [ln for ln in lines if not ln.startswith("@")]
+        assert n == len(records) >= len(reads)
+        assert header[0].startswith("@HD\tVN:")
+        assert header[1] == f"@SQ\tSN:chr1\tLN:{len(ref)}"
+        assert any(ln.startswith("@PG\t") for ln in header)
+
+        pen = mapper.pen.as_penalties()
+        ref_str = ref.tobytes().decode()
+        by_name = {}
+        for ln in records:
+            f = ln.split("\t")
+            assert len(f) >= 11
+            by_name.setdefault(f[0], []).append(f)
+            flag = int(f[1])
+            if flag & 0x4:
+                continue
+            pos = int(f[3]) - 1                  # SAM POS is 1-based
+            assert 0 <= pos < len(ref)
+            seq, cigar = f[9], f[5]
+            ops, ref_span, read_span = _parse_cigar_ops(
+                cigar, seq, ref_str[pos:])
+            assert read_span == len(seq)
+            tags = dict(t.split(":", 1) for t in f[11:])
+            as_cost = -int(tags["AS"].split(":")[-1])
+            cost, _, _, ok = score_cigar(
+                ops, as_ascii(ref_str[pos: pos + ref_span]),
+                as_ascii(seq), pen)
+            assert ok and cost == as_cost
+        assert set(by_name) == set(names)        # every read has a record
+
+    def test_strand_and_secondary_flags(self, ref, index):
+        dup = np.concatenate([ref[:8000], ref[2000:2400]])
+        idx = MinimizerIndex.build([dup], ["chr"], k=K, w=W)
+        mapper = ReadMapper(idx, top_n=2, edit_frac=0.02, read_len=100)
+        read = revcomp(dup[2100:2200])           # reverse strand + 2 loci
+        buf = io.StringIO()
+        write_sam(buf, mapper.map([read]), [read], ["q"], idx.names,
+                  idx.lengths)
+        recs = [ln.split("\t") for ln in buf.getvalue().splitlines()
+                if not ln.startswith("@")]
+        assert len(recs) == 2
+        flags = sorted(int(r[1]) for r in recs)
+        assert flags[0] & 0x10 and not flags[0] & 0x100
+        assert flags[1] & 0x10 and flags[1] & 0x100
+        # SEQ is on the forward reference strand: revcomp of the read
+        fwd = dup[2100:2200].tobytes().decode()
+        assert all(r[9] == fwd for r in recs)
+
+    def test_unmapped_record(self, index, mapper):
+        read = random_reference(80, seed=123)
+        buf = io.StringIO()
+        write_sam(buf, mapper.map([read]), [read], ["q"], index.names,
+                  index.lengths)
+        rec = [ln.split("\t") for ln in buf.getvalue().splitlines()
+               if not ln.startswith("@")]
+        assert len(rec) == 1
+        assert int(rec[0][1]) & 0x4
+        assert rec[0][2] == "*" and rec[0][3] == "0" and rec[0][5] == "*"
+
+
+# ---------------------------------------------------------------------------
+# Ground-truth sampler.
+
+
+class TestSampler:
+    def test_deterministic_and_bounded(self, ref):
+        a = sample_from_reference(ref, 20, read_len=100, edit_frac=0.04,
+                                  seed=2)
+        b = sample_from_reference(ref, 20, read_len=100, edit_frac=0.04,
+                                  seed=2)
+        for ra, rb in zip(a, b):
+            assert (ra.pos, ra.strand, ra.n_edits) == (rb.pos, rb.strand,
+                                                       rb.n_edits)
+            np.testing.assert_array_equal(ra.read, rb.read)
+            assert ra.n_edits <= 4
+            assert abs(len(ra.read) - 100) <= ra.n_edits
+
+    def test_zero_edit_reads_match_reference(self, ref):
+        for r in sample_from_reference(ref, 40, read_len=60,
+                                       edit_frac=0.02, seed=6):
+            if r.n_edits:
+                continue
+            window = ref[r.pos: r.pos + 60]
+            expect = window if r.strand == 0 else revcomp(window)
+            np.testing.assert_array_equal(r.read, expect)
+
+
+# ---------------------------------------------------------------------------
+# Launchers: align --sam-out header regression + map_reads end to end.
+
+
+def _write_fasta(path, names, seqs):
+    with open(path, "w") as f:
+        for n, s in zip(names, seqs):
+            f.write(f">{n}\n{as_ascii(s).tobytes().decode()}\n")
+
+
+def _write_fastq(path, names, seqs):
+    with open(path, "w") as f:
+        for n, s in zip(names, seqs):
+            seq = as_ascii(s).tobytes().decode()
+            f.write(f"@{n}\n{seq}\n+\n{'I' * len(seq)}\n")
+
+
+class TestLaunchers:
+    def test_align_sam_header_regression(self, tmp_path):
+        from repro.launch import align
+        out = str(tmp_path / "out.sam")
+        rc = align.main(["--pairs", "6", "--read-len", "40", "--mode",
+                         "sync", "--output", "sam", "--sam-out", out,
+                         "--chunk-pairs", "8"])
+        assert rc == 0
+        lines = open(out).read().splitlines()
+        header = [ln for ln in lines if ln.startswith("@")]
+        records = [ln for ln in lines if not ln.startswith("@")]
+        assert header[0].startswith("@HD\tVN:")
+        sq = [ln for ln in header if ln.startswith("@SQ\t")]
+        assert len(sq) == 6
+        assert all("\tLN:" in ln and "SN:ref" in ln for ln in sq)
+        assert any(ln.startswith("@PG\t") for ln in header)
+        assert len(records) == 6
+        for ln in records:
+            f = ln.split("\t")
+            assert len(f) >= 11 and f[2].startswith("ref")
+
+    @pytest.mark.slow
+    def test_map_reads_cli_end_to_end(self, tmp_path, ref):
+        from repro.launch import map_reads
+        refs = str(tmp_path / "ref.fa")
+        reads_p = str(tmp_path / "reads.fq")
+        out = str(tmp_path / "out.sam")
+        idx_p = str(tmp_path / "idx.pkl")
+        _write_fasta(refs, ["chr1"], [ref])
+        sampled = sample_from_reference(ref, 60, read_len=100,
+                                        edit_frac=0.02, seed=31)
+        _write_fastq(reads_p, [f"r{i}" for i in range(len(sampled))],
+                     [r.read for r in sampled])
+        rc = map_reads.main(["--refs", refs, "--reads", reads_p,
+                             "--sam-out", out, "--save-index", idx_p])
+        assert rc == 0
+        truth = {f"r{i}": s for i, s in enumerate(sampled)}
+        lines = open(out).read().splitlines()
+        assert lines[0].startswith("@HD\t")
+        assert any(ln == f"@SQ\tSN:chr1\tLN:{len(ref)}" for ln in lines)
+        hits = total = 0
+        for ln in lines:
+            if ln.startswith("@"):
+                continue
+            f = ln.split("\t")
+            flag = int(f[1])
+            if flag & 0x100:
+                continue                         # secondaries don't count
+            total += 1
+            t = truth[f[0]]
+            if (not flag & 0x4 and bool(flag & 0x10) == bool(t.strand)
+                    and abs(int(f[3]) - 1 - t.pos) <= 6):
+                hits += 1
+        assert total == len(sampled)
+        assert hits >= 0.95 * total
+        # the saved index reloads and serves the same run
+        rc = map_reads.main(["--index", idx_p, "--reads", reads_p,
+                             "--sam-out", str(tmp_path / "out2.sam")])
+        assert rc == 0
+        # build-time flags cannot silently apply to a prebuilt index
+        with pytest.raises(SystemExit):
+            map_reads.main(["--index", idx_p, "--reads", reads_p,
+                            "--k", "21", "--sam-out", "-"])
