@@ -52,7 +52,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,scaling,transfer,"
-                         "cigar,scoring,mapping,wfa_ops,lm")
+                         "cigar,scoring,mapping,serving,wfa_ops,lm")
     ap.add_argument("--pairs", type=int, default=8192)
     ap.add_argument("--json", nargs="?", const="auto", default=None,
                     metavar="PATH",
@@ -86,6 +86,14 @@ def main(argv=None) -> int:
         from benchmarks import mapping
         suites.append(("mapping",
                        lambda: mapping.run(reads=min(args.pairs, 512))))
+    if want is None or "serving" in want:
+        from benchmarks import serving
+        # the ratio gate needs a trace long enough to amortize the
+        # form-deadline/drain tail: don't shrink below ~512 requests
+        # unless --pairs is tiny
+        suites.append(("serving",
+                       lambda: serving.run(
+                           requests=min(max(args.pairs // 2, 64), 512))))
     if want is None or "wfa_ops" in want:
         from benchmarks import wfa_ops
         suites.append(("wfa_ops", wfa_ops.run))

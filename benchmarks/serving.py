@@ -1,0 +1,229 @@
+"""Open-loop serving benchmark: latency percentiles at offered load.
+
+The paper's headline is offline throughput — one giant batch, pairs/s.
+A service is judged differently: requests arrive continuously (Poisson,
+open loop — the schedule does not wait for the server), and the numbers
+that matter are **sustained pairs/s at an offered load** and the
+**latency tail** (p50/p95/p99 from arrival to future resolution), plus
+the batching-efficiency telemetry that explains them (wave occupancy,
+padding waste, shed count).
+
+Method: measure the closed-loop batch-mode pairs/s of the backend on the
+identical workload, set the offered load to ``load`` x that rate, warm
+the serving wave shape, then replay a deterministic Poisson trace through
+``repro.serve.ServeLoop`` and read the report.
+
+``main(--check)`` is the CI acceptance gate of the serving subsystem:
+
+* sustained pairs/s >= 50% of batch mode at moderate (default 0.75x)
+  offered load — continuous batching must not halve the engine;
+* **zero** fresh XLA traces during the measured run — steady-state
+  serving rides the warmed executable cache;
+* p99 latency within budget (generous for loaded CI boxes);
+* every request's future resolved exactly once (ok or typed shed), and
+  served scores identical to batch mode — no request lost, duplicated
+  or corrupted by out-of-order retirement (live runs only).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs import wfa_paper
+from repro.core.engine import AlignmentEngine
+from repro.data.reads import ArrivalSpec, generate_trace
+from repro.serve import ServeLoop, replay_trace
+
+P99_BUDGET_S = 2.0     # default CI gate; generous for 2-core runners
+
+
+def _serve_once(eng, payloads, arrivals, *, wave_pairs, form_deadline,
+                max_queue_depth, n_threads):
+    with ServeLoop(eng, wave_pairs=wave_pairs, form_deadline=form_deadline,
+                   max_queue_depth=max_queue_depth,
+                   n_threads=n_threads) as server:
+        report = replay_trace(server, payloads, arrivals)
+    return report
+
+
+def run(requests: int = 512, pairs_per_request: int = 8,
+        read_len: int = 100, edit_frac: float = 0.02,
+        backend: str = "ring", load: float = 0.75, wave_pairs: int = 256,
+        form_deadline: float = 0.015, n_threads: int = 1,
+        max_queue_depth: int = 4096, rate: float = None,
+        verify: bool = True) -> list[Row]:
+    spec = ArrivalSpec(n_requests=requests,
+                       pairs_per_request=pairs_per_request,
+                       read_len=read_len, edit_frac=edit_frac, seed=13)
+    payloads, unit_arrivals = generate_trace(spec)
+    n_pairs = requests * pairs_per_request
+    P = np.concatenate([p for p, _, _, _ in payloads])
+    plen = np.concatenate([pl for _, pl, _, _ in payloads])
+    T = np.concatenate([t for _, _, t, _ in payloads])
+    tlen = np.concatenate([tl for _, _, _, tl in payloads])
+
+    eng = AlignmentEngine(wfa_paper.pen, backend=backend,
+                          edit_frac=edit_frac)
+    # closed-loop batch baseline on the identical pairs (warm, best-of-3)
+    batch = eng.align_packed(P, plen, T, tlen)
+    t_batch = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        eng.align_packed(P, plen, T, tlen)
+        t_batch = min(t_batch, time.perf_counter() - t0)
+    batch_pps = n_pairs / t_batch
+
+    if rate is None:
+        rate = load * batch_pps / pairs_per_request   # requests/s
+    # warm the serving wave shape (full + padded-partial are one shape):
+    # a couple of waves' worth of requests, arrivals compressed so waves
+    # fill instantly
+    n_warm = min(requests, max(2 * wave_pairs // pairs_per_request, 2))
+    _serve_once(eng, payloads[:n_warm], np.zeros(n_warm),
+                wave_pairs=wave_pairs, form_deadline=form_deadline,
+                max_queue_depth=max_queue_depth, n_threads=n_threads)
+    traces0 = eng.cache_traces()
+
+    with ServeLoop(eng, wave_pairs=wave_pairs, form_deadline=form_deadline,
+                   max_queue_depth=max_queue_depth,
+                   n_threads=n_threads) as server:
+        report = replay_trace(server, payloads, unit_arrivals / rate)
+    retraces = eng.cache_traces() - traces0
+
+    if verify:
+        # no request lost / duplicated / corrupted by out-of-order
+        # retirement: every future resolved exactly once, and every served
+        # request's scores equal batch mode's
+        assert report.n_ok + report.n_shed + report.n_failed \
+            == requests, "request futures lost or duplicated"
+        assert report.n_failed == 0, "requests failed (non-shed)"
+        for i, res in enumerate(report.results):
+            if res is not None:
+                lo = i * pairs_per_request
+                np.testing.assert_array_equal(
+                    res.scores, batch.scores[lo:lo + pairs_per_request],
+                    err_msg=f"request {i} scores diverge from batch mode")
+
+    st = report.stats
+    sustained = report.sustained_pairs_per_s
+    pre = f"serving/{backend}"
+    return [
+        (f"{pre}/batch", 1e6 / batch_pps,
+         f"{batch_pps:,.0f} pairs/s closed-loop batch baseline"),
+        (f"{pre}/sustained", 1e6 / max(sustained, 1e-9),
+         f"{sustained:,.0f} pairs/s open-loop @ {load:.0%} offered load "
+         f"({rate:,.0f} req/s, {report.n_ok}/{requests} served)"),
+        (f"{pre}/ratio", sustained / batch_pps,
+         "sustained/batch pairs/s (gate >= 0.5)"),
+        (f"{pre}/p50", report.percentile_ms(50) * 1e3,
+         f"{report.percentile_ms(50):.1f} ms request latency"),
+        (f"{pre}/p95", report.percentile_ms(95) * 1e3,
+         f"{report.percentile_ms(95):.1f} ms request latency"),
+        (f"{pre}/p99", report.percentile_ms(99) * 1e3,
+         f"{report.percentile_ms(99):.1f} ms request latency "
+         f"(gate <= {P99_BUDGET_S:.1f}s) over {report.latencies.size} "
+         f"completions"),
+        (f"{pre}/occupancy", st.wave_occupancy,
+         f"request rows / device rows ({st.waves_full} full, "
+         f"{st.waves_deadline} deadline, {st.waves_drain} drain flushes)"),
+        (f"{pre}/waste", st.padding_waste_frac,
+         "padding waste fraction of dispatched rows"),
+        (f"{pre}/shed", float(report.n_shed),
+         f"requests shed by admission control (queue depth "
+         f"{max_queue_depth})"),
+        (f"{pre}/retraces", float(retraces),
+         "fresh XLA traces during measured run (gate == 0)"),
+    ]
+
+
+def _value(rows: list[Row], name: str) -> float:
+    for n, v, _ in rows:
+        if n == name:
+            return v
+    raise KeyError(name)
+
+
+def check(rows: list[Row], backend: str = "ring",
+          p99_budget_s: float = P99_BUDGET_S) -> list[str]:
+    """The CI gate over serving rows (live or from a JSON snapshot)."""
+    pre = f"serving/{backend}"
+    failures = []
+    ratio = _value(rows, f"{pre}/ratio")
+    if ratio < 0.5:
+        failures.append(
+            f"{pre}/ratio: sustained {ratio:.2f}x of batch mode < 0.5x")
+    retraces = _value(rows, f"{pre}/retraces")
+    if retraces != 0:
+        failures.append(
+            f"{pre}/retraces: {retraces:.0f} fresh XLA traces during the "
+            "measured run (steady state must be fully cached)")
+    p99_us = _value(rows, f"{pre}/p99")
+    if not np.isfinite(p99_us) or p99_us > p99_budget_s * 1e6:
+        failures.append(
+            f"{pre}/p99: {p99_us / 1e3:.1f} ms > budget "
+            f"{p99_budget_s * 1e3:.0f} ms")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=512)
+    ap.add_argument("--pairs-per-request", type=int, default=8)
+    ap.add_argument("--read-len", type=int, default=100)
+    ap.add_argument("--backend", default="ring")
+    ap.add_argument("--load", type=float, default=0.75,
+                    help="offered load as a fraction of measured "
+                         "batch-mode pairs/s")
+    ap.add_argument("--wave-pairs", type=int, default=256)
+    ap.add_argument("--form-deadline-ms", type=float, default=15.0)
+    ap.add_argument("--p99-budget-s", type=float, default=P99_BUDGET_S)
+    ap.add_argument("--check", action="store_true",
+                    help="fail (exit 1) unless sustained >= 50%% of batch "
+                         "pairs/s, zero measured-run retraces, p99 within "
+                         "budget, and (live runs) every future resolved "
+                         "exactly once with batch-identical scores")
+    ap.add_argument("--from-json", default=None, metavar="GLOB",
+                    help="with --check: gate on the newest matching "
+                         "benchmarks.run --json snapshot instead of "
+                         "re-running the service")
+    args = ap.parse_args(argv)
+    from benchmarks.common import emit
+    if args.from_json:
+        import glob
+        import json
+        paths = sorted(glob.glob(args.from_json))
+        if not paths:
+            print(f"# no snapshot matches {args.from_json!r}",
+                  file=sys.stderr)
+            return 1
+        with open(paths[-1]) as f:
+            payload = json.load(f)
+        rows = [(r["name"], r["us_per_call"], r["derived"])
+                for r in payload["rows"] if r["name"].startswith("serving/")]
+        print(f"# gating on {paths[-1]} ({len(rows)} serving rows)",
+              file=sys.stderr)
+    else:
+        rows = run(requests=args.requests,
+                   pairs_per_request=args.pairs_per_request,
+                   read_len=args.read_len, backend=args.backend,
+                   load=args.load, wave_pairs=args.wave_pairs,
+                   form_deadline=args.form_deadline_ms / 1e3)
+        emit(rows)
+    if args.check:
+        failures = check(rows, backend=args.backend,
+                         p99_budget_s=args.p99_budget_s)
+        for f in failures:
+            print(f"# serving REGRESSION: {f}", file=sys.stderr)
+        if failures:
+            return 1
+        print("# serving gate passed: >=50% of batch pairs/s, 0 retraces, "
+              "p99 within budget", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -234,6 +234,8 @@ class EngineStats:
     cache_hits: int = 0
     cache_misses: int = 0
     n_traces: int = 0          # fresh XLA traces triggered by this call
+    rows_real: int = 0         # submitted rows actually dispatched in waves
+    rows_padded: int = 0       # device rows incl. quantization padding
     bytes_in: int = 0
     bytes_out: int = 0
     t_scatter: float = 0.0
@@ -243,6 +245,21 @@ class EngineStats:
     @property
     def n_buckets(self) -> int:
         return len([b for b in self.buckets if not b.recovery])
+
+    @property
+    def wave_occupancy(self) -> float:
+        """Real rows / device rows across every dispatched wave (1.0 when
+        nothing has been dispatched): how much of the padded rectangles the
+        executable cache's quantized shapes actually carried."""
+        return (self.rows_real / self.rows_padded if self.rows_padded
+                else 1.0)
+
+    @property
+    def padding_waste_frac(self) -> float:
+        """Fraction of dispatched device rows that were quantization
+        padding — the batching-efficiency complement of
+        :attr:`wave_occupancy`."""
+        return 1.0 - self.wave_occupancy
 
     @property
     def pim(self) -> PIMStats:

@@ -49,6 +49,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import time
 from typing import Deque, Iterator, List, Optional, Sequence
 
@@ -134,8 +135,16 @@ class AlignmentSession:
 
     Created via :meth:`AlignmentEngine.stream` (or directly).  Shares the
     engine's executable cache, so a warm engine streams with zero retraces.
-    Not thread-safe: one session is one logical submission stream (open
-    several sessions over the same engine for concurrent producers).
+
+    **Thread safety**: every public entry point (``submit*``, ``poll``,
+    ``as_completed``, ``drain``, ``Ticket.result``) serializes on one
+    internal re-entrant lock, so multiple worker threads may feed and
+    drain one shared session — the contract ``repro.serve``'s
+    :class:`~repro.serve.loop.ServeLoop` relies on.  The lock is held per
+    pipeline step (one wave packed or retired), never across a blocking
+    iteration, so producers are not starved by a consumer driving the
+    pipe.  One session is still one logical submission stream; open
+    several sessions over the same engine for independent streams.
 
     ``_sync_timing`` is the engine-internal blocking mode used by
     ``align()``: each wave blocks per phase so scatter/kernel/gather stay
@@ -163,6 +172,9 @@ class AlignmentSession:
         self._completed: Deque[Ticket] = collections.deque()
         self._error: Optional[BaseException] = None
         self._closed = False
+        # re-entrant: a locked step may recurse (backpressure retirement
+        # inside a locked dispatch, recovery flush inside a retirement)
+        self._lock = threading.RLock()
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -229,30 +241,31 @@ class AlignmentSession:
                       tlen: np.ndarray, *, output: Optional[str] = None,
                       penalties=None, heuristic=None, meta=None) -> Ticket:
         """Enqueue pre-packed [B, L] codes + [B] lens; returns immediately."""
-        self._check_open()
-        n = int(p.shape[0])
-        # resolve everything before the Ticket exists: a rejected submit
-        # must leave the session clean (no permanently-incomplete ticket)
-        pen = self.engine.resolve_penalties(penalties)
-        out = self.engine.resolve_output(output, pen)
-        heur = self.engine.resolve_heuristic(heuristic, out)
-        ticket = Ticket(self, len(self._tickets), n, out, pen=pen, heur=heur,
-                        meta=meta)
-        self._tickets.append(ticket)
-        self.stats.n_submits += 1
-        self.stats.n_pairs += n
-        if n == 0:
-            self._finalize(ticket)
+        with self._lock:
+            self._check_open()
+            n = int(p.shape[0])
+            # resolve everything before the Ticket exists: a rejected submit
+            # must leave the session clean (no permanently-incomplete ticket)
+            pen = self.engine.resolve_penalties(penalties)
+            out = self.engine.resolve_output(output, pen)
+            heur = self.engine.resolve_heuristic(heuristic, out)
+            ticket = Ticket(self, len(self._tickets), n, out, pen=pen,
+                            heur=heur, meta=meta)
+            self._tickets.append(ticket)
+            self.stats.n_submits += 1
+            self.stats.n_pairs += n
+            if n == 0:
+                self._finalize(ticket)
+                return ticket
+            ticket._p = np.asarray(p)
+            ticket._t = np.asarray(t)
+            ticket._plen = np.asarray(plen, np.int32)
+            ticket._tlen = np.asarray(tlen, np.int32)
+            eng = self.engine
+            optimistic = eng.edit_frac is not None and eng._s_max is None
+            self._enqueue_pass(ticket, np.arange(n), exact=not optimistic,
+                               recovery=False)
             return ticket
-        ticket._p = np.asarray(p)
-        ticket._t = np.asarray(t)
-        ticket._plen = np.asarray(plen, np.int32)
-        ticket._tlen = np.asarray(tlen, np.int32)
-        eng = self.engine
-        optimistic = eng.edit_frac is not None and eng._s_max is None
-        self._enqueue_pass(ticket, np.arange(n), exact=not optimistic,
-                           recovery=False)
-        return ticket
 
     def _enqueue_pass(self, ticket: Ticket, idx: np.ndarray, *, exact: bool,
                       recovery: bool) -> None:
@@ -297,6 +310,9 @@ class AlignmentSession:
             else:
                 st.cache_misses += 1
             st.bytes_in += pc.nbytes + tc.nbytes + plc.nbytes + tlc.nbytes
+        for st in (ticket.stats, self.stats):
+            st.rows_real += len(rows)
+            st.rows_padded += nb
         pre = exe.n_traces
         try:
             dp, dt_, dpl, dtl = eng._device_put(pc, tc, plc, tlc)
@@ -405,8 +421,10 @@ class AlignmentSession:
         reported) so no in-flight computation outlives the session to raise
         at interpreter exit.
         """
-        while self._inflight:
-            wave = self._inflight.popleft()
+        with self._lock:
+            inflight, self._inflight = list(self._inflight), \
+                collections.deque()
+        for wave in inflight:
             try:
                 wave.res.score.block_until_ready()
             except Exception:
@@ -469,21 +487,120 @@ class AlignmentSession:
     def _wait_for(self, ticket: Ticket) -> None:
         """Drive the pipeline until ``ticket`` is complete."""
         while not ticket._done:
-            self._step(ticket)
+            with self._lock:
+                if not ticket._done:
+                    self._step(ticket)
 
-    def as_completed(self) -> Iterator[Ticket]:
+    @staticmethod
+    def _wave_ready(wave: _Wave) -> bool:
+        """True when the wave's device result can be gathered without
+        blocking.  Results that don't expose ``is_ready`` (plug-in
+        backends returning exotic array types) count as ready, so
+        retirement falls back to blocking rather than never progressing.
+        """
+        probe = getattr(wave.res.score, "is_ready", None)
+        return True if probe is None else bool(probe())
+
+    def _inflight_diagnostics(self) -> str:
+        """One-line pipeline state for TimeoutError messages."""
+        with self._lock:
+            waves = [f"ticket {w.ticket.index}:{len(w.rows)} rows"
+                     + (" (recovery)" if w.recovery else "")
+                     for w in self._inflight]
+            n_open = sum(1 for t in self._tickets if not t._done)
+            n_rec = sum(len(r) for t in self._tickets
+                        for r in t._recovery_rows)
+        return (f"{len(waves)} wave(s) in flight [{'; '.join(waves)}], "
+                f"{n_open} ticket(s) incomplete, "
+                f"{n_rec} recovery row(s) queued")
+
+    def _step_timed(self, deadline: float) -> None:
+        """Make one unit of progress before ``deadline`` or raise
+        ``TimeoutError`` (with pipeline diagnostics) — never yields a
+        partial step."""
+        while True:
+            with self._lock:
+                if self._error is not None:
+                    raise RuntimeError("session failed") from self._error
+                if self._completed or all(t._done for t in self._tickets):
+                    return
+                if self._inflight:
+                    if self._wave_ready(self._inflight[0]):
+                        self._retire_one()
+                        return
+                elif any(t._recovery_rows for t in self._tickets):
+                    self._flush_recovery()
+                    return
+                else:
+                    raise RuntimeError(
+                        "session stalled: incomplete tickets with no "
+                        "in-flight waves")          # pragma: no cover
+            now = time.monotonic()
+            if now >= deadline:
+                raise TimeoutError(
+                    "as_completed timed out: " + self._inflight_diagnostics())
+            # oldest wave still running: nap outside the lock so producers
+            # keep submitting while we wait
+            time.sleep(min(1e-3, deadline - now))
+
+    def poll(self, *, flush_recovery: bool = True) -> List[Ticket]:
+        """Non-blocking progress probe -> tickets that newly completed.
+
+        Retires every in-flight wave whose device result is already ready
+        (``jax.Array.is_ready``), never blocking on a running kernel; when
+        the pipeline is otherwise empty and ``flush_recovery`` is set,
+        queued overflow rows are re-dispatched immediately (a server loop
+        cannot wait for a full recovery wave to accumulate — stragglers
+        would stall forever at low load).  Returns the completed-ticket
+        backlog (the same queue ``as_completed()`` consumes), possibly
+        empty.  This is the probe ``repro.serve``'s worker loop runs
+        between admissions.
+        """
+        with self._lock:
+            if self._error is not None:
+                raise RuntimeError("session failed") from self._error
+            while self._inflight and self._wave_ready(self._inflight[0]):
+                self._retire_one()
+            if flush_recovery and not self._inflight:
+                self._flush_recovery()
+                while self._inflight and self._wave_ready(self._inflight[0]):
+                    self._retire_one()
+            out = list(self._completed)
+            self._completed.clear()
+            return out
+
+    def as_completed(self, timeout: Optional[float] = None) -> Iterator[Ticket]:
         """Yield tickets as they finish — out of order, minimal latency.
 
         Keeps driving the pipeline between yields; tickets submitted while
         iterating are picked up too.  Each completed ticket is yielded
-        exactly once per session.
+        exactly once per session (``poll()`` consumes the same backlog).
+
+        ``timeout`` bounds the **total** wait across the iteration (like
+        ``concurrent.futures.as_completed``): if the deadline passes while
+        a wave is still running, ``TimeoutError`` is raised with in-flight
+        diagnostics (which tickets' waves are stuck, how many recovery
+        rows are queued) instead of blocking forever on a stalled kernel.
         """
+        deadline = (None if timeout is None
+                    else time.monotonic() + float(timeout))
         while True:
-            while self._completed:
-                yield self._completed.popleft()
-            if all(t._done for t in self._tickets):
-                return
-            self._step()
+            while True:
+                with self._lock:
+                    ticket = (self._completed.popleft()
+                              if self._completed else None)
+                if ticket is None:
+                    break
+                yield ticket
+            with self._lock:
+                if self._completed:         # another thread raced a wave in
+                    continue
+                if all(t._done for t in self._tickets):
+                    return
+                if deadline is None:
+                    self._step()
+                    continue
+            self._step_timed(deadline)
 
     def results(self) -> Iterator[EngineResult]:
         """Yield each submit's :class:`EngineResult` in submission order."""
@@ -494,10 +611,12 @@ class AlignmentSession:
 
     def drain(self) -> SessionStats:
         """Block until every submitted pair (incl. recovery) has a result."""
-        while (self._inflight
-               or any(t._recovery_rows for t in self._tickets)):
-            self._step()
-        return self.stats
+        while True:
+            with self._lock:
+                if not (self._inflight
+                        or any(t._recovery_rows for t in self._tickets)):
+                    return self.stats
+                self._step()
 
 
 def run_streamed(engine: AlignmentEngine, p: np.ndarray, plen: np.ndarray,

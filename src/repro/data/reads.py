@@ -87,6 +87,58 @@ def generate_shard(spec: ReadPairSpec, shard: int, n_shards: int):
 
 
 @dataclasses.dataclass(frozen=True)
+class ArrivalSpec:
+    """An open-loop serving workload: request payloads + Poisson arrivals.
+
+    ``n_requests`` independent requests of ``pairs_per_request`` read
+    pairs each, drawn from the paper's E-bounded mutation model, arriving
+    as a Poisson process (i.i.d. exponential inter-arrival gaps) whose
+    rate is set at replay time — the trace stores payloads and *unit-rate*
+    arrival offsets so one trace serves every offered-load point.
+    Deterministic per seed (the restart/shard contract of
+    :func:`generate_pairs` extends to serving traces).
+    """
+    n_requests: int = 256
+    pairs_per_request: int = 8
+    read_len: int = 100
+    edit_frac: float = 0.02
+    sub_prob: float = 0.6
+    ins_prob: float = 0.2
+    seed: int = 0
+
+
+def poisson_arrivals(n: int, rate: float, seed: int = 0) -> np.ndarray:
+    """[n] sorted arrival offsets (seconds from trace start) of a Poisson
+    process with ``rate`` requests/s — i.i.d. exponential gaps, the
+    open-loop benchmark's arrival law.  Deterministic per seed."""
+    if rate <= 0:
+        raise ValueError("rate must be > 0")
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(scale=1.0 / rate, size=int(n))
+    return np.cumsum(gaps)
+
+
+def generate_trace(spec: ArrivalSpec):
+    """-> (payloads, unit_arrivals): per-request packed pairs + unit-rate
+    Poisson offsets.
+
+    ``payloads[i]`` is ``(P, plen, T, tlen)`` for request ``i`` (views
+    into one shared batch — no per-request copies); divide
+    ``unit_arrivals`` by the offered rate (requests/s) at replay time.
+    """
+    P, plen, T, tlen = generate_pairs(ReadPairSpec(
+        n_pairs=spec.n_requests * spec.pairs_per_request,
+        read_len=spec.read_len, edit_frac=spec.edit_frac,
+        sub_prob=spec.sub_prob, ins_prob=spec.ins_prob, seed=spec.seed))
+    k = spec.pairs_per_request
+    payloads = [(P[i * k:(i + 1) * k], plen[i * k:(i + 1) * k],
+                 T[i * k:(i + 1) * k], tlen[i * k:(i + 1) * k])
+                for i in range(spec.n_requests)]
+    return payloads, poisson_arrivals(spec.n_requests, 1.0,
+                                      seed=spec.seed + 1)
+
+
+@dataclasses.dataclass(frozen=True)
 class SampledRead:
     """One ground-truth read: where it came from and how mutated it is.
 

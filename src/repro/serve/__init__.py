@@ -1,0 +1,22 @@
+"""repro.serve — the always-on alignment service.
+
+Continuous batching over the streaming engine: a bounded
+:class:`RequestQueue` (admission control + load shedding), a
+:class:`WaveFormer` (deadline-or-full wave formation with length-bucket
+affinity), and a :class:`ServeLoop` whose worker threads feed one shared
+:class:`~repro.core.session.AlignmentSession` and deliver out-of-order
+completions to per-request futures.  ``launch/serve_align.py`` is the
+CLI; ``benchmarks/serving.py`` the open-loop load harness.
+"""
+from repro.serve.driver import ReplayReport, replay_trace
+from repro.serve.loop import ServeLoop, ServerStats
+from repro.serve.queue import RequestQueue
+from repro.serve.request import (AlignFuture, AlignRequest, AlignResult,
+                                 ShedError)
+from repro.serve.waves import FormedWave, WaveFormer, WaveSlice
+
+__all__ = [
+    "AlignFuture", "AlignRequest", "AlignResult", "FormedWave",
+    "ReplayReport", "RequestQueue", "ServeLoop", "ServerStats", "ShedError",
+    "WaveFormer", "WaveSlice", "replay_trace",
+]

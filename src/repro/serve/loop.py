@@ -1,0 +1,346 @@
+"""The serve loop: worker threads feeding one shared AlignmentSession.
+
+This is the always-on layer over the streaming engine: callers (any
+thread) ``submit()`` independent :class:`AlignRequest`s; the bounded
+:class:`RequestQueue` admits or sheds them; worker threads drain
+admissions into the :class:`WaveFormer`, dispatch flush-ready waves into
+one shared :class:`~repro.core.session.AlignmentSession` (whose per-bucket
+executable cache guarantees zero retraces at steady state), and deliver
+out-of-order wave retirements back to per-request futures via the
+session's non-blocking ``poll()``.  Per-request penalty model, heuristic
+and output mode ride the engine's existing per-submit seams — a mixed
+traffic stream compiles one executable per (seams, bucket) key and then
+never retraces.
+
+The JetStream-style split (model: MaxText's ``OfflineInference`` harness —
+background threads around cached per-shape executables): the *device* is
+saturated by JAX async dispatch + session backpressure; the *threads* only
+run host-side work (packing, wave forming, traceback, delivery), which
+overlaps the in-flight kernels.
+
+:class:`ServerStats` is the observable contract: queue depth, wave
+occupancy / padding waste, shed count, and p50/p95/p99 request latency.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.engine import AlignmentEngine, Seq
+from repro.serve.queue import RequestQueue
+from repro.serve.request import AlignFuture, AlignRequest
+from repro.serve.waves import FormedWave, WaveFormer
+
+__all__ = ["ServeLoop", "ServerStats"]
+
+
+def _pct(lat: np.ndarray, q: float) -> float:
+    return float(np.percentile(lat, q)) if lat.size else float("nan")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerStats:
+    """One consistent snapshot of the service (``ServeLoop.stats()``)."""
+    uptime: float
+    queue_depth: int             # admitted, not yet wave-formed
+    pending_pairs: int           # forming (accumulated, not dispatched)
+    inflight_waves: int
+    n_offered: int
+    n_accepted: int
+    n_shed: int
+    n_completed: int
+    n_outstanding: int           # accepted, future not yet resolved
+    n_pairs_done: int
+    n_waves: int                 # device waves dispatched (incl. recovery)
+    waves_full: int              # flush reasons (wave-forming telemetry)
+    waves_deadline: int
+    waves_drain: int
+    wave_occupancy: float        # request rows / device rows dispatched
+    padding_waste_frac: float
+    n_retraces: int              # fresh XLA traces since start (0 = warm)
+    cache_hits: int
+    cache_misses: int
+    latency_p50: float           # seconds, arrival -> future resolution
+    latency_p95: float
+    latency_p99: float
+    latency_mean: float
+    latency_max: float
+    n_latency_samples: int
+
+    @property
+    def completed_pairs_per_s(self) -> float:
+        return self.n_pairs_done / max(self.uptime, 1e-12)
+
+
+class ServeLoop:
+    """Always-on alignment service over one :class:`AlignmentEngine`.
+
+    Parameters
+    ----------
+    engine : the (ideally pre-warmed) engine; its executable cache is
+        what makes steady-state serving retrace-free.
+    wave_pairs : rows per formed wave (the flush-when-full threshold and
+        the device batch shape when ``pad_waves``).
+    form_deadline : seconds a forming wave may wait for company before a
+        deadline flush (the latency end of the deadline-vs-throughput
+        dial; per-request ``deadline=`` can only shorten it).
+    max_queue_depth : admission bound — arrivals beyond it are shed with
+        a typed :class:`~repro.serve.request.ShedError`.
+    max_inflight_waves : session backpressure (device memory bound).
+    n_threads : worker threads sharing the session (host-side work
+        overlaps in-flight kernels; 1 is enough at CPU smoke scale).
+    pad_waves : pad partial (deadline/drain) flushes to ``wave_pairs``
+        rows in-bucket so every wave hits one cached executable shape.
+    poll_interval : worker nap between polls when nothing progressed.
+    """
+
+    def __init__(self, engine: AlignmentEngine, *, wave_pairs: int = 256,
+                 form_deadline: float = 0.02, max_queue_depth: int = 1024,
+                 max_inflight_waves: int = 2, n_threads: int = 1,
+                 pad_waves: bool = True, poll_interval: float = 1e-3,
+                 min_bucket_len: Optional[int] = None):
+        if n_threads < 1:
+            raise ValueError("n_threads must be >= 1")
+        self.engine = engine
+        self.wave_pairs = int(wave_pairs)
+        self.n_threads = int(n_threads)
+        self.max_inflight_waves = int(max_inflight_waves)
+        self.poll_interval = float(poll_interval)
+        self._queue = RequestQueue(max_queue_depth)
+        self._former = WaveFormer(
+            wave_pairs, form_deadline, pad_to_full=pad_waves,
+            min_bucket_len=(engine.min_bucket_len if min_bucket_len is None
+                            else min_bucket_len))
+        self._mutex = threading.RLock()
+        self._session = None
+        self._threads: List[threading.Thread] = []
+        self._stop = threading.Event()
+        self._started = False
+        self._error: Optional[BaseException] = None
+        self._live: set = set()          # accepted, future unresolved
+        self._latencies: List[float] = []
+        self._t_start = 0.0
+        self._n_accepted = 0
+        self._n_completed = 0
+        self._n_pairs_done = 0
+        self._pairs_real = 0             # request rows dispatched
+        self._wave_reasons: Dict[str, int] = {"full": 0, "deadline": 0,
+                                              "drain": 0}
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> "ServeLoop":
+        if self._started:
+            raise RuntimeError("server already started")
+        self._started = True
+        self._t_start = time.monotonic()
+        self._session = self.engine.stream(
+            max_inflight_waves=self.max_inflight_waves,
+            wave_pairs=self.wave_pairs)
+        for i in range(self.n_threads):
+            th = threading.Thread(target=self._run, daemon=True,
+                                  name=f"serve-align-{i}")
+            th.start()
+            self._threads.append(th)
+        return self
+
+    def stop(self) -> ServerStats:
+        """Stop admissions, drain everything in flight, join workers.
+
+        Every accepted request's future is resolved before this returns
+        (with a result, or with the loop's failure if one occurred).
+        """
+        self._stop.set()
+        self._queue.close()
+        for th in self._threads:
+            th.join()
+        self._threads = []
+        if self._error is not None:
+            raise RuntimeError("serve loop failed") from self._error
+        if self._session is not None:
+            self._session.close()
+        return self.stats()
+
+    def __enter__(self) -> "ServeLoop":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.stop()
+        return False
+
+    # -- submission (any thread) ---------------------------------------------
+
+    def submit(self, patterns: Sequence[Seq], texts: Sequence[Seq], *,
+               penalties=None, heuristic=None, output: Optional[str] = None,
+               deadline: Optional[float] = None) -> AlignFuture:
+        """Pack on the caller's thread, then admit. Returns the future."""
+        return self.submit_request(AlignRequest.from_seqs(
+            patterns, texts, penalties=penalties, heuristic=heuristic,
+            output=output, deadline=deadline))
+
+    def submit_packed(self, p, plen, t, tlen, *, penalties=None,
+                      heuristic=None, output: Optional[str] = None,
+                      deadline: Optional[float] = None) -> AlignFuture:
+        return self.submit_request(AlignRequest(
+            p, plen, t, tlen, penalties=penalties, heuristic=heuristic,
+            output=output, deadline=deadline))
+
+    def submit_request(self, req: AlignRequest) -> AlignFuture:
+        """Admission control: resolve the request's seams, then offer it
+        to the bounded queue.  The returned future resolves exactly once —
+        with an :class:`AlignResult`, the resolution error, or a
+        :class:`~repro.serve.request.ShedError`."""
+        if not self._started:
+            raise RuntimeError("server not started")
+        try:
+            # fail fast (typed, on the future) before the queue ever sees
+            # an un-servable request — same checks a session submit runs
+            req.pen = self.engine.resolve_penalties(req.penalties)
+            req.out = self.engine.resolve_output(req.output, req.pen)
+            req.heur = self.engine.resolve_heuristic(req.heuristic, req.out)
+        except Exception as e:
+            req.future.set_exception(e)
+            return req.future
+        if req.n_pairs == 0:
+            req.t_arrival = time.monotonic()
+            with self._mutex:
+                self._n_accepted += 1
+                self._n_completed += 1
+                self._latencies.append(req._resolve(req.t_arrival))
+            return req.future
+        with self._mutex:
+            self._live.add(req)
+            self._n_accepted += 1
+        if not self._queue.offer(req):       # shed: future already resolved
+            with self._mutex:
+                self._live.discard(req)
+                self._n_accepted -= 1
+        return req.future
+
+    # -- observability -------------------------------------------------------
+
+    def stats(self) -> ServerStats:
+        with self._mutex:
+            lat = np.asarray(self._latencies, float)
+            sess = self._session.stats if self._session is not None else None
+            return ServerStats(
+                uptime=(time.monotonic() - self._t_start
+                        if self._started else 0.0),
+                queue_depth=len(self._queue),
+                pending_pairs=self._former.n_pending,
+                inflight_waves=(self._session.n_inflight
+                                if self._session is not None else 0),
+                n_offered=self._queue.n_offered,
+                n_accepted=self._n_accepted,
+                n_shed=self._queue.n_shed,
+                n_completed=self._n_completed,
+                n_outstanding=len(self._live),
+                n_pairs_done=self._n_pairs_done,
+                n_waves=sess.n_waves if sess else 0,
+                waves_full=self._wave_reasons["full"],
+                waves_deadline=self._wave_reasons["deadline"],
+                waves_drain=self._wave_reasons["drain"],
+                wave_occupancy=(self._pairs_real / sess.rows_padded
+                                if sess and sess.rows_padded else 1.0),
+                padding_waste_frac=(1.0 - self._pairs_real / sess.rows_padded
+                                    if sess and sess.rows_padded else 0.0),
+                n_retraces=sess.n_traces if sess else 0,
+                cache_hits=sess.cache_hits if sess else 0,
+                cache_misses=sess.cache_misses if sess else 0,
+                latency_p50=_pct(lat, 50), latency_p95=_pct(lat, 95),
+                latency_p99=_pct(lat, 99),
+                latency_mean=float(lat.mean()) if lat.size else float("nan"),
+                latency_max=float(lat.max()) if lat.size else float("nan"),
+                n_latency_samples=int(lat.size))
+
+    # -- worker loop ---------------------------------------------------------
+
+    def _idle(self) -> bool:
+        with self._mutex:
+            return (len(self._queue) == 0 and self._former.n_pending == 0
+                    and not self._live)
+
+    def _run(self) -> None:
+        try:
+            while True:
+                progressed = self._serve_step(time.monotonic())
+                if self._stop.is_set() and self._idle():
+                    return
+                if not progressed:
+                    timeout = self.poll_interval
+                    with self._mutex:
+                        nd = self._former.next_deadline()
+                    if nd is not None:
+                        timeout = min(timeout, nd - time.monotonic())
+                    self._queue.wait(max(timeout, 1e-4))
+        except BaseException as e:         # noqa: BLE001 - fail the service
+            self._fail(e)
+
+    def _serve_step(self, now: float) -> bool:
+        """One scheduling round: admit -> form -> dispatch -> deliver."""
+        progressed = False
+        arrivals = self._queue.drain()
+        if arrivals:
+            progressed = True
+            with self._mutex:
+                for req in arrivals:
+                    self._former.add(req, now)
+        with self._mutex:
+            waves = (self._former.flush_all() if self._stop.is_set()
+                     else self._former.take_ready(now))
+        for wave in waves:
+            progressed = True
+            self._dispatch(wave)
+        for ticket in self._session.poll():
+            progressed = True
+            self._deliver(ticket)
+        return progressed
+
+    def _dispatch(self, wave: FormedWave) -> None:
+        pen, heur, out, _bucket = wave.key
+        ticket = self._session.submit_packed(
+            wave.p, wave.plen, wave.t, wave.tlen, output=out,
+            penalties=pen, heuristic=heur, meta=wave)
+        del ticket
+        with self._mutex:
+            self._pairs_real += wave.n_real
+            self._wave_reasons[wave.reason] += 1
+
+    def _deliver(self, ticket) -> None:
+        wave: FormedWave = ticket.meta
+        res = ticket.result()                # completed: no blocking
+        now = time.monotonic()
+        with self._mutex:
+            for sl in wave.slices:
+                scores = res.scores[sl.row_lo: sl.row_lo + sl.n]
+                cigars = (res.cigars[sl.row_lo: sl.row_lo + sl.n]
+                          if res.cigars is not None else None)
+                done = sl.request._deliver_rows(
+                    slice(sl.req_lo, sl.req_lo + sl.n), scores, cigars)
+                if done:
+                    self._latencies.append(sl.request._resolve(now))
+                    self._live.discard(sl.request)
+                    self._n_completed += 1
+                    self._n_pairs_done += sl.request.n_pairs
+
+    def _fail(self, e: BaseException) -> None:
+        """Poison the service: every unresolved accepted future gets the
+        failure (exactly-once answering holds even on the error path)."""
+        with self._mutex:
+            if self._error is None:
+                self._error = e
+            live = list(self._live)
+            self._live.clear()
+        self._stop.set()
+        self._queue.close()
+        for req in self._queue.drain():
+            live.append(req)
+        for req in live:
+            try:
+                req.future.set_exception(e)
+            except Exception:                # already resolved: keep first
+                pass

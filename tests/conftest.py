@@ -15,6 +15,7 @@ QUICK_MODULES = {
     "test_cigar_pipeline",
     "test_scoring_models",
     "test_mapping",
+    "test_serving",
     "test_wfa_property",
     "test_analysis",
     "test_fault_dist",

@@ -1,0 +1,319 @@
+"""repro.serve: continuous batching, admission control, exactly-once
+futures — deadline and full flushes, per-request seams, shedding, split
+requests, open-loop replay accounting and latency percentiles."""
+import threading
+import time
+
+import numpy as np
+import pytest
+from conftest import gotoh_oracle as _oracle
+from conftest import random_pairs as _random_pairs
+
+from repro.core.engine import AlignmentEngine
+from repro.core.scoring import Edit
+from repro.data.reads import ArrivalSpec, generate_trace, poisson_arrivals
+from repro.serve import (AlignRequest, RequestQueue, ServeLoop, ShedError,
+                         WaveFormer, replay_trace)
+
+
+def _engine(**kw):
+    kw.setdefault("backend", "ring")
+    kw.setdefault("edit_frac", 0.05)
+    return AlignmentEngine(**kw)
+
+
+def _request(rng, n, lo=20, hi=60, **kw):
+    pats, txts = _random_pairs(rng, n, lo=lo, hi=hi)
+    return AlignRequest.from_seqs(pats, txts, **kw), pats, txts
+
+
+# ------------------------------------------------------ wave forming ----
+
+
+def test_deadline_flush_of_lonely_request(rng):
+    """A single request must not wait forever for company: the forming
+    deadline flushes it as a padded wave and its future resolves."""
+    eng = _engine()
+    with ServeLoop(eng, wave_pairs=64, form_deadline=0.01) as server:
+        fut = server.submit(*_random_pairs(rng, 3, lo=20, hi=40))
+        res = fut.result(timeout=30)
+    st = server.stats()
+    assert res.scores.shape == (3,)
+    assert st.waves_deadline >= 1 and st.waves_full == 0
+    # 3 real rows rode a 64-row padded wave: the waste is visible
+    assert st.wave_occupancy < 0.5
+    assert st.padding_waste_frac == pytest.approx(1 - st.wave_occupancy)
+
+
+def test_full_bucket_flush(rng):
+    """wave_pairs same-bucket rows flush immediately as a full wave."""
+    eng = _engine()
+    pats, txts = _random_pairs(rng, 16, lo=40, hi=60)
+    with ServeLoop(eng, wave_pairs=16, form_deadline=5.0) as server:
+        t0 = time.monotonic()
+        fut = server.submit(pats, txts)
+        res = fut.result(timeout=30)
+        waited = time.monotonic() - t0
+    st = server.stats()
+    assert st.waves_full >= 1
+    # flushed on full, not by the (5s) forming deadline
+    assert waited < 5.0
+    np.testing.assert_array_equal(res.scores, _oracle(pats, txts))
+
+
+def test_padded_partial_wave_reuses_full_wave_executable(rng):
+    """The zero-retrace serving contract: a deadline-flushed partial wave
+    is padded to the SAME executable shape a full wave compiles, so the
+    second (lonely) request hits the cache."""
+    eng = _engine()
+    pats, txts = _random_pairs(rng, 16, lo=40, hi=60)
+    with ServeLoop(eng, wave_pairs=16, form_deadline=0.01) as server:
+        server.submit(pats, txts).result(timeout=30)      # full -> traces
+        traces0 = eng.cache_traces()
+        server.submit(pats[:2], txts[:2]).result(timeout=30)  # padded partial
+    assert eng.cache_traces() == traces0
+
+
+def test_mixed_models_land_in_separate_waves(rng):
+    """Per-request penalties ride the engine's per-submit seams: edit and
+    affine traffic coexist, each correct under its own model."""
+    eng = _engine()
+    pats, txts = _random_pairs(rng, 8, lo=30, hi=60)
+    edit = Edit()
+    with ServeLoop(eng, wave_pairs=8, form_deadline=0.01) as server:
+        f_aff = server.submit(pats, txts)
+        f_edit = server.submit(pats, txts, penalties=edit)
+        r_aff = f_aff.result(timeout=30)
+        r_edit = f_edit.result(timeout=30)
+    st = server.stats()
+    np.testing.assert_array_equal(r_aff.scores, _oracle(pats, txts))
+    np.testing.assert_array_equal(r_edit.scores,
+                                  _oracle(pats, txts, pen=edit.as_penalties()))
+    # incompatible seams can never share a wave
+    assert st.n_waves >= 2
+    assert r_aff.n_waves == r_edit.n_waves == 1
+
+
+def test_split_oversized_request_resolves_once(rng):
+    """A request larger than wave_pairs spans several waves yet resolves
+    exactly once, rows reassembled in request order."""
+    eng = _engine()
+    pats, txts = _random_pairs(rng, 20, lo=40, hi=60)
+    with ServeLoop(eng, wave_pairs=8, form_deadline=0.01) as server:
+        fut = server.submit(pats, txts)
+        res = fut.result(timeout=30)
+    assert res.n_waves >= 3                   # 20 rows / 8-row waves
+    np.testing.assert_array_equal(res.scores, _oracle(pats, txts))
+    with pytest.raises(Exception):            # exactly-once tripwire
+        fut.set_result(None)
+
+
+def test_cigar_output_mode_roundtrip(rng):
+    from repro.core.gotoh import score_cigar
+    from repro.core.penalties import DEFAULT
+    eng = _engine(with_cigar=True)
+    pats, txts = _random_pairs(rng, 6, lo=20, hi=50)
+    with ServeLoop(eng, wave_pairs=8, form_deadline=0.01) as server:
+        res = server.submit(pats, txts, output="cigar").result(timeout=30)
+    np.testing.assert_array_equal(res.scores, _oracle(pats, txts))
+    assert res.cigars is not None and len(res.cigars) == 6
+    for i, (p, t) in enumerate(zip(pats, txts)):
+        cost, ci, cj, ok = score_cigar(
+            res.cigars[i], np.frombuffer(p.encode(), np.uint8),
+            np.frombuffer(t.encode(), np.uint8), DEFAULT)
+        assert ok and cost == res.scores[i]
+        assert ci == len(p) and cj == len(t)
+
+
+def test_waveformer_groups_by_bucket_and_seams(rng):
+    """Unit: the former keeps incompatible requests apart and flushes
+    full-vs-deadline correctly without a running loop."""
+    former = WaveFormer(wave_pairs=4, form_deadline=0.5, min_bucket_len=16)
+    short, _, _ = _request(rng, 4, lo=10, hi=14)
+    long, _, _ = _request(rng, 2, lo=100, hi=120)
+    for req in (short, long):
+        req.pen, req.heur, req.out = None, None, "score"
+        former.add(req, now=100.0)
+    waves = former.take_ready(now=100.0)      # only the full 4-row group
+    assert len(waves) == 1 and waves[0].reason == "full"
+    assert waves[0].n_real == 4
+    assert former.n_pending == 2              # the long pair still forming
+    assert former.next_deadline() == pytest.approx(100.5)
+    assert former.take_ready(now=100.4) == []
+    (wave,) = former.take_ready(now=100.6)    # deadline expired
+    assert wave.reason == "deadline" and wave.n_real == 2
+    assert wave.n_rows == 4                   # padded to wave_pairs in-bucket
+    assert former.n_pending == 0
+
+
+# ------------------------------------------------- admission control ----
+
+
+def test_bounded_queue_sheds_with_typed_error(rng):
+    """Unit: the queue answers over-capacity offers with ShedError."""
+    q = RequestQueue(max_depth=2)
+    reqs = [_request(rng, 1)[0] for _ in range(3)]
+    assert q.offer(reqs[0]) and q.offer(reqs[1])
+    assert not q.offer(reqs[2])
+    with pytest.raises(ShedError) as ei:
+        reqs[2].future.result(timeout=0)
+    assert ei.value.reason == "queue full"
+    assert ei.value.max_depth == 2 and ei.value.queue_depth == 2
+    assert q.n_offered == 3 and q.n_shed == 1
+    # admitted requests still drain after a shed
+    assert q.drain() == reqs[:2]
+
+
+def test_submit_after_stop_sheds_server_stopped(rng):
+    eng = _engine()
+    server = ServeLoop(eng, wave_pairs=8, form_deadline=0.01).start()
+    server.submit(*_random_pairs(rng, 2, lo=20, hi=40)).result(timeout=30)
+    server.stop()
+    fut = server.submit(*_random_pairs(rng, 2, lo=20, hi=40))
+    with pytest.raises(ShedError) as ei:
+        fut.result(timeout=0)
+    assert ei.value.reason == "server stopped"
+    st = server.stats()
+    assert st.n_shed == 1 and st.n_outstanding == 0
+
+
+def test_unservable_request_fails_fast_on_future(rng):
+    eng = _engine()
+    with ServeLoop(eng, wave_pairs=8, form_deadline=0.01) as server:
+        fut = server.submit(*_random_pairs(rng, 2), output="bogus")
+        with pytest.raises(ValueError):
+            fut.result(timeout=0)             # resolved at admission
+
+
+# ---------------------------------------------------- open-loop replay ----
+
+
+def test_replay_accounts_every_future_exactly_once(rng):
+    """Every request in a replayed trace is answered exactly once — ok,
+    shed or failed sum to the trace size."""
+    eng = _engine(edit_frac=0.02)
+    payloads, arrivals = generate_trace(ArrivalSpec(
+        n_requests=24, pairs_per_request=4, read_len=60, seed=3))
+    with ServeLoop(eng, wave_pairs=32, form_deadline=0.01) as server:
+        report = replay_trace(server, payloads, arrivals * 1e-3)
+    assert report.n_requests == 24
+    assert report.n_ok + report.n_shed + report.n_failed == 24
+    assert report.n_failed == 0 and report.n_ok == 24
+    assert report.pairs_done == 24 * 4
+    # served scores match the batch-mode engine on the identical pairs
+    P = np.concatenate([p for p, _, _, _ in payloads])
+    plen = np.concatenate([pl for _, pl, _, _ in payloads])
+    T = np.concatenate([t for _, _, t, _ in payloads])
+    tlen = np.concatenate([tl for _, _, _, tl in payloads])
+    batch = eng.align_packed(P, plen, T, tlen)
+    got = np.concatenate([r.scores for r in report.results])
+    np.testing.assert_array_equal(got, batch.scores)
+
+
+def test_latency_percentiles_from_many_completions(rng):
+    """p50/p95/p99 computed from >= 100 completions, properly ordered."""
+    eng = _engine(edit_frac=0.02)
+    payloads, _ = generate_trace(ArrivalSpec(
+        n_requests=120, pairs_per_request=2, read_len=40, seed=5))
+    with ServeLoop(eng, wave_pairs=64, form_deadline=0.005) as server:
+        report = replay_trace(server, payloads, np.zeros(120))
+        st = server.stats()
+    assert st.n_latency_samples >= 100
+    assert report.latencies.size == 120
+    p50, p95, p99 = (report.percentile_ms(q) for q in (50, 95, 99))
+    assert 0 < p50 <= p95 <= p99
+    assert st.latency_p50 <= st.latency_p95 <= st.latency_p99 \
+        <= st.latency_max
+    assert st.latency_p50 == pytest.approx(p50 / 1e3)
+    assert np.isfinite(st.latency_mean)
+
+
+def test_poisson_arrivals_deterministic_and_sorted():
+    a = poisson_arrivals(64, rate=100.0, seed=7)
+    b = poisson_arrivals(64, rate=100.0, seed=7)
+    np.testing.assert_array_equal(a, b)
+    assert (np.diff(a) >= 0).all() and a.shape == (64,)
+    assert not np.array_equal(a, poisson_arrivals(64, 100.0, seed=8))
+    with pytest.raises(ValueError):
+        poisson_arrivals(4, rate=0.0)
+
+
+def test_concurrent_submitters_one_server(rng):
+    """Many caller threads share one server; every future resolves with
+    oracle-correct scores (the serve loop's thread-safety contract)."""
+    eng = _engine()
+    chunks = [_random_pairs(np.random.default_rng(i), 4, lo=20, hi=60)
+              for i in range(12)]
+    futs = [None] * 12
+    with ServeLoop(eng, wave_pairs=16, form_deadline=0.01,
+                   n_threads=2) as server:
+        def _submit(i):
+            futs[i] = server.submit(*chunks[i])
+        threads = [threading.Thread(target=_submit, args=(i,))
+                   for i in range(12)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        results = [f.result(timeout=30) for f in futs]
+    for res, (p, t) in zip(results, chunks):
+        np.testing.assert_array_equal(res.scores, _oracle(p, t))
+    st = server.stats()
+    assert st.n_completed == 12 and st.n_outstanding == 0
+
+
+def test_stop_resolves_everything_before_returning(rng):
+    """stop() drains: no accepted future is left pending."""
+    eng = _engine()
+    server = ServeLoop(eng, wave_pairs=64, form_deadline=10.0).start()
+    futs = [server.submit(*_random_pairs(rng, 2, lo=20, hi=40))
+            for _ in range(5)]
+    server.stop()                 # long deadline: only the drain flushes
+    for fut in futs:
+        assert fut.done()
+        assert fut.result(timeout=0).scores.shape == (2,)
+    assert server.stats().waves_drain >= 1
+
+
+def test_empty_request_resolves_immediately():
+    eng = _engine()
+    with ServeLoop(eng, wave_pairs=8, form_deadline=0.01) as server:
+        res = server.submit([], []).result(timeout=5)
+    assert res.scores.shape == (0,) and res.n_waves == 0
+
+
+def test_serving_benchmark_emits_gated_rows():
+    """The benchmark emits every gated row, verifies exactly-once +
+    batch-identical scores internally, and measures zero retraces (the
+    gate's ratio arm needs real scale, so it is not asserted here)."""
+    from benchmarks import serving
+    rows = serving.run(requests=8, pairs_per_request=4, read_len=40,
+                       wave_pairs=16, load=0.5)
+    names = {n for n, _, _ in rows}
+    for suffix in ("batch", "sustained", "ratio", "p50", "p95", "p99",
+                   "occupancy", "waste", "shed", "retraces"):
+        assert f"serving/ring/{suffix}" in names
+    by = {n: v for n, v, _ in rows}
+    assert by["serving/ring/retraces"] == 0
+    assert by["serving/ring/shed"] == 0
+    assert 0 < by["serving/ring/occupancy"] <= 1
+
+
+def test_serving_gate_detects_each_regression():
+    """check() trips on low ratio, steady-state retraces and p99 blowup,
+    and passes a healthy snapshot (the CI wiring contract)."""
+    from benchmarks import serving
+
+    def rows(ratio=0.8, retraces=0.0, p99_us=50e3):
+        return [("serving/ring/ratio", ratio, ""),
+                ("serving/ring/retraces", retraces, ""),
+                ("serving/ring/p99", p99_us, "")]
+
+    assert serving.check(rows()) == []
+    assert len(serving.check(rows(ratio=0.3))) == 1
+    assert len(serving.check(rows(retraces=2.0))) == 1
+    assert len(serving.check(rows(p99_us=3e6))) == 1
+    assert len(serving.check(rows(p99_us=float("nan")))) == 1
+    assert len(serving.check(rows(0.1, 1.0, 9e6))) == 3
+    with pytest.raises(KeyError):
+        serving.check([])                     # missing rows never pass

@@ -1,6 +1,9 @@
 """AlignmentSession: async submission, pipelined dispatch, out-of-order
 gather — parity with the blocking path and the Gotoh oracle, backpressure,
 recovery recycling, exception propagation, and zero-retrace steady state."""
+import threading
+import time
+
 import numpy as np
 import pytest
 from conftest import gotoh_oracle as _oracle
@@ -255,6 +258,130 @@ def test_backend_dispatch_hook_routes_every_wave(rng):
         np.testing.assert_array_equal(res.scores, _oracle(pats, txts))
     finally:
         unregister_backend("spy")
+
+
+# ---------------------------------------------- poll / timeout probes ---
+
+
+def test_poll_is_nonblocking_and_drains_backlog(rng, monkeypatch):
+    eng = AlignmentEngine(backend="ring", edit_frac=0.05)
+    pats, txts = _random_pairs(rng, 6, lo=20, hi=50)
+    with eng.stream(max_inflight_waves=2) as sess:
+        tk = sess.submit(pats, txts)
+        # a "still running" wave (readiness probe forced False) must not
+        # be gathered: poll returns nothing and never blocks
+        monkeypatch.setattr(AlignmentSession, "_wave_ready",
+                            staticmethod(lambda wave: False))
+        assert sess.poll() == []
+        assert not tk.done()
+        monkeypatch.undo()
+        deadline = time.monotonic() + 30
+        done = []
+        while not done and time.monotonic() < deadline:
+            done = sess.poll()
+        assert done == [tk] and tk.done()
+        assert sess.poll() == []             # backlog yielded exactly once
+    np.testing.assert_array_equal(tk.result().scores, _oracle(pats, txts))
+
+
+def test_poll_flushes_recovery_stragglers(rng):
+    # a lone over-budget pair must not wait for a full recovery wave:
+    # poll() re-dispatches queued overflow as soon as the pipe is empty
+    eng = AlignmentEngine(backend="ring", edit_frac=0.02)
+    with eng.stream() as sess:
+        tk = sess.submit(["A" * 40], ["T" * 40])
+        deadline = time.monotonic() + 30
+        while not tk.done() and time.monotonic() < deadline:
+            sess.poll()
+        assert tk.done()
+    res = tk.result()
+    assert res.stats.n_overflow == 1 and res.stats.n_recovered == 1
+    np.testing.assert_array_equal(res.scores, _oracle(["A" * 40],
+                                                      ["T" * 40]))
+
+
+def test_as_completed_timeout_raises_with_diagnostics(rng, monkeypatch):
+    eng = AlignmentEngine(backend="ring", edit_frac=0.05)
+    pats, txts = _random_pairs(rng, 4, lo=20, hi=40)
+    with eng.stream(max_inflight_waves=2) as sess:
+        sess.submit(pats, txts)
+        # freeze the pipeline: the wave never reports ready, so the
+        # deadline must fire instead of blocking forever
+        monkeypatch.setattr(AlignmentSession, "_wave_ready",
+                            staticmethod(lambda wave: False))
+        t0 = time.monotonic()
+        with pytest.raises(TimeoutError,
+                           match=r"wave\(s\) in flight .*ticket 0"):
+            list(sess.as_completed(timeout=0.2))
+        assert 0.1 < time.monotonic() - t0 < 10
+        monkeypatch.undo()
+        for tk in sess.as_completed(timeout=60):   # recovers after unfreeze
+            np.testing.assert_array_equal(tk.result().scores,
+                                          _oracle(pats, txts))
+
+
+# ------------------------------------------------- thread safety --------
+
+
+def test_concurrent_submit_and_result_from_two_threads(rng):
+    """Two producer threads share one session (the repro.serve contract):
+    every ticket resolves with oracle scores, stats account every pair."""
+    eng = AlignmentEngine(backend="ring", edit_frac=0.05)
+    chunks = [_random_pairs(np.random.default_rng(i), 6, lo=20, hi=80)
+              for i in range(8)]
+    out = {}
+    errors = []
+
+    def _producer(which):
+        try:
+            for i in range(which, 8, 2):
+                p, t = chunks[i]
+                out[i] = sess.submit(p, t).result()
+        except BaseException as e:              # noqa: BLE001
+            errors.append(e)
+
+    with eng.stream(max_inflight_waves=2) as sess:
+        threads = [threading.Thread(target=_producer, args=(w,))
+                   for w in (0, 1)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+    assert not errors
+    assert sorted(out) == list(range(8))
+    for i, (p, t) in enumerate(chunks):
+        np.testing.assert_array_equal(out[i].scores, _oracle(p, t))
+    assert sess.stats.n_submits == 8
+    assert sess.stats.n_pairs == 48
+
+
+# ------------------------------------------- occupancy / padding stats --
+
+
+def test_wave_occupancy_counters(rng):
+    # 5 equal-length pairs quantize to a 6-row device batch (3/4 of the
+    # next pow2): the padding is counted, not hidden
+    eng = AlignmentEngine(backend="ring", edit_frac=0.05)
+    pats = ["ACGTACGTACGTACGTACGT"] * 5
+    with eng.stream() as sess:
+        res = sess.submit(pats, pats).result()
+    st = res.stats
+    assert st.rows_real == 5
+    assert st.rows_padded == 6
+    assert st.wave_occupancy == pytest.approx(5 / 6)
+    assert st.padding_waste_frac == pytest.approx(1 / 6)
+    # session aggregates match the single ticket
+    assert sess.stats.rows_real == 5 and sess.stats.rows_padded == 6
+
+
+def test_occupancy_is_one_for_full_quantized_waves(rng):
+    eng = AlignmentEngine(backend="ring", edit_frac=0.05)
+    pats = ["ACGT" * 8] * 8
+    with eng.stream(wave_pairs=8) as sess:
+        res = sess.submit(pats, pats).result()
+    assert res.stats.rows_real == res.stats.rows_padded == 8
+    assert res.stats.wave_occupancy == 1.0
+    assert res.stats.padding_waste_frac == 0.0
 
 
 # ------------------------------------------------- deprecated shims -----
