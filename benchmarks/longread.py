@@ -1,0 +1,231 @@
+"""Long-read traceback: BiWFA's O(s) trace memory vs the packed O(s^2).
+
+The packed 2-bit backtrace that makes short-read CIGARs nearly free keeps
+``ceil(s/16)`` provenance words per wavefront cell — at ONT/PacBio lengths
+(10-100 kb, thousands of score steps) that resident trace is the binding
+constraint, not compute.  ``trace_variant="bidir"`` (``repro.biwfa``)
+replaces it with a meet-in-the-middle recursion whose resident state is
+two O(s)-deep rolling windows plus sub-traces capped by the trace budget.
+
+This suite measures the trade on ONT-profile pairs
+(``data.reads.sample_from_reference``: lognormal-length regime, 40/30/30
+sub/ins/del mix) and emits the rows the CI gate (``--check``) enforces:
+
+* **score parity** — bidir scores identical to the packed oracle, and
+  every bidir CIGAR re-scores *exactly* to that cost (all lengths);
+* **trace memory** — resident-trace high-water mark ratio >= 8x at
+  L = 10 kb (the headline O(s) vs O(s^2) claim);
+* **throughput** — bidir within 2x of packed at L = 1 kb, where the
+  packed path is still comfortable (the score-pass + capped-trace split
+  must not tank short workloads);
+* **L = 50 kb** — one long pair aligns to an exact CIGAR without
+  exceeding the configured trace budget.
+
+``--check --from-json GLOB`` gates the newest ``benchmarks.run --json``
+snapshot instead of re-running — and fails if the snapshot has no
+longread rows at all, so the per-commit perf trajectory must include
+this suite from now on.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs import wfa_paper
+from repro.core import gotoh
+from repro.core.engine import AlignmentEngine
+from repro.biwfa import DEFAULT_TRACE_BUDGET
+from repro.data.reads import sample_from_reference
+
+MEM_RATIO_GATE = 8.0       # bidir resident trace >= 8x under packed @ 10kb
+SLOWDOWN_GATE = 2.0        # bidir wall <= 2x packed @ 1kb
+
+
+def _ont_pairs(L: int, n: int, div: float, seed: int):
+    """(patterns, texts): reference windows + ONT-profile mutated reads."""
+    rng = np.random.default_rng(seed)
+    ref = rng.choice(np.frombuffer(b"ACGT", np.uint8), size=L * (n + 2))
+    reads = sample_from_reference(ref, n, read_len=L, edit_frac=div,
+                                  rc_frac=0.0, error_profile="ont",
+                                  seed=seed)
+    pats = [ref[r.pos: r.pos + r.win_len] for r in reads]
+    texts = [r.read for r in reads]
+    return pats, texts
+
+
+def _rescore_exact(res, pats, texts, pen) -> bool:
+    for i, (p, t) in enumerate(zip(pats, texts)):
+        cost, ci, cj, ok = gotoh.score_cigar(res.cigars[i], p, t, pen)
+        if not (ok and ci == len(p) and cj == len(t)
+                and cost == res.scores[i]):
+            return False
+    return True
+
+
+def _best_of(fn, n=2):
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(pairs: int = 32, long_pair: bool = True) -> list[Row]:
+    pen = wfa_paper.pen
+    rows: list[Row] = []
+
+    # -- L = 1 kb: throughput — the capped split must not tank the short
+    # regime where packed is still comfortable
+    L, div, n = 1000, 0.05, max(4, min(pairs, 32))
+    pats, texts = _ont_pairs(L, n, div, seed=21)
+    eng = AlignmentEngine(pen, backend="ring", edit_frac=div)
+    packed = eng.align(pats, texts, output="cigar")              # warm
+    bidir = eng.align(pats, texts, output="cigar",
+                      trace_variant="bidir")
+    parity = (np.array_equal(packed.scores, bidir.scores)
+              and _rescore_exact(bidir, pats, texts, pen))
+    t_packed = _best_of(lambda: eng.align(pats, texts, output="cigar"))
+    t_bidir = _best_of(lambda: eng.align(pats, texts, output="cigar",
+                                         trace_variant="bidir"))
+    slowdown = t_bidir / t_packed
+    rows += [
+        (f"longread/L={L}/packed", t_packed / n * 1e6,
+         f"{n / t_packed:,.0f} pairs/s packed trace "
+         f"(peak {packed.stats.peak_trace_bytes / 1e6:.2f} MB)"),
+        (f"longread/L={L}/bidir", t_bidir / n * 1e6,
+         f"{n / t_bidir:,.0f} pairs/s bidir trace "
+         f"(peak {bidir.stats.peak_trace_bytes / 1e6:.2f} MB, "
+         f"{bidir.stats.n_bidir_fallback} fallbacks)"),
+        (f"longread/L={L}/slowdown", slowdown,
+         f"bidir/packed wall (gate <= {SLOWDOWN_GATE:.0f}x)"),
+        (f"longread/L={L}/parity", float(parity),
+         "bidir scores == packed, CIGARs re-score exact (gate == 1)"),
+    ]
+
+    # -- L = 10 kb: the headline — resident-trace high-water mark
+    L, div, n = 10000, 0.03, 2
+    pats, texts = _ont_pairs(L, n, div, seed=22)
+    eng = AlignmentEngine(pen, backend="ring", edit_frac=div)
+    packed = eng.align(pats, texts, output="cigar")
+    bidir = eng.align(pats, texts, output="cigar",
+                      trace_variant="bidir")
+    parity = (np.array_equal(packed.scores, bidir.scores)
+              and _rescore_exact(bidir, pats, texts, pen))
+    pk, bd = packed.stats.peak_trace_bytes, bidir.stats.peak_trace_bytes
+    ratio = pk / max(bd, 1)
+    rows += [
+        (f"longread/L={L}/trace_memory", ratio,
+         f"packed={pk / 1e6:.2f}MB bidir={bd / 1e6:.3f}MB resident "
+         f"high-water (gate >= {MEM_RATIO_GATE:.0f}x)"),
+        (f"longread/L={L}/parity", float(parity),
+         "bidir scores == packed, CIGARs re-score exact (gate == 1)"),
+    ]
+
+    # -- L = 50 kb: one pair end to end — exact CIGAR, budget respected
+    if long_pair:
+        L, div = 50000, 0.01
+        pats, texts = _ont_pairs(L, 1, div, seed=23)
+        eng = AlignmentEngine(pen, backend="ring", edit_frac=div)
+        t0 = time.perf_counter()
+        res = eng.align(pats, texts, output="cigar",
+                        trace_variant="bidir")
+        wall = time.perf_counter() - t0
+        # budget is in trace *cells* (s * (plen+tlen)); the packed child
+        # traces pack 16 cells per int32 word, so cells is a ~4x-headroom
+        # byte bound on the resident trace
+        budget = eng.trace_budget or DEFAULT_TRACE_BUDGET
+        exact = (int(res.scores[0]) >= 0
+                 and _rescore_exact(res, pats, texts, pen)
+                 and res.stats.peak_trace_bytes <= budget)
+        rows.append((f"longread/L={L}/exact", float(exact),
+                     f"1 pair in {wall:.1f}s, score={int(res.scores[0])}, "
+                     f"peak trace {res.stats.peak_trace_bytes / 1e6:.2f} MB "
+                     f"<= budget bound {budget / 1e6:.0f} MB (gate == 1)"))
+    return rows
+
+
+def _value(rows: list[Row], name: str) -> float:
+    for n, v, _ in rows:
+        if n == name:
+            return v
+    raise KeyError(name)
+
+
+def check(rows: list[Row]) -> list[str]:
+    """The CI gate over longread rows (live or from a JSON snapshot)."""
+    failures = []
+    if not rows:
+        return ["no longread rows in snapshot — the bench smoke must "
+                "include --only ...,longread"]
+    for name, v, _ in rows:
+        if name.endswith("/parity") and v != 1.0:
+            failures.append(f"{name}: bidir diverged from the packed "
+                            "oracle (scores or CIGAR re-score)")
+        if name.endswith("/exact") and v != 1.0:
+            failures.append(f"{name}: long pair failed to align exactly "
+                            "within the trace budget")
+    slowdown = _value(rows, "longread/L=1000/slowdown")
+    if slowdown > SLOWDOWN_GATE:
+        failures.append(f"longread/L=1000/slowdown: bidir {slowdown:.2f}x "
+                        f"slower than packed > {SLOWDOWN_GATE:.0f}x")
+    ratio = _value(rows, "longread/L=10000/trace_memory")
+    if ratio < MEM_RATIO_GATE:
+        failures.append(f"longread/L=10000/trace_memory: {ratio:.1f}x "
+                        f"< {MEM_RATIO_GATE:.0f}x packed-vs-bidir resident "
+                        "trace")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pairs", type=int, default=32)
+    ap.add_argument("--no-long-pair", action="store_true",
+                    help="skip the L=50kb single-pair row")
+    ap.add_argument("--check", action="store_true",
+                    help="fail (exit 1) unless bidir matches the packed "
+                         "oracle, trace memory is >= 8x under packed at "
+                         "L=10kb, and bidir is within 2x of packed at "
+                         "L=1kb")
+    ap.add_argument("--from-json", default=None, metavar="GLOB",
+                    help="with --check: gate on the newest matching "
+                         "benchmarks.run --json snapshot instead of "
+                         "re-running")
+    args = ap.parse_args(argv)
+    from benchmarks.common import emit
+    if args.from_json:
+        import glob
+        import json
+        paths = sorted(glob.glob(args.from_json))
+        if not paths:
+            print(f"# no snapshot matches {args.from_json!r}",
+                  file=sys.stderr)
+            return 1
+        with open(paths[-1]) as f:
+            payload = json.load(f)
+        rows = [(r["name"], r["us_per_call"], r["derived"])
+                for r in payload["rows"]
+                if r["name"].startswith("longread/")]
+        print(f"# gating on {paths[-1]} ({len(rows)} longread rows)",
+              file=sys.stderr)
+    else:
+        rows = run(pairs=args.pairs, long_pair=not args.no_long_pair)
+        emit(rows)
+    if args.check:
+        failures = check(rows)
+        for f in failures:
+            print(f"# longread REGRESSION: {f}", file=sys.stderr)
+        if failures:
+            return 1
+        print("# longread gate passed: bidir exact, trace memory "
+              f">={MEM_RATIO_GATE:.0f}x under packed @10kb, within "
+              f"{SLOWDOWN_GATE:.0f}x throughput @1kb", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

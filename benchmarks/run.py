@@ -52,7 +52,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,scaling,transfer,"
-                         "cigar,scoring,mapping,serving,wfa_ops,lm")
+                         "cigar,scoring,mapping,serving,longread,wfa_ops,"
+                         "lm")
     ap.add_argument("--pairs", type=int, default=8192)
     ap.add_argument("--json", nargs="?", const="auto", default=None,
                     metavar="PATH",
@@ -94,6 +95,11 @@ def main(argv=None) -> int:
         suites.append(("serving",
                        lambda: serving.run(
                            requests=min(max(args.pairs // 2, 64), 512))))
+    if want is None or "longread" in want:
+        from benchmarks import longread
+        suites.append(("longread",
+                       lambda: longread.run(
+                           pairs=min(max(args.pairs // 64, 8), 32))))
     if want is None or "wfa_ops" in want:
         from benchmarks import wfa_ops
         suites.append(("wfa_ops", wfa_ops.run))

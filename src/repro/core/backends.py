@@ -82,18 +82,23 @@ from repro.core import wavefront as wf
 ALL_MODELS = ("affine", "linear")
 
 
-def _accepts_heur(fn: Optional[Callable]) -> bool:
-    """True when ``fn`` takes a ``heur`` keyword (or ``**kwargs``)."""
+def _accepts_kw(fn: Optional[Callable], kw: str) -> bool:
+    """True when ``fn`` takes keyword ``kw`` (or ``**kwargs``)."""
     if fn is None:
         return False
     try:
         sig = inspect.signature(fn)
     except (TypeError, ValueError):    # builtins / odd callables: assume yes
         return True
-    if "heur" in sig.parameters:
+    if kw in sig.parameters:
         return True
     return any(p.kind is inspect.Parameter.VAR_KEYWORD
                for p in sig.parameters.values())
+
+
+def _accepts_heur(fn: Optional[Callable]) -> bool:
+    """True when ``fn`` takes a ``heur`` keyword (or ``**kwargs``)."""
+    return _accepts_kw(fn, "heur")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,6 +123,13 @@ class BackendSpec:
         """Whether the callable serving ``output`` takes ``heur=``."""
         return _accepts_heur(self.fn if output == "score"
                              else self.trace_variant)
+
+    def accepts_states(self) -> bool:
+        """Whether the trace variant takes ``begin_state``/``end_state``
+        (the BiWFA recursion's boundary-constrained sub-alignments).  The
+        engine silently substitutes the ``ring`` trace path for stateful
+        children on backends that don't."""
+        return _accepts_kw(self.trace_variant, "begin_state")
 
     def variant(self, output: str,
                 model_kind: str = "affine") -> Callable[..., wf.WFAResult]:
@@ -211,10 +223,12 @@ def model_backends(kind: str) -> List[str]:
 # Built-in backends.
 
 
-def _ref_trace(pattern, text, plen, tlen, *, pen, s_max, k_max, heur=None):
+def _ref_trace(pattern, text, plen, tlen, *, pen, s_max, k_max, heur=None,
+               begin_state="M", end_state="M"):
     return wf.wfa_forward(pattern, text, plen, tlen, pen=pen,
                           s_max=s_max, k_max=k_max, keep_history=True,
-                          heur=heur)
+                          heur=heur, begin_state=begin_state,
+                          end_state=end_state)
 
 
 @register_backend("ref", trace_variant=_ref_trace, models=ALL_MODELS,
@@ -225,9 +239,11 @@ def _ref_backend(pattern, text, plen, tlen, *, pen, s_max, k_max, heur=None):
                           heur=heur)
 
 
-def _ring_trace(pattern, text, plen, tlen, *, pen, s_max, k_max, heur=None):
+def _ring_trace(pattern, text, plen, tlen, *, pen, s_max, k_max, heur=None,
+                begin_state="M", end_state="M"):
     return wf.wfa_scores_packed(pattern, text, plen, tlen, pen=pen,
-                                s_max=s_max, k_max=k_max, heur=heur)
+                                s_max=s_max, k_max=k_max, heur=heur,
+                                begin_state=begin_state, end_state=end_state)
 
 
 # The [B] int32 length buffers are donatable: the [B] int32 score output

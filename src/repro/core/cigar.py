@@ -83,14 +83,21 @@ def _get(hist, s, k, k_max):
 
 def traceback_one(m_hist, i_hist, d_hist, pen, score: int,
                   plen: int, tlen: int, k_max: int,
-                  pair: Optional[int] = None) -> np.ndarray:
-    """Gap-affine traceback for one pair. hist arrays are [s_max+1, K]."""
+                  pair: Optional[int] = None, begin_state: str = "M",
+                  end_state: str = "M") -> np.ndarray:
+    """Gap-affine traceback for one pair. hist arrays are [s_max+1, K].
+
+    ``begin_state``/``end_state`` mirror the solver's boundary states
+    (BiWFA sub-alignments): the walk starts in ``end_state`` and may
+    terminate on the gap seed cell ``I_0[0] = 0`` / ``D_0[0] = 0``
+    (inherited open gap, no op of its own) instead of the M origin.
+    """
     if score < 0:
         return np.empty((0,), np.int8)
     pen = scoring.as_model(pen)
     x, o, e = pen.x, pen.o, pen.e
     ops: list[int] = []          # built back-to-front
-    state = "M"
+    state = end_state
     s = int(score)
     k = tlen - plen
     h = tlen
@@ -124,6 +131,13 @@ def traceback_one(m_hist, i_hist, d_hist, pen, score: int,
             else:
                 state = "D"
         elif state == "I":
+            if s == 0:
+                # gap seed cell (begin_state="I"): inherited open gap,
+                # carries no op
+                if begin_state != "I" or k != 0 or h != 0:
+                    raise TracebackError("I chain hit s=0 off the gap seed",
+                                         pair=pair, s=s, k=k, h=h)
+                break
             ext = _get(i_hist, s - e, k - 1, k_max) if s >= e else NEG
             ext = ext + 1 if ext > _VALID_THRESH else NEG
             ops.append(OP_I)
@@ -142,6 +156,11 @@ def traceback_one(m_hist, i_hist, d_hist, pen, score: int,
                 h -= 1
                 state = "M"
         else:  # "D"
+            if s == 0:
+                if begin_state != "D" or k != 0 or h != 0:
+                    raise TracebackError("D chain hit s=0 off the gap seed",
+                                         pair=pair, s=s, k=k, h=h)
+                break
             ext = _get(d_hist, s - e, k + 1, k_max) if s >= e else NEG
             ops.append(OP_D)
             if ext > _VALID_THRESH and h == ext:
@@ -217,7 +236,8 @@ def traceback_linear_one(m_hist, pen, score: int, plen: int, tlen: int,
     return np.asarray(ops[::-1], np.int8)
 
 
-def traceback_batch(result, pen, plen, tlen, k_max: int):
+def traceback_batch(result, pen, plen, tlen, k_max: int,
+                    begin_state: str = "M", end_state: str = "M"):
     """-> list of per-pair op arrays (ragged), dispatched on the model."""
     model = scoring.as_model(pen)
     m_h = np.asarray(result.m_hist)
@@ -225,6 +245,8 @@ def traceback_batch(result, pen, plen, tlen, k_max: int):
     plen = np.asarray(plen)
     tlen = np.asarray(tlen)
     if model.kind == "linear":
+        if begin_state != "M" or end_state != "M":
+            raise ValueError("linear models have no I/D boundary states")
         return [
             traceback_linear_one(m_h[:, b], model, int(scores[b]),
                                  int(plen[b]), int(tlen[b]), k_max, pair=b)
@@ -234,7 +256,8 @@ def traceback_batch(result, pen, plen, tlen, k_max: int):
     d_h = np.asarray(result.d_hist)
     return [
         traceback_one(m_h[:, b], i_h[:, b], d_h[:, b], model, int(scores[b]),
-                      int(plen[b]), int(tlen[b]), k_max, pair=b)
+                      int(plen[b]), int(tlen[b]), k_max, pair=b,
+                      begin_state=begin_state, end_state=end_state)
         for b in range(scores.shape[0])
     ]
 
@@ -276,16 +299,19 @@ def _lcp(p: np.ndarray, t: np.ndarray, v: int, h: int) -> int:
 
 
 def _replay(rev, p, t, plen: int, tlen: int,
-            pair: Optional[int] = None) -> np.ndarray:
+            pair: Optional[int] = None, extend_start: bool = True) -> np.ndarray:
     """Phase B: replay a back-to-front edit chain forward, re-deriving each
     match run by maximal extension (exactly the forward pass's extend
-    step).  ``rev`` holds ``(op, extend_after)`` pairs."""
+    step).  ``rev`` holds ``(op, extend_after)`` pairs.  ``extend_start``
+    is False when the chain terminated on a begin-state gap seed (the
+    alignment opens mid-gap: no leading match run to re-derive)."""
     ops: list[int] = []
     v = h = 0
-    r = _lcp(p, t, v, h)
-    ops.extend([OP_M] * r)
-    v += r
-    h += r
+    if extend_start:
+        r = _lcp(p, t, v, h)
+        ops.extend([OP_M] * r)
+        v += r
+        h += r
     for op, extend_after in reversed(rev):
         if op == OP_X:
             if v >= plen or h >= tlen:
@@ -318,7 +344,8 @@ def _replay(rev, p, t, plen: int, tlen: int,
 
 def traceback_packed_one(m_bt, i_bt, d_bt, pen, score: int,
                          pattern, text, plen: int, tlen: int,
-                         pair: Optional[int] = None) -> np.ndarray:
+                         pair: Optional[int] = None, begin_state: str = "M",
+                         end_state: str = "M") -> np.ndarray:
     """Gap-affine traceback for one pair from packed provenance words.
 
     ``m_bt/i_bt/d_bt`` are this pair's ``[n_words, K]`` int32 code words;
@@ -326,6 +353,12 @@ def traceback_packed_one(m_bt, i_bt, d_bt, pen, score: int,
     match runs are *replayed*, not stored.  The diagonal center is
     ``K // 2`` (true for both the jnp layout ``K = 2*k_max+1`` and the
     kernel's lane-padded layout).
+
+    ``begin_state``/``end_state`` mirror the solver's boundary states
+    (BiWFA sub-alignments): the walk starts in ``end_state``; a
+    begin-state gap chain terminates on the (codeless) gap seed cell at
+    ``s = 0``, and replay then skips the leading match extension (the
+    alignment opens mid-gap).
     """
     if score < 0:
         return np.empty((0,), np.int8)
@@ -339,9 +372,10 @@ def traceback_packed_one(m_bt, i_bt, d_bt, pen, score: int,
     # Emits the *edit* chain only (no match runs) back-to-front; each op is
     # tagged with whether forward replay re-enters an M cell after it (and
     # so must re-extend matches there).
-    s, k, state = int(score), tlen - plen, "M"
+    s, k, state = int(score), tlen - plen, end_state
     rev: list[tuple[int, bool]] = []          # (op, extend_after)
     close = False                             # next gap op folds into M
+    extend_start = True
     guard = 4 * (plen + tlen) + 4 * (s + 1) + 8
     while guard > 0:
         guard -= 1
@@ -363,6 +397,14 @@ def traceback_packed_one(m_bt, i_bt, d_bt, pen, score: int,
                 raise TracebackError("invalid M provenance code",
                                      pair=pair, s=s, k=k)
         elif state == "I":
+            if s == 0:
+                # begin-state gap seed: inherited open gap, no op, no
+                # leading match run before it
+                if begin_state != "I" or k != 0:
+                    raise TracebackError("I chain hit s=0 off the gap seed",
+                                         pair=pair, s=s, k=k)
+                extend_start = False
+                break
             c = _code_at(i_bt, s, k, kc)
             if c == 0:
                 raise TracebackError("invalid I provenance code",
@@ -376,6 +418,12 @@ def traceback_packed_one(m_bt, i_bt, d_bt, pen, score: int,
                 s -= o + e
                 state = "M"
         else:  # "D"
+            if s == 0:
+                if begin_state != "D" or k != 0:
+                    raise TracebackError("D chain hit s=0 off the gap seed",
+                                         pair=pair, s=s, k=k)
+                extend_start = False
+                break
             c = _code_at(d_bt, s, k, kc)
             if c == 0:
                 raise TracebackError("invalid D provenance code",
@@ -392,7 +440,8 @@ def traceback_packed_one(m_bt, i_bt, d_bt, pen, score: int,
         raise TracebackError("packed traceback did not terminate",
                              pair=pair, s=s, k=k)
 
-    return _replay(rev, p, t, plen, tlen, pair=pair)
+    return _replay(rev, p, t, plen, tlen, pair=pair,
+                   extend_start=extend_start)
 
 
 def traceback_packed_linear_one(m_bt, pen, score: int, pattern, text,
@@ -444,7 +493,8 @@ def traceback_packed_linear_one(m_bt, pen, score: int, pattern, text,
     return _replay(rev, p, t, plen, tlen, pair=pair)
 
 
-def traceback_packed_batch(result, pen, pattern, text, plen, tlen):
+def traceback_packed_batch(result, pen, pattern, text, plen, tlen,
+                           begin_state: str = "M", end_state: str = "M"):
     """-> list of per-pair op arrays (ragged) from packed provenance,
     dispatched on the model's recurrence kind."""
     model = scoring.as_model(pen)
@@ -455,6 +505,8 @@ def traceback_packed_batch(result, pen, pattern, text, plen, tlen):
     plen = np.asarray(plen).reshape(-1)
     tlen = np.asarray(tlen).reshape(-1)
     if model.kind == "linear":
+        if begin_state != "M" or end_state != "M":
+            raise ValueError("linear models have no I/D boundary states")
         return [
             traceback_packed_linear_one(m_bt[:, b], model, int(scores[b]),
                                         pattern[b], text[b], int(plen[b]),
@@ -466,24 +518,30 @@ def traceback_packed_batch(result, pen, pattern, text, plen, tlen):
     return [
         traceback_packed_one(m_bt[:, b], i_bt[:, b], d_bt[:, b], model,
                              int(scores[b]), pattern[b], text[b],
-                             int(plen[b]), int(tlen[b]), pair=b)
+                             int(plen[b]), int(tlen[b]), pair=b,
+                             begin_state=begin_state, end_state=end_state)
         for b in range(scores.shape[0])
     ]
 
 
 def traceback_result(result, pen, *, pattern, text, plen, tlen,
-                     k_max: int):
+                     k_max: int, begin_state: str = "M",
+                     end_state: str = "M"):
     """Dispatch on the trace encoding a ``WFAResult`` carries.
 
     Full offset history (``ref``) -> pointer-chase traceback; packed
     provenance words (``ring``/``kernel``/``shardmap``) -> decode + replay.
     ``pen`` may be a legacy ``Penalties`` triple or any ``PenaltyModel``;
-    linear models decode their single M plane.
+    linear models decode their single M plane.  ``begin_state`` /
+    ``end_state`` select BiWFA sub-alignment boundaries (affine only).
     """
     if getattr(result, "m_hist", None) is not None:
-        return traceback_batch(result, pen, plen, tlen, k_max)
+        return traceback_batch(result, pen, plen, tlen, k_max,
+                               begin_state=begin_state, end_state=end_state)
     if getattr(result, "m_bt", None) is not None:
-        return traceback_packed_batch(result, pen, pattern, text, plen, tlen)
+        return traceback_packed_batch(result, pen, pattern, text, plen,
+                                      tlen, begin_state=begin_state,
+                                      end_state=end_state)
     raise ValueError("result carries no trace (score-only backend output); "
                      "run the backend's trace variant (output='cigar')")
 

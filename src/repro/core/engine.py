@@ -78,6 +78,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import cigar as cigar_mod
 from repro.core import scoring
+from repro.core import wavefront as wf
 from repro.core.backends import BackendSpec, get_backend
 from repro.core.penalties import DEFAULT
 
@@ -241,6 +242,11 @@ class EngineStats:
     t_scatter: float = 0.0
     t_kernel: float = 0.0
     t_gather: float = 0.0
+    # BiWFA (trace_variant="bidir") telemetry
+    n_meet_unmet: int = 0      # meet rows whose fronts never joined
+    n_bidir_fallback: int = 0  # segments re-run via packed traceback
+    peak_trace_bytes: int = 0  # largest trace buffer gathered for one wave
+                               # (the resident trace-memory high-water mark)
 
     @property
     def n_buckets(self) -> int:
@@ -316,42 +322,56 @@ class _Executable:
 
     def __init__(self, spec: BackendSpec, pen, s_max: int,
                  k_max: int, mesh: Optional[Mesh], output: str = "score",
-                 heur=None):
+                 heur=None, states: Tuple[str, str] = ("M", "M")):
         self.s_max = s_max
         self.k_max = k_max
         self._traces = [0]
         traces = self._traces
         pen = scoring.as_model(pen)
         heur = scoring.as_heuristic(heur)
-        backend_fn = spec.variant(output, pen.kind)
-        self._dispatch = spec.dispatch
-        extra = {"mesh": mesh} if spec.needs_mesh else {}
+        states = tuple(states)
+        if output == "bidir_meet":
+            # the meet-in-the-middle breakpoint solver is engine-level (pure
+            # jnp, backend-independent): it exists to *avoid* materializing
+            # a trace, so there is no per-backend variant to select
+            backend_fn = wf.wfa_bidir_meet
+            self._dispatch = None
+            extra = {}
+        else:
+            backend_fn = spec.variant(output, pen.kind)
+            self._dispatch = spec.dispatch
+            extra = {"mesh": mesh} if spec.needs_mesh else {}
         # Only pass heur when pruning is actually requested, so
         # heuristic-unaware plug-in backends keep serving exact alignment.
         if not heur.exact:
-            if not spec.accepts_heuristic(output):
+            if output != "bidir_meet" and not spec.accepts_heuristic(output):
                 raise ValueError(
                     f"backend {spec.name!r} does not accept wavefront "
                     f"heuristics (no 'heur' keyword on its "
                     f"{output}-variant); use heuristic=None or a "
                     f"heuristic-aware backend")
             extra["heur"] = heur
+        if states != ("M", "M"):
+            # boundary-constrained sub-alignment (BiWFA recursion child);
+            # the engine substitutes a state-capable trace path upstream
+            extra["begin_state"], extra["end_state"] = states
 
-        def _run(pattern, text, plen, tlen):
+        def _run(*arrays):
             traces[0] += 1            # trace-time side effect only
-            return backend_fn(pattern, text, plen, tlen, pen=pen,
+            return backend_fn(*arrays, pen=pen,
                               s_max=s_max, k_max=k_max, **extra)
 
         # Donation is a no-op (with a warning) on CPU; only apply it where
         # XLA can actually alias the buffers.
         donate = (spec.donate_args
-                  if jax.default_backend() in ("gpu", "tpu") else ())
+                  if output != "bidir_meet"
+                  and jax.default_backend() in ("gpu", "tpu") else ())
         self.fn = jax.jit(_run, donate_argnums=donate)
 
-    def call(self, pattern, text, plen, tlen):
+    def call(self, *arrays):
         if self._dispatch is not None:
-            return self._dispatch(self.fn, pattern, text, plen, tlen)
-        return self.fn(pattern, text, plen, tlen)
+            return self._dispatch(self.fn, *arrays)
+        return self.fn(*arrays)
 
     @property
     def n_traces(self) -> int:
@@ -398,13 +418,19 @@ class AlignmentEngine:
                  with_cigar: bool = False,
                  mesh: Optional[Mesh] = None,
                  chunk_pairs: int = 1 << 16, bucket_by_length: bool = True,
-                 min_bucket_len: int = 16, adaptive: bool = True):
+                 min_bucket_len: int = 16, adaptive: bool = True,
+                 trace_variant: str = "packed",
+                 max_wave_cells: int = 1 << 24,
+                 trace_budget: Optional[int] = None):
         spec = get_backend(backend)
         if with_cigar:
             output = "cigar"
         if output not in ("score", "cigar"):
             raise ValueError(f"unknown output mode {output!r}; "
                              "use 'score' or 'cigar'")
+        if trace_variant not in ("packed", "bidir"):
+            raise ValueError(f"unknown trace variant {trace_variant!r}; "
+                             "use 'packed' or 'bidir'")
         if output == "cigar" and not spec.supports_cigar:
             raise ValueError(
                 f"CIGAR output needs a backend with a trace variant; "
@@ -424,6 +450,13 @@ class AlignmentEngine:
         self.bucket_by_length = bucket_by_length
         self.min_bucket_len = int(min_bucket_len)
         self.adaptive = adaptive
+        self.trace_variant = trace_variant
+        # long-read bucket ladder: cap rows-per-wave so wide buckets (100 kb
+        # pairs) dispatch narrow waves instead of OOMing at chunk_pairs rows
+        self.max_wave_cells = int(max_wave_cells)
+        # bidir recursion base case: packed traceback allowed when a
+        # sub-problem's s*(plen+tlen) fits this many cells (None = default)
+        self.trace_budget = trace_budget
         self.n_workers = (int(np.prod(list(mesh.shape.values())))
                           if mesh is not None else jax.device_count())
         self._cache: Dict[tuple, _Executable] = {}
@@ -448,6 +481,21 @@ class AlignmentEngine:
             kind = (self.pen if pen is None else pen).kind
             get_backend(self.backend).variant("cigar", kind)
         return out
+
+    def resolve_trace_variant(self, trace_variant: Optional[str],
+                              output: str = "score") -> str:
+        """Validate a per-call trace variant (None -> the engine default).
+
+        ``"bidir"`` selects the meet-in-the-middle BiWFA traceback
+        (``repro.biwfa``) for CIGAR submissions: O(s) trace memory instead
+        of the packed O(s^2) backtrace.  It only changes how CIGARs are
+        produced, so score-only submissions normalize to ``"packed"``.
+        """
+        tv = self.trace_variant if trace_variant is None else trace_variant
+        if tv not in ("packed", "bidir"):
+            raise ValueError(f"unknown trace variant {trace_variant!r}; "
+                             "use 'packed' or 'bidir'")
+        return tv if output == "cigar" else "packed"
 
     def resolve_penalties(self, pen) -> "scoring.PenaltyModel":
         """Validate a per-call penalty model (None -> the engine default)."""
@@ -488,7 +536,8 @@ class AlignmentEngine:
 
     def _bounds_for_bucket(self, lmax: int, plen_b: np.ndarray,
                            tlen_b: np.ndarray, exact: bool,
-                           pen=None) -> Tuple[int, int]:
+                           pen=None, s_cap: Optional[int] = None
+                           ) -> Tuple[int, int]:
         """Static (s_max, k_max) for one bucket.
 
         Pass-1 bounds depend only on (pen, lmax, edit_frac) — never on the
@@ -499,26 +548,28 @@ class AlignmentEngine:
         imply tighter E-derived score bounds (edit distance: ``s_max``
         close to the edit budget itself), so the score loop cap shrinks
         with the model.
+
+        ``s_cap`` is a per-submit score ceiling: the BiWFA recursion
+        dispatches sub-problems whose cost is already known, so their waves
+        run far below the bucket's worst case (callers quantize the cap for
+        cache reuse).
         """
         pen = self.pen if pen is None else pen
+        max_diff = int(np.abs(tlen_b - plen_b).max(initial=0))
         if self._s_max is not None:
             s = int(self._s_max)
-            max_diff = int(np.abs(tlen_b - plen_b).max(initial=0))
-            k = self._k_max if self._k_max is not None else \
-                min(pen.band_bound(s), lmax)
-            return s, max(int(k), max_diff, 1)
-        if not exact and self.edit_frac is not None:
+        elif not exact and self.edit_frac is not None:
             # regime bound: at most ceil(E*L) edits, so the length diff is
             # at most that many bases too — fully data-independent (no
             # max_diff bump: the band provably covers any within-budget
             # pair, and over-budget pairs go to the recovery pass anyway)
             n_err = int(math.ceil(self.edit_frac * lmax))
-            s = pen.score_bound(lmax, self.edit_frac, len_diff=n_err)
-            k = self._k_max if self._k_max is not None else \
-                min(pen.band_bound(s), lmax)
-            return int(s), max(int(k), 1)
-        s = _round_up(_exact_worst_score(pen, plen_b, tlen_b), 32)
-        max_diff = int(np.abs(tlen_b - plen_b).max(initial=0))
+            s = int(pen.score_bound(lmax, self.edit_frac, len_diff=n_err))
+            max_diff = 0
+        else:
+            s = _round_up(_exact_worst_score(pen, plen_b, tlen_b), 32)
+        if s_cap is not None:
+            s = max(min(s, int(s_cap)), 1)
         k = self._k_max if self._k_max is not None else \
             min(pen.band_bound(s), lmax)
         return int(s), max(int(k), max_diff, 1)
@@ -550,20 +601,30 @@ class AlignmentEngine:
 
     def _executable_for(self, pshape: tuple, tshape: tuple, s_max: int,
                         k_max: int, output: str = "score",
-                        pen=None, heur=None) -> Tuple["_Executable", bool]:
+                        pen=None, heur=None,
+                        states: Tuple[str, str] = ("M", "M")
+                        ) -> Tuple["_Executable", bool]:
         """Cached executable for one rectangular problem shape -> (exe, hit)."""
         spec = get_backend(self.backend)
+        states = tuple(states)
+        if output == "cigar" and states != ("M", "M") \
+                and not spec.accepts_states():
+            # boundary-constrained children (BiWFA recursion) need a
+            # state-aware trace path; fall back to the ring solver for
+            # backends whose trace variant can't seed mid-gap fronts
+            spec = get_backend("ring")
         pen = self.pen if pen is None else pen
         heur = self.heuristic if heur is None else heur
         # the whole spec in the key: re-registering a backend name (new fn,
         # donation or dispatch hooks) must not serve stale executables.
-        # output mode, penalty model and heuristic too: each compiles a
-        # different recurrence / pruning step.
-        key = (spec, pen, heur, pshape, tshape, s_max, k_max, output)
+        # output mode, penalty model, heuristic and boundary states too:
+        # each compiles a different recurrence / pruning / seeding step.
+        key = (spec, pen, heur, pshape, tshape, s_max, k_max, output, states)
         exe = self._cache.get(key)
         if exe is not None:
             return exe, True
-        exe = _Executable(spec, pen, s_max, k_max, self.mesh, output, heur)
+        exe = _Executable(spec, pen, s_max, k_max, self.mesh, output, heur,
+                          states)
         self._cache[key] = exe
         return exe, False
 
@@ -587,23 +648,28 @@ class AlignmentEngine:
 
     def align(self, patterns: Sequence[Seq], texts: Sequence[Seq], *,
               output: Optional[str] = None, penalties=None,
-              heuristic=None) -> EngineResult:
+              heuristic=None, trace_variant: Optional[str] = None
+              ) -> EngineResult:
         """Align python sequences (str/bytes/int arrays), pairwise.
 
         ``output="cigar"`` additionally emits exact per-pair CIGAR op
         arrays (``EngineResult.cigars``) via the backend's trace variant;
         ``penalties=`` selects a per-call penalty model and ``heuristic=``
-        a per-call wavefront heuristic; ``None`` uses the engine defaults.
+        a per-call wavefront heuristic; ``trace_variant="bidir"`` produces
+        the CIGARs through the O(s)-memory BiWFA recursion instead of the
+        packed backtrace; ``None`` uses the engine defaults.
         """
         assert len(patterns) == len(texts)
         p, plen = pack_batch(patterns)
         t, tlen = pack_batch(texts)
         return self.align_packed(p, plen, t, tlen, output=output,
-                                 penalties=penalties, heuristic=heuristic)
+                                 penalties=penalties, heuristic=heuristic,
+                                 trace_variant=trace_variant)
 
     def align_packed(self, p: np.ndarray, plen: np.ndarray, t: np.ndarray,
                      tlen: np.ndarray, *, output: Optional[str] = None,
-                     penalties=None, heuristic=None) -> EngineResult:
+                     penalties=None, heuristic=None,
+                     trace_variant: Optional[str] = None) -> EngineResult:
         """Align pre-packed rectangular batches ([B, L] codes + [B] lens).
 
         Thin blocking wrapper over one streaming session: a single
@@ -615,12 +681,15 @@ class AlignmentEngine:
                                 _sync_timing=True)
         ticket = sess.submit_packed(p, plen, t, tlen, output=output,
                                     penalties=penalties,
-                                    heuristic=heuristic)
+                                    heuristic=heuristic,
+                                    trace_variant=trace_variant)
         sess.drain()
         return ticket.result()
 
     def align_pair(self, pattern: Seq, text: Seq, *,
                    output: Optional[str] = None, penalties=None,
-                   heuristic=None) -> EngineResult:
+                   heuristic=None, trace_variant: Optional[str] = None
+                   ) -> EngineResult:
         return self.align([pattern], [text], output=output,
-                          penalties=penalties, heuristic=heuristic)
+                          penalties=penalties, heuristic=heuristic,
+                          trace_variant=trace_variant)

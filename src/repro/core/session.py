@@ -83,7 +83,9 @@ class Ticket:
     """
 
     def __init__(self, session: "AlignmentSession", index: int, n_pairs: int,
-                 output: str = "score", pen=None, heur=None, meta=None):
+                 output: str = "score", pen=None, heur=None, meta=None,
+                 trace_variant: str = "packed", states=("M", "M"),
+                 s_cap=None, internal: bool = False, on_done=None):
         eng = session.engine
         self.index = index
         self.n_pairs = n_pairs
@@ -94,10 +96,28 @@ class Ticket:
         self.meta = meta
         self.pen = eng.pen if pen is None else pen          # PenaltyModel
         self.heur = eng.heuristic if heur is None else heur
+        self.trace_variant = trace_variant   # "packed" | "bidir"
+        # boundary states for BiWFA recursion children: "I"/"D" pins the
+        # alignment start/end inside an open gap run
+        self.states = tuple(states)
+        # per-submit score ceiling (BiWFA children dispatch at their known
+        # cost, far below the bucket worst case); None = engine bounds.
+        # Capped tickets are single-pass: an unresolved row means "over the
+        # cap", not "over the optimistic bound", so no recovery re-run.
+        self._s_cap = s_cap
+        # internal tickets (BiWFA sub-problems) never surface through
+        # poll()/as_completed()/results(); on_done fires at finalization
+        self.internal = internal
+        self._on_done = on_done
         self.stats = EngineStats(n_pairs=n_pairs, n_workers=eng.n_workers)
         self._session = session
         self._scores = np.full((n_pairs,), -1, np.int32)
         self._cigars: Optional[dict] = {} if output == "cigar" else None
+        # breakpoint fields for output="bidir_meet" rows:
+        # (state, a, b, k, h, safe) per pair, -1 until the wave retires
+        self._meet = (np.full((n_pairs, 6), -1, np.int32)
+                      if output == "bidir_meet" else None)
+        self._starget = None             # [n] known costs for meet waves
         self._p = self._t = self._plen = self._tlen = None
         self._outstanding = n_pairs      # rows without a final score yet
         self._recovery_rows: List[np.ndarray] = []   # overflow awaiting re-run
@@ -218,7 +238,8 @@ class AlignmentSession:
 
     def submit(self, patterns: Sequence[Seq], texts: Sequence[Seq], *,
                output: Optional[str] = None, penalties=None,
-               heuristic=None, meta=None) -> Ticket:
+               heuristic=None, meta=None,
+               trace_variant: Optional[str] = None) -> Ticket:
         """Enqueue one batch of python sequences; returns immediately.
 
         ``output="cigar"`` makes this ticket's waves run the backend's
@@ -226,34 +247,53 @@ class AlignmentSession:
         ``penalties=``/``heuristic=`` select this ticket's penalty model
         and wavefront heuristic (tickets with different models coexist in
         one session — each compiles and caches its own executables);
-        ``None`` uses the engine defaults.  ``meta`` is an opaque payload
-        stored on the returned ticket (``ticket.meta``) — the session
-        never reads it.
+        ``trace_variant="bidir"`` produces this ticket's CIGARs through the
+        O(s)-memory BiWFA recursion (``repro.biwfa``) instead of the packed
+        backtrace; ``None`` uses the engine defaults.  ``meta`` is an
+        opaque payload stored on the returned ticket (``ticket.meta``) —
+        the session never reads it.
         """
         assert len(patterns) == len(texts)
         p, plen = pack_batch(patterns)
         t, tlen = pack_batch(texts)
         return self.submit_packed(p, plen, t, tlen, output=output,
                                   penalties=penalties, heuristic=heuristic,
-                                  meta=meta)
+                                  meta=meta, trace_variant=trace_variant)
 
     def submit_packed(self, p: np.ndarray, plen: np.ndarray, t: np.ndarray,
                       tlen: np.ndarray, *, output: Optional[str] = None,
-                      penalties=None, heuristic=None, meta=None) -> Ticket:
-        """Enqueue pre-packed [B, L] codes + [B] lens; returns immediately."""
+                      penalties=None, heuristic=None, meta=None,
+                      trace_variant: Optional[str] = None,
+                      _s_cap=None, _states=("M", "M"), _starget=None,
+                      _internal: bool = False, _on_done=None) -> Ticket:
+        """Enqueue pre-packed [B, L] codes + [B] lens; returns immediately.
+
+        The underscore keywords are the BiWFA driver's internal seam
+        (``repro.biwfa.recurse``): sub-problems resubmit through the same
+        session so they batch with live traffic.  ``_starget`` (known
+        per-pair costs) flips the ticket to the engine-level
+        ``"bidir_meet"`` output — a breakpoint wave, not a score/trace one.
+        """
         with self._lock:
             self._check_open()
             n = int(p.shape[0])
             # resolve everything before the Ticket exists: a rejected submit
             # must leave the session clean (no permanently-incomplete ticket)
             pen = self.engine.resolve_penalties(penalties)
-            out = self.engine.resolve_output(output, pen)
+            if _starget is not None:
+                out = "bidir_meet"
+            else:
+                out = self.engine.resolve_output(output, pen)
             heur = self.engine.resolve_heuristic(heuristic, out)
+            tv = self.engine.resolve_trace_variant(trace_variant, out)
             ticket = Ticket(self, len(self._tickets), n, out, pen=pen,
-                            heur=heur, meta=meta)
+                            heur=heur, meta=meta, trace_variant=tv,
+                            states=_states, s_cap=_s_cap,
+                            internal=_internal, on_done=_on_done)
             self._tickets.append(ticket)
-            self.stats.n_submits += 1
-            self.stats.n_pairs += n
+            if not _internal:
+                self.stats.n_submits += 1
+                self.stats.n_pairs += n
             if n == 0:
                 self._finalize(ticket)
                 return ticket
@@ -261,8 +301,21 @@ class AlignmentSession:
             ticket._t = np.asarray(t)
             ticket._plen = np.asarray(plen, np.int32)
             ticket._tlen = np.asarray(tlen, np.int32)
+            if _starget is not None:
+                ticket._starget = np.asarray(_starget, np.int32)
+            if tv == "bidir" and out == "cigar" and not _internal:
+                # meet-in-the-middle traceback: a host-side driver owns this
+                # ticket — it resolves scores first, then recursively splits
+                # each pair via breakpoint waves and internal sub-tickets,
+                # all batched through this same session
+                from repro.biwfa.recurse import BidirDriver
+                BidirDriver(self, ticket).start()
+                return ticket
             eng = self.engine
-            optimistic = eng.edit_frac is not None and eng._s_max is None
+            # capped tickets (BiWFA children) are single-pass: the cap is
+            # already an exact bound, so skip the optimistic first pass
+            optimistic = (eng.edit_frac is not None and eng._s_max is None
+                          and _s_cap is None)
             self._enqueue_pass(ticket, np.arange(n), exact=not optimistic,
                                recovery=False)
             return ticket
@@ -274,15 +327,21 @@ class AlignmentSession:
         for width, bidx in eng._plan_buckets(ticket._plen, ticket._tlen, idx):
             s_max, k_max = eng._bounds_for_bucket(
                 width, ticket._plen[bidx], ticket._tlen[bidx], exact,
-                pen=ticket.pen)
+                pen=ticket.pen, s_cap=ticket._s_cap)
             ticket._s_hi = max(ticket._s_hi, s_max)
             ticket._k_hi = max(ticket._k_hi, k_max)
             info = BucketInfo(width, s_max, k_max, len(bidx),
                               recovery=recovery)
             ticket.stats.buckets.append(info)
             self.stats.buckets.append(info)
-            for lo in range(0, len(bidx), self.wave_pairs):
-                self._dispatch(ticket, bidx[lo:lo + self.wave_pairs], width,
+            # long-read bucket ladder: wide buckets cap rows-per-wave so a
+            # 100 kb bucket dispatches narrow waves instead of OOMing at
+            # wave_pairs rows (max_wave_cells bounds rows*width per wave)
+            step = min(self.wave_pairs,
+                       max(eng.max_wave_cells // max(width, 1),
+                           eng.n_workers, 1))
+            for lo in range(0, len(bidx), step):
+                self._dispatch(ticket, bidx[lo:lo + step], width,
                                s_max, k_max, recovery)
 
     def _dispatch(self, ticket: Ticket, rows: np.ndarray, width: int,
@@ -301,9 +360,14 @@ class AlignmentSession:
         tc = _pad_rows(_fit_width(ticket._t[rows], width), nb)
         plc = _pad_rows(ticket._plen[rows], nb)
         tlc = _pad_rows(ticket._tlen[rows], nb)
+        arrays = [pc, tc, plc, tlc]
+        if ticket.output == "bidir_meet":
+            # breakpoint waves carry each pair's known cost as a 5th input
+            arrays.append(_pad_rows(ticket._starget[rows], nb))
         exe, hit = eng._executable_for(pc.shape, tc.shape, s_max, k_max,
                                        ticket.output, pen=ticket.pen,
-                                       heur=ticket.heur)
+                                       heur=ticket.heur,
+                                       states=ticket.states)
         for st in (ticket.stats, self.stats):
             if hit:
                 st.cache_hits += 1
@@ -315,13 +379,13 @@ class AlignmentSession:
             st.rows_padded += nb
         pre = exe.n_traces
         try:
-            dp, dt_, dpl, dtl = eng._device_put(pc, tc, plc, tlc)
+            dev = eng._device_put(*arrays)
             if self._sync:
-                jax.block_until_ready((dp, dt_, dpl, dtl))
+                jax.block_until_ready(dev)
                 t1 = time.perf_counter()
                 for st in (ticket.stats, self.stats):
                     st.t_scatter += t1 - t0
-            res = exe.call(dp, dt_, dpl, dtl)
+            res = exe.call(*dev)
             if self._sync:
                 res.score.block_until_ready()
                 t2 = time.perf_counter()
@@ -377,20 +441,35 @@ class AlignmentSession:
             st.bytes_out += full.nbytes
         ticket._scores[wave.rows] = out
         ticket._steps += steps
+        if ticket._meet is not None:
+            r = wave.res
+            nr = len(wave.rows)
+            ticket._meet[wave.rows] = np.stack(
+                [np.asarray(r.meet_state)[:nr], np.asarray(r.meet_a)[:nr],
+                 np.asarray(r.meet_b)[:nr], np.asarray(r.meet_k)[:nr],
+                 np.asarray(r.meet_h)[:nr], np.asarray(r.meet_safe)[:nr]],
+                axis=1).astype(np.int32)
+            n_unmet = int((out < 0).sum())
+            for st in (ticket.stats, self.stats):
+                st.n_meet_unmet += n_unmet
         if ticket._cigars is not None:
             t3 = time.perf_counter()
             ops = cigar_mod.traceback_result(
                 wave.res, ticket.pen, pattern=wave.pc, text=wave.tc,
-                plen=wave.plc, tlen=wave.tlc, k_max=wave.k_max)
+                plen=wave.plc, tlen=wave.tlc, k_max=wave.k_max,
+                begin_state=ticket.states[0], end_state=ticket.states[1])
             dt = time.perf_counter() - t3
+            nbytes = cigar_mod.trace_nbytes(wave.res)
             for st in (ticket.stats, self.stats):
                 st.t_gather += dt
-                st.bytes_out += cigar_mod.trace_nbytes(wave.res)
+                st.bytes_out += nbytes
+                st.peak_trace_bytes = max(st.peak_trace_bytes, nbytes)
             for j, orig in enumerate(wave.rows):
                 ticket._cigars[int(orig)] = ops[j]
 
         eng = self.engine
-        optimistic = eng.edit_frac is not None and eng._s_max is None
+        optimistic = (eng.edit_frac is not None and eng._s_max is None
+                      and ticket._s_cap is None)
         settled = len(wave.rows)     # rows this wave resolved for good
         if wave.recovery:
             n_rec = int((out >= 0).sum())
@@ -458,7 +537,14 @@ class AlignmentSession:
                                       approximate=not ticket.heur.exact)
         ticket._p = ticket._t = ticket._plen = ticket._tlen = None
         ticket._done = True
-        self._completed.append(ticket)
+        if ticket.internal:
+            # BiWFA sub-problem: hand the result to the driver (which may
+            # re-enter submit_packed — the lock is re-entrant) instead of
+            # surfacing through poll()/as_completed()
+            if ticket._on_done is not None:
+                ticket._on_done(ticket)
+        else:
+            self._completed.append(ticket)
 
     def _flush_recovery(self, ticket: Optional[Ticket] = None) -> None:
         """Re-run queued overflow pairs with exact worst-case bounds."""
@@ -603,10 +689,12 @@ class AlignmentSession:
             self._step_timed(deadline)
 
     def results(self) -> Iterator[EngineResult]:
-        """Yield each submit's :class:`EngineResult` in submission order."""
+        """Yield each submit's :class:`EngineResult` in submission order
+        (internal BiWFA sub-tickets excluded)."""
         i = 0
         while i < len(self._tickets):
-            yield self._tickets[i].result()
+            if not self._tickets[i].internal:
+                yield self._tickets[i].result()
             i += 1
 
     def drain(self) -> SessionStats:
@@ -623,7 +711,7 @@ def run_streamed(engine: AlignmentEngine, p: np.ndarray, plen: np.ndarray,
                  t: np.ndarray, tlen: np.ndarray, *, submit_pairs: int,
                  max_inflight_waves: int = 4,
                  output: Optional[str] = None, penalties=None,
-                 heuristic=None):
+                 heuristic=None, trace_variant: Optional[str] = None):
     """Stream one packed batch through a fresh session in ``submit_pairs``
     chunks with out-of-order gather
     -> (scores, cigars-or-None, SessionStats, wall_seconds).
@@ -647,7 +735,8 @@ def run_streamed(engine: AlignmentEngine, p: np.ndarray, plen: np.ndarray,
                                         t[lo:hi], tlen[lo:hi],
                                         output=out_mode,
                                         penalties=penalties,
-                                        heuristic=heuristic)
+                                        heuristic=heuristic,
+                                        trace_variant=trace_variant)
             offset[ticket.index] = lo
         for ticket in sess.as_completed():
             lo = offset[ticket.index]

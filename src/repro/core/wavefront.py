@@ -98,6 +98,25 @@ def n_trace_words(s_max: int) -> int:
     return (int(s_max) + TRACE_CELLS_PER_WORD) // TRACE_CELLS_PER_WORD
 
 
+# Boundary states for sub-alignments (BiWFA recursion, ``repro.biwfa``).
+# ``begin_state="I"`` means an insertion gap is already open when the
+# alignment starts (continuing it pays only ``e`` per base, no open);
+# ``end_state="I"`` means the alignment must end inside an insertion run
+# (its cost is the I-matrix value: the final run's open IS charged).
+# ``"M"`` on either side is the ordinary full-alignment boundary.
+STATES = ("M", "I", "D")
+
+
+def _check_states(model, begin_state: str, end_state: str) -> None:
+    if begin_state not in STATES or end_state not in STATES:
+        raise ValueError(f"boundary states must be one of {STATES}; got "
+                         f"({begin_state!r}, {end_state!r})")
+    if model.kind != "affine" and (begin_state != "M" or end_state != "M"):
+        raise ValueError(
+            "gap-linear/edit models have no I/D states; boundary-state "
+            "sub-alignments need a gap-affine penalty model")
+
+
 def _resolve(pen, heur):
     """Normalize (pen, heur) to (PenaltyModel, WavefrontHeuristic)."""
     return scoring.as_model(pen), scoring.as_heuristic(heur)
@@ -211,7 +230,7 @@ def _prune_step(heur, plen, tlen, ks, *fronts):
 
 
 def _next_affine(model, read_m, pattern, text, plen, tlen, ks,
-                 read_i, read_d, with_codes=False):
+                 read_i, read_d, with_codes=False, with_pre=False):
     """One gap-affine step: (M_s, I_s, D_s) from history accessors.
 
     ``read_m/read_i/read_d(delta)`` return the wavefront at score
@@ -250,6 +269,10 @@ def _next_affine(model, read_m, pattern, text, plen, tlen, ks,
 
     M_pre = jnp.maximum(jnp.maximum(X_new, I_new), D_new)
     M_new = _extend(M_pre, pattern, text, plen, tlen, ks)
+    if with_pre:
+        # pre-extension M wanted (bidir meet): the split-safety interval
+        # needs both endpoints of each cell's free-match extension run.
+        return M_new, I_new, D_new, M_pre
     if not with_codes:
         return M_new, I_new, D_new
     # Any candidate achieving the max is a valid optimal predecessor; the
@@ -272,7 +295,7 @@ def _next_affine(model, read_m, pattern, text, plen, tlen, ks,
 
 
 def _next_linear(model, read_m, pattern, text, plen, tlen, ks,
-                 with_codes=False):
+                 with_codes=False, with_pre=False):
     """One gap-linear step: M_s from the single M-history accessor.
 
     The one-matrix recurrence (module doc): gaps open and extend at the
@@ -301,6 +324,8 @@ def _next_linear(model, read_m, pattern, text, plen, tlen, ks,
 
     M_pre = jnp.maximum(jnp.maximum(X_new, I_new), D_new)
     M_new = _extend(M_pre, pattern, text, plen, tlen, ks)
+    if with_pre:
+        return M_new, M_pre
     if not with_codes:
         return M_new
     code_m = jnp.where(
@@ -332,18 +357,27 @@ def _prep(pattern, text, plen, tlen):
 
 
 @functools.partial(jax.jit, static_argnames=("pen", "s_max", "k_max",
-                                             "keep_history", "heur"))
+                                             "keep_history", "heur",
+                                             "begin_state", "end_state"))
 def wfa_forward(pattern, text, plen, tlen, *, pen, s_max: int,
                 k_max: int, keep_history: bool = True,
-                heur=None) -> WFAResult:
+                heur=None, begin_state: str = "M",
+                end_state: str = "M") -> WFAResult:
     """Full-history batched WFA.
 
     pattern/text: [B, Lp]/[B, Lt] integer codes (padding values arbitrary —
     bounds masking never reads past plen/tlen).  Returns per-pair cost and
     the wavefront history for traceback (M/I/D for affine models, M only
     for linear ones).
+
+    ``begin_state``/``end_state`` select boundary states for BiWFA
+    sub-alignments (affine only): begin ``"I"``/``"D"`` seeds the gap
+    front at the origin with an already-open gap (continuation pays only
+    ``e``); end ``"I"``/``"D"`` terminates on the gap front reaching the
+    final cell (the alignment must end mid-gap).
     """
     model, heur = _resolve(pen, heur)
+    _check_states(model, begin_state, end_state)
     pattern, text, plen, tlen = _prep(pattern, text, plen, tlen)
     B = pattern.shape[0]
     K = 2 * k_max + 1
@@ -355,12 +389,22 @@ def wfa_forward(pattern, text, plen, tlen, *, pen, s_max: int,
     i_hist = jnp.full(hist_shape, NEG, jnp.int32) if affine else None
     d_hist = jnp.full(hist_shape, NEG, jnp.int32) if affine else None
 
-    # s = 0: M_0[k=0] = LCP(p, t); I/D invalid.
-    M0 = jnp.full((B, K), NEG, jnp.int32).at[:, k_max].set(0)
-    M0 = _extend(M0, pattern, text, plen, tlen, ks)
+    # s = 0: M_0[k=0] = LCP(p, t); I/D invalid unless an open gap is
+    # inherited from the caller (begin-state seeding).
+    seed = jnp.full((B, K), NEG, jnp.int32).at[:, k_max].set(0)
+    M0 = _extend(seed, pattern, text, plen, tlen, ks)
     m_hist = m_hist.at[0].set(M0)
+    if affine:
+        I0 = seed if begin_state == "I" else jnp.full((B, K), NEG, jnp.int32)
+        D0 = seed if begin_state == "D" else jnp.full((B, K), NEG, jnp.int32)
+        i_hist = i_hist.at[0].set(I0)
+        d_hist = d_hist.at[0].set(D0)
 
-    score0 = jnp.where(_target_reached(M0, plen, tlen, k_max), 0, -1)
+    def end_front(M, I, D):
+        return {"M": M, "I": I, "D": D}[end_state]
+
+    front0 = M0 if not affine else end_front(M0, I0, D0)
+    score0 = jnp.where(_target_reached(front0, plen, tlen, k_max), 0, -1)
 
     def read(hist, s, delta):
         row = lax.dynamic_index_in_dim(hist, jnp.maximum(s - delta, 0),
@@ -374,7 +418,8 @@ def wfa_forward(pattern, text, plen, tlen, *, pen, s_max: int,
                 model, lambda d: read(m_hist, s, d), pattern, text,
                 plen, tlen, ks, lambda d: read(i_hist, s, d),
                 lambda d: read(d_hist, s, d))
-            reached = _target_reached(M_new, plen, tlen, k_max)
+            reached = _target_reached(end_front(M_new, I_new, D_new),
+                                      plen, tlen, k_max)
             score = jnp.where((score < 0) & reached, s, score)
             M_new, I_new, D_new = _prune_step(heur, plen, tlen, ks,
                                               M_new, I_new, D_new)
@@ -492,9 +537,12 @@ def wfa_scores(pattern, text, plen, tlen, *, pen, s_max: int,
     return WFAResult(score, None, None, None, s)
 
 
-@functools.partial(jax.jit, static_argnames=("pen", "s_max", "k_max", "heur"))
+@functools.partial(jax.jit, static_argnames=("pen", "s_max", "k_max", "heur",
+                                             "begin_state", "end_state"))
 def wfa_scores_packed(pattern, text, plen, tlen, *, pen,
-                      s_max: int, k_max: int, heur=None) -> WFAResult:
+                      s_max: int, k_max: int, heur=None,
+                      begin_state: str = "M",
+                      end_state: str = "M") -> WFAResult:
     """Ring-buffer batched WFA *with* a packed backtrace.
 
     Identical wavefront recurrence and rolling-window memory discipline as
@@ -503,8 +551,13 @@ def wfa_scores_packed(pattern, text, plen, tlen, *, pen,
     score loop) — three planes for affine models, one for linear.
     ``core.cigar`` decodes them into exact CIGARs without ever
     materializing the full offset history.
+
+    ``begin_state``/``end_state`` as in :func:`wfa_forward` (BiWFA
+    sub-alignment boundaries, affine only).  The gap seed cell carries no
+    provenance code; the traceback walker terminates on it directly.
     """
     model, heur = _resolve(pen, heur)
+    _check_states(model, begin_state, end_state)
     pattern, text, plen, tlen = _prep(pattern, text, plen, tlen)
     B = pattern.shape[0]
     K = 2 * k_max + 1
@@ -519,10 +572,18 @@ def wfa_scores_packed(pattern, text, plen, tlen, *, pen,
     m_ring = jnp.full((W, B, K), NEG, jnp.int32) + taint
     m_bt = jnp.zeros((NW, B, K), jnp.int32) + taint
 
-    M0 = jnp.full((B, K), NEG, jnp.int32).at[:, k_max].set(0)
-    M0 = _extend(M0, pattern, text, plen, tlen, ks)
+    seed0 = jnp.full((B, K), NEG, jnp.int32).at[:, k_max].set(0)
+    M0 = _extend(seed0, pattern, text, plen, tlen, ks)
     m_ring = m_ring.at[0].set(M0)
-    score0 = jnp.where(_target_reached(M0, plen, tlen, k_max), 0, -1)
+    negBK = jnp.full((B, K), NEG, jnp.int32)
+    I0 = seed0 if (affine and begin_state == "I") else negBK
+    D0 = seed0 if (affine and begin_state == "D") else negBK
+
+    def end_front(M, I, D):
+        return {"M": M, "I": I, "D": D}[end_state]
+
+    front0 = M0 if not affine else end_front(M0, I0, D0)
+    score0 = jnp.where(_target_reached(front0, plen, tlen, k_max), 0, -1)
 
     def read(ring, s, delta):
         row = lax.dynamic_index_in_dim(ring, lax.rem(jnp.maximum(s - delta, 0),
@@ -538,8 +599,8 @@ def wfa_scores_packed(pattern, text, plen, tlen, *, pen,
             bt, word | jnp.left_shift(code, off), w, axis=0)
 
     if affine:
-        i_ring = jnp.full((W, B, K), NEG, jnp.int32) + taint
-        d_ring = jnp.full((W, B, K), NEG, jnp.int32) + taint
+        i_ring = (jnp.full((W, B, K), NEG, jnp.int32) + taint).at[0].set(I0)
+        d_ring = (jnp.full((W, B, K), NEG, jnp.int32) + taint).at[0].set(D0)
         i_bt = jnp.zeros((NW, B, K), jnp.int32) + taint
         d_bt = jnp.zeros((NW, B, K), jnp.int32) + taint
 
@@ -549,7 +610,8 @@ def wfa_scores_packed(pattern, text, plen, tlen, *, pen,
                 model, lambda d: read(m_ring, s, d), pattern, text,
                 plen, tlen, ks, lambda d: read(i_ring, s, d),
                 lambda d: read(d_ring, s, d), with_codes=True)
-            reached = _target_reached(M_new, plen, tlen, k_max)
+            reached = _target_reached(end_front(M_new, I_new, D_new),
+                                      plen, tlen, k_max)
             score = jnp.where((score < 0) & reached, s, score)
             M_new, I_new, D_new = _prune_step(heur, plen, tlen, ks,
                                               M_new, I_new, D_new)
@@ -591,6 +653,244 @@ def wfa_scores_packed(pattern, text, plen, tlen, *, pen,
     s, score, _, m_bt = lax.while_loop(
         cond, body, (jnp.int32(1), score0, m_ring, m_bt))
     return WFAResult(score, None, None, None, s, m_bt, None, None)
+
+
+class BidirMeetResult(NamedTuple):
+    """Per-pair breakpoint from the meet-in-the-middle solver.
+
+    ``score`` mirrors :class:`WFAResult` (``starget`` where a breakpoint
+    was found, ``-1`` where the fronts never joined) so the session's
+    retirement path can block on / store it unchanged.
+    """
+    score: jax.Array       # [B] int32: starget if met, -1 if not
+    n_steps: jax.Array     # [] int32 lockstep trips taken (telemetry)
+    meet_state: jax.Array  # [B] 0 = M/M, 1 = I/I, 2 = D/D; -1 unmet
+    meet_a: jax.Array      # [B] prefix-side cost at the breakpoint (the
+                           #     forward cost convention; the suffix side is
+                           #     always starget - meet_a)
+    meet_b: jax.Array      # [B] detector-internal reverse-side cost (gap
+                           #     joins re-charge the open; end-state I/D
+                           #     shifts by -o) — use starget - meet_a for
+                           #     the suffix child's cost
+    meet_k: jax.Array      # [B] forward diagonal k = h - v of the breakpoint
+    meet_h: jax.Array      # [B] text offset h of the breakpoint
+    meet_safe: jax.Array   # [B] 1 = provably cost-exact split, 0 = accepted
+                           #     opportunistically (recurse.py re-verifies)
+
+
+def _reverse_rows(codes, lens):
+    """Per-row suffix reversal: out[b, i] = codes[b, lens[b]-1-i], 0-padded.
+
+    Padding value is irrelevant downstream — every solver masks reads
+    beyond plen/tlen."""
+    L = codes.shape[1]
+    idx = lens[:, None] - 1 - jnp.arange(L, dtype=jnp.int32)[None, :]
+    ok = idx >= 0
+    g = jnp.take_along_axis(codes, jnp.clip(idx, 0, L - 1), axis=1)
+    return jnp.where(ok, g, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("pen", "s_max", "k_max", "heur",
+                                             "begin_state", "end_state"))
+def wfa_bidir_meet(pattern, text, plen, tlen, starget, *, pen, s_max: int,
+                   k_max: int, heur=None, begin_state: str = "M",
+                   end_state: str = "M") -> BidirMeetResult:
+    """Meet-in-the-middle BiWFA breakpoint solver (O(s) memory).
+
+    Runs a forward wavefront on ``(p, t)`` and a reverse wavefront on the
+    reversed pair in lockstep score steps, keeping only rolling windows of
+    depth ``Wd = max(window, 2*max(x, o+e) + 2)`` — never a full history.
+    ``starget`` ([B] int32) is each pair's known optimal cost (from a
+    prior score-only pass); the solver looks for a *breakpoint*: a cell
+    reached by the forward front at cost ``a`` and by the reverse front at
+    cost ``b`` with
+
+    * ``a + b == starget``          meeting in match/mismatch state (M/M)
+    * ``a + b == starget + o``      meeting inside one gap run (I/I, D/D)
+      — the gap open is charged by both halves, so the sum overshoots by
+      exactly ``o``; the suffix half's true cost is ``b - o``.
+
+    Forward diagonal ``k`` and reverse diagonal ``k' = (m-n) - k`` address
+    the same cell; coverage ``h_f + h_r == m`` on complementary diagonals
+    joins both coordinates at once (the pattern side follows from the
+    diagonal identity).  Per step ``s`` the candidate cost splits
+    ``(s, T-s)`` and ``(T-s, s)`` are examined, so every split with
+    ``|a - b| < Wd`` is eventually checked — and along an optimal path
+    some operation boundary (or in-gap position) always lands within
+    ``max(x, o+e)`` of the half-cost point, which the window covers.
+
+    An M/M candidate is *provably exact* when the split offset can be
+    placed on both furthest-reaching match runs (pre-extension forward
+    value ``<= m - h_rev``): then prefix cost ``a`` and suffix cost ``b``
+    are simultaneously realized and ``a + b = starget`` forces both halves
+    optimal.  Gap joins are exact at exact coverage.  Remaining coverage
+    overshoots are accepted opportunistically with ``meet_safe = 0`` —
+    ``repro.biwfa.recurse`` re-scores every stitched CIGAR and falls back
+    to the packed-trace path on any mismatch, so end-to-end exactness
+    never rests on the detector.
+
+    With a non-exact heuristic both fronts prune identically to the
+    forward solvers and breakpoints become approximate (or unmet);
+    unresolved pairs surface as ``score = -1``.
+    """
+    model, heur = _resolve(pen, heur)
+    _check_states(model, begin_state, end_state)
+    pattern, text, plen, tlen = _prep(pattern, text, plen, tlen)
+    starget = jnp.asarray(starget, jnp.int32)
+    B = pattern.shape[0]
+    K = 2 * k_max + 1
+    affine = model.kind == "affine"
+    o = model.o if affine else 0
+    # end_state "I"/"D" segments charge the trailing run's gap open in the
+    # forward cost convention, but the reverse rings seed that run at 0 (it
+    # is the reversed problem's *leading* gap), so every reverse cost sits
+    # exactly o below the forward-convention suffix cost — shift the
+    # detection target once instead of special-casing every class
+    oend = o if end_state != "M" else 0
+    maxop = max(model.x, model.o + model.e) if affine \
+        else max(model.x, model.e)
+    Wd = max(model.window, 2 * maxop + 2)
+    ks = jnp.arange(K, dtype=jnp.int32) - k_max
+    bidx = jnp.arange(B)
+
+    pr = _reverse_rows(pattern, plen)
+    tr = _reverse_rows(text, tlen)
+
+    seed = jnp.full((B, K), NEG, jnp.int32).at[:, k_max].set(0)
+    negBK = jnp.full((B, K), NEG, jnp.int32)
+    M0f = _extend(seed, pattern, text, plen, tlen, ks)
+    M0r = _extend(seed, pr, tr, plen, tlen, ks)
+
+    def ring0(row0):
+        return jnp.full((Wd, B, K), NEG, jnp.int32).at[0].set(row0)
+
+    fm, fmp, rm = ring0(M0f), ring0(seed), ring0(M0r)
+    if affine:
+        fi = ring0(seed if begin_state == "I" else negBK)
+        fd = ring0(seed if begin_state == "D" else negBK)
+        ri = ring0(seed if end_state == "I" else negBK)
+        rd = ring0(seed if end_state == "D" else negBK)
+
+    def read(ring, s, delta):
+        row = lax.dynamic_index_in_dim(
+            ring, lax.rem(jnp.maximum(s - delta, 0), Wd), keepdims=False)
+        return jnp.where(s >= delta, row, NEG)
+
+    # complement-diagonal gather: rev K-index addressing the same cell
+    jj = jnp.arange(K, dtype=jnp.int32)[None, :]
+    jprime = (tlen - plen)[:, None] + 2 * k_max - jj
+    jpok = (jprime >= 0) & (jprime < K)
+    jpc = jnp.clip(jprime, 0, K - 1)
+
+    def comp(arr):
+        return jnp.where(jpok, jnp.take_along_axis(arr, jpc, axis=1), NEG)
+
+    m2 = tlen[:, None]
+    low = jnp.maximum(ks[None, :], 0)
+
+    def body(carry):
+        s, met, jst, ja, jb, jk, jh, jsf, rings = carry
+        if affine:
+            fm, fmp, fi, fd, rm, ri, rd = rings
+            Mf, If, Df, Mfp = _next_affine(
+                model, lambda d: read(fm, s, d), pattern, text, plen, tlen,
+                ks, lambda d: read(fi, s, d), lambda d: read(fd, s, d),
+                with_pre=True)
+            Mr, Ir, Dr = _next_affine(
+                model, lambda d: read(rm, s, d), pr, tr, plen, tlen,
+                ks, lambda d: read(ri, s, d), lambda d: read(rd, s, d))
+            Mf, If, Df, Mfp = _prune_step(heur, plen, tlen, ks,
+                                          Mf, If, Df, Mfp)
+            Mr, Ir, Dr = _prune_step(heur, plen, tlen, ks, Mr, Ir, Dr)
+        else:
+            fm, fmp, rm = rings
+            Mf, Mfp = _next_linear(model, lambda d: read(fm, s, d),
+                                   pattern, text, plen, tlen, ks,
+                                   with_pre=True)
+            Mr = _next_linear(model, lambda d: read(rm, s, d),
+                              pr, tr, plen, tlen, ks)
+            Mf, Mfp = _prune_step(heur, plen, tlen, ks, Mf, Mfp)
+            Mr = _prune_step(heur, plen, tlen, ks, Mr)
+        row = lax.rem(s, Wd)
+
+        def put(ring, w):
+            return lax.dynamic_update_index_in_dim(ring, w, row, axis=0)
+
+        fm, fmp, rm = put(fm, Mf), put(fmp, Mfp), put(rm, Mr)
+        if affine:
+            fi, fd = put(fi, If), put(fd, Df)
+            ri, rd = put(ri, Ir), put(rd, Dr)
+            rings = (fm, fmp, fi, fd, rm, ri, rd)
+        else:
+            rings = (fm, fmp, rm)
+
+        def at(ring, c):
+            ok = (c >= 0) & (c <= s) & (c > s - Wd)
+            sel = ring[lax.rem(jnp.maximum(c, 0), Wd), bidx]
+            return jnp.where(ok[:, None], sel, NEG)
+
+        def orient(a_m, a_g, b_m, b_g):
+            """Candidate classes for prefix costs a_*, suffix costs b_*.
+
+            Returns {name: (mask2d, state, a, b, h_plane, safe)} — a_m/b_m
+            sum to starget (M/M), a_g/b_g to starget + o (gap joins)."""
+            fa_m, fa_mp = at(fm, a_m), at(fmp, a_m)
+            rb_m = comp(at(rm, b_m))
+            vmm = (fa_m > _VALID_THRESH) & (rb_m > _VALID_THRESH)
+            cov = vmm & (fa_m + rb_m >= m2)
+            h_mm = jnp.clip(m2 - rb_m, low, jnp.maximum(fa_m, low))
+            out = {"mm_safe": (cov & (fa_mp + rb_m <= m2), 0, a_m, b_m,
+                               h_mm, 1),
+                   "mm_cov": (cov, 0, a_m, b_m, h_mm, 0)}
+            if affine:
+                fa_i, rb_i = at(fi, a_g), comp(at(ri, b_g))
+                fa_d, rb_d = at(fd, a_g), comp(at(rd, b_g))
+                vii = (fa_i > _VALID_THRESH) & (rb_i > _VALID_THRESH)
+                vdd = (fa_d > _VALID_THRESH) & (rb_d > _VALID_THRESH)
+                out["ii0"] = (vii & (fa_i + rb_i == m2), 1, a_g, b_g,
+                              fa_i, 1)
+                out["dd0"] = (vdd & (fa_d + rb_d == m2), 2, a_g, b_g,
+                              fa_d, 1)
+                out["ii_cov"] = (vii & (fa_i + rb_i >= m2), 1, a_g, b_g,
+                                 fa_i, 0)
+                out["dd_cov"] = (vdd & (fa_d + rb_d >= m2), 2, a_g, b_g,
+                                 fa_d, 0)
+            return out
+
+        sb = jnp.broadcast_to(s, (B,)).astype(jnp.int32)
+        st2 = starget - oend
+        A = orient(sb, sb, st2 - s, st2 + o - s)
+        Bo = orient(st2 - s, st2 + o - s, sb, sb)
+        names = ["mm_safe"] + (["ii0", "dd0"] if affine else []) \
+            + ["mm_cov"] + (["ii_cov", "dd_cov"] if affine else [])
+        for name in names:
+            for side in (A, Bo):
+                mask2d, stc, a_arr, b_arr, hplane, sf = side[name]
+                anyk = jnp.any(mask2d, axis=1)
+                kidx = jnp.argmax(mask2d, axis=1).astype(jnp.int32)
+                hsel = jnp.take_along_axis(hplane, kidx[:, None],
+                                           axis=1)[:, 0]
+                take = (~met) & anyk
+                met = met | take
+                jst = jnp.where(take, stc, jst)
+                ja = jnp.where(take, a_arr, ja)
+                jb = jnp.where(take, b_arr, jb)
+                jk = jnp.where(take, kidx - k_max, jk)
+                jh = jnp.where(take, hsel, jh)
+                jsf = jnp.where(take, sf, jsf)
+        return s + 1, met, jst, ja, jb, jk, jh, jsf, rings
+
+    def cond(carry):
+        s, met, *_ = carry
+        return (s <= s_max) & ~jnp.all(met)
+
+    z = jnp.zeros((B,), jnp.int32)
+    rings = (fm, fmp, fi, fd, rm, ri, rd) if affine else (fm, fmp, rm)
+    s, met, jst, ja, jb, jk, jh, jsf, _ = lax.while_loop(
+        cond, body, (jnp.int32(1), jnp.zeros((B,), bool), z - 1, z, z, z,
+                     z, z, rings))
+    return BidirMeetResult(jnp.where(met, starget, -1), s,
+                           jnp.where(met, jst, -1), ja, jb, jk, jh, jsf)
 
 
 def wfa_trace_shardmap(pattern, text, plen, tlen, *, pen,

@@ -144,43 +144,80 @@ class SampledRead:
 
     ``pos`` is the 0-based start of the sampled window on the *forward*
     reference strand; ``strand`` is 1 when the read is the reverse
-    complement of that window (mutations applied after the flip).
+    complement of that window (mutations applied after the flip);
+    ``win_len`` is the window's length on the reference (== the read
+    length before mutation — per-read under ``length_dist``).
     """
     read: np.ndarray            # ASCII uint8 sequence as a mapper sees it
     pos: int
     strand: int                 # 0 = forward, 1 = reverse complement
     n_edits: int
+    win_len: int = -1
+
+
+# named error mixes: (sub_prob, ins_prob); deletions take the remainder.
+# "ont" is the nanopore-like profile — indel-dominated (~40/30/30
+# sub/ins/del), vs the paper's short-read default (~60/20/20).
+ERROR_PROFILES = {"ont": (0.4, 0.3)}
 
 
 def sample_from_reference(ref, n_reads: int, *, read_len: int = 100,
                           edit_frac: float = 0.02, rc_frac: float = 0.5,
                           sub_prob: float = 0.6, ins_prob: float = 0.2,
+                          length_dist: str | None = None,
+                          length_sigma: float = 0.35,
+                          error_profile: str | None = None,
                           seed: int = 0):
     """Draw reads from a reference at known positions/strands -> ground truth.
 
     The mapping-recall oracle: each read is a uniform window of ``ref``
     (ASCII uint8 array or str), reverse-complemented with probability
-    ``rc_frac``, then mutated with at most ``ceil(edit_frac * read_len)``
+    ``rc_frac``, then mutated with at most ``ceil(edit_frac * win_len)``
     edits under the paper's mutation model (same substitution/indel mix as
     :func:`generate_pairs`).  Deterministic per seed, so recall/precision
     numbers are reproducible.  Returns a list of :class:`SampledRead`.
+
+    Long-read extensions (the BiWFA workload):
+
+    * ``length_dist="lognormal"`` draws each window length from an
+      ONT-like lognormal with median ``read_len`` and shape
+      ``length_sigma`` (clamped to ``[16, len(ref)]``) instead of the
+      fixed short-read length;
+    * ``error_profile="ont"`` switches the edit mix to the
+      indel-dominated nanopore profile (~40/30/30 sub/ins/del),
+      overriding ``sub_prob``/``ins_prob``.
     """
     from repro.data.dna import as_ascii, revcomp
     ref = as_ascii(ref)
     if len(ref) < read_len:
         raise ValueError(f"reference ({len(ref)}bp) shorter than "
                          f"read_len ({read_len})")
+    if length_dist not in (None, "lognormal"):
+        raise ValueError(f"unknown length_dist: {length_dist!r}")
+    if error_profile is not None:
+        try:
+            sub_prob, ins_prob = ERROR_PROFILES[error_profile]
+        except KeyError:
+            raise ValueError(f"unknown error_profile: {error_profile!r} "
+                             f"(have {sorted(ERROR_PROFILES)})") from None
     rng = np.random.default_rng(seed)
-    n_err = int(np.ceil(edit_frac * read_len))
     out = []
     for _ in range(int(n_reads)):
-        pos = int(rng.integers(0, len(ref) - read_len + 1))
+        if length_dist == "lognormal":
+            wlen = int(round(read_len * np.exp(
+                rng.normal(0.0, length_sigma))))
+            wlen = max(16, min(wlen, len(ref)))
+        else:
+            wlen = read_len
+        pos = int(rng.integers(0, len(ref) - wlen + 1))
         strand = int(rng.random() < rc_frac)
-        window = ref[pos: pos + read_len]
+        window = ref[pos: pos + wlen]
         if strand:
             window = revcomp(window)
+        n_err = int(np.ceil(edit_frac * wlen))
         n_edits = int(rng.integers(0, n_err + 1))
         read = _mutate(rng, window, n_edits, sub_prob, ins_prob)
         out.append(SampledRead(read=read.astype(np.uint8), pos=pos,
-                               strand=strand, n_edits=n_edits))
+                               strand=strand, n_edits=n_edits,
+                               win_len=wlen))
     return out

@@ -18,7 +18,10 @@ follow-up framework paper, arXiv:2208.01243):
 * ``score`` — costs only (the throughput story);
 * ``cigar`` — full alignments via each backend's trace variant (packed
   backtrace on ``ring``/``kernel``/``shardmap``); reports identity stats
-  and the traceback's share of wall clock;
+  and the traceback's share of wall clock; ``--trace bidir`` switches the
+  traceback to the meet-in-the-middle BiWFA recursion (``repro.biwfa``) —
+  exact CIGARs in O(s) trace memory, the right choice for noisy long
+  reads (pair it with ``--heuristic zdrop``);
 * ``sam``  — additionally writes SAM-style records (``--sam-out``, default
   stdout): the mutated mate (*text*) is the read, the sampled reference
   read (*pattern*) is the reference, so insert/delete op codes map onto
@@ -117,6 +120,12 @@ def main(argv=None):
                     default="score",
                     help="scores only (default), full CIGAR alignments, "
                          "or SAM-style records")
+    ap.add_argument("--trace", choices=("packed", "bidir"),
+                    default="packed",
+                    help="traceback variant for --output cigar/sam: "
+                         "'packed' (2-bit backtrace, O(s^2) trace memory) "
+                         "or 'bidir' (BiWFA meet-in-the-middle recursion, "
+                         "O(s) trace memory — use for long reads)")
     ap.add_argument("--sam-out", default="-", metavar="PATH",
                     help="where --output sam writes records (default "
                          "stdout)")
@@ -176,7 +185,8 @@ def main(argv=None):
                              edit_frac=args.edit_frac, heuristic=heur,
                              chunk_pairs=args.chunk_pairs, mesh=mesh,
                              bucket_by_length=not args.no_bucket,
-                             adaptive=not args.no_adaptive)
+                             adaptive=not args.no_adaptive,
+                             trace_variant=args.trace)
     submit_pairs = args.submit_pairs or args.chunk_pairs
     # warmup with the identical batch so the measured run is steady-state
     # serving (all executables cached, 0 retraces); a submit-sized chunk and
@@ -212,7 +222,9 @@ def main(argv=None):
         if mode == "stream":
             extra = (f" submits={st.n_submits} waves={st.n_waves} "
                      f"inflight<={st.max_inflight} (peak {st.peak_inflight})")
-        log(f"[align] {mode}: backend={args.backend} output={out_mode} "
+        trace = (f" trace={args.trace}" if out_mode == "cigar" else "")
+        log(f"[align] {mode}: backend={args.backend} output={out_mode}"
+              f"{trace} "
               f"workers={pim.n_workers} buckets={st.n_buckets} "
               f"cache={st.cache_hits}h/{st.cache_misses}m "
               f"retraces={st.n_traces}{extra}")

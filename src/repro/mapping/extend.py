@@ -151,6 +151,10 @@ class ReadMapper:
     batch_reads : reads per session submit (one ticket's worth).
     penalties / heuristic : per-submit scoring seam, forwarded to every
         ``submit()`` (PR-4 semantics; ``None`` = engine defaults).
+    trace_variant : traceback seam, forwarded the same way — pass
+        ``"bidir"`` for long-read extension (ONT/PacBio windows), where
+        the packed backtrace's O(s^2) trace memory is the binding
+        constraint; short-read mapping keeps the default packed path.
     min_chain_score / max_gap : chaining thresholds (``None`` -> ``k``).
     """
 
@@ -159,6 +163,7 @@ class ReadMapper:
                  top_n: int = 2, edit_frac: float = 0.02,
                  extra_pad: int = 1, read_len: int = 100,
                  batch_reads: int = 256, penalties=None, heuristic=None,
+                 trace_variant: Optional[str] = None,
                  min_chain_score: Optional[float] = None,
                  max_gap: int = 200, backend: str = "ring"):
         if top_n < 1:
@@ -170,6 +175,7 @@ class ReadMapper:
         self.batch_reads = int(batch_reads)
         self.penalties = penalties
         self.heuristic = heuristic
+        self.trace_variant = trace_variant
         self.max_gap = int(max_gap)
         self.min_chain_score = (float(index.k) if min_chain_score is None
                                 else float(min_chain_score))
@@ -221,7 +227,9 @@ class ReadMapper:
                 if metas:
                     sess.submit(pats, texts, output="cigar",
                                 penalties=self.penalties,
-                                heuristic=self.heuristic, meta=metas)
+                                heuristic=self.heuristic,
+                                trace_variant=self.trace_variant,
+                                meta=metas)
                     stats.n_tickets += 1
                 pats, texts, metas = [], [], []
                 reads_in_batch = 0

@@ -17,6 +17,7 @@ QUICK_MODULES = {
     "test_mapping",
     "test_serving",
     "test_wfa_property",
+    "test_biwfa",
     "test_analysis",
     "test_fault_dist",
 }
