@@ -6,12 +6,45 @@ are the dry-run roofline terms); throughput *ratios* between configurations
 in the paper's Fig. 1 which is itself a ratio story."""
 from __future__ import annotations
 
+import glob
+import json
+import sys
 import time
 from typing import Callable, List, Tuple
 
 import jax
 
 Row = Tuple[str, float, str]   # (name, us_per_call, derived)
+
+
+def rows_from_json(pattern: str, prefix: str) -> List[Row]:
+    """Rows starting with ``prefix`` from the newest snapshot matching
+    ``pattern`` (a glob over ``benchmarks.run --json`` outputs).
+
+    CI gates call this instead of re-running a suite, and it fails loudly
+    (``SystemExit(1)``) when no snapshot matches **or the newest snapshot
+    carries zero rows for the suite** — a gate handed an empty row list
+    would otherwise pass vacuously (or die with a bare ``KeyError``)
+    whenever the smoke step quietly dropped the suite from its ``--only``
+    list, which is exactly how BENCH_20260808T185519Z.json ended up
+    holding serving rows alone.
+    """
+    paths = sorted(glob.glob(pattern))
+    if not paths:
+        print(f"# no snapshot matches {pattern!r}", file=sys.stderr)
+        raise SystemExit(1)
+    with open(paths[-1]) as f:
+        payload = json.load(f)
+    rows = [(r["name"], r["us_per_call"], r["derived"])
+            for r in payload["rows"] if r["name"].startswith(prefix)]
+    if not rows:
+        print(f"# newest snapshot {paths[-1]} has no {prefix!r} rows — "
+              f"re-run benchmarks.run with that suite in --only before "
+              f"gating", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"# gating on {paths[-1]} ({len(rows)} {prefix.rstrip('/')} rows)",
+          file=sys.stderr)
+    return rows
 
 
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:

@@ -52,8 +52,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,scaling,transfer,"
-                         "cigar,scoring,mapping,serving,longread,wfa_ops,"
-                         "lm")
+                         "cigar,scoring,mapping,serving,longread,kernelgap,"
+                         "wfa_ops,lm")
     ap.add_argument("--pairs", type=int, default=8192)
     ap.add_argument("--json", nargs="?", const="auto", default=None,
                     metavar="PATH",
@@ -100,6 +100,14 @@ def main(argv=None) -> int:
         suites.append(("longread",
                        lambda: longread.run(
                            pairs=min(max(args.pairs // 64, 8), 32))))
+    if want is None or "kernelgap" in want:
+        from benchmarks import kernelgap
+        # interpret-mode kernel runs: keep the batch modest and skip the
+        # (very slow) informational one-hot row in sweeps
+        suites.append(("kernelgap",
+                       lambda: kernelgap.run(
+                           pairs=min(max(args.pairs // 8, 64), 256),
+                           onehot=False)))
     if want is None or "wfa_ops" in want:
         from benchmarks import wfa_ops
         suites.append(("wfa_ops", wfa_ops.run))

@@ -193,19 +193,8 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     from benchmarks.common import emit
     if args.from_json:
-        import glob
-        import json
-        paths = sorted(glob.glob(args.from_json))
-        if not paths:
-            print(f"# no snapshot matches {args.from_json!r}",
-                  file=sys.stderr)
-            return 1
-        with open(paths[-1]) as f:
-            payload = json.load(f)
-        rows = [(r["name"], r["us_per_call"], r["derived"])
-                for r in payload["rows"] if r["name"].startswith("serving/")]
-        print(f"# gating on {paths[-1]} ({len(rows)} serving rows)",
-              file=sys.stderr)
+        from benchmarks.common import rows_from_json
+        rows = rows_from_json(args.from_json, "serving/")
     else:
         rows = run(requests=args.requests,
                    pairs_per_request=args.pairs_per_request,

@@ -106,6 +106,7 @@ class BackendSpec:
     name: str
     fn: Callable[..., wf.WFAResult]
     trace_variant: Optional[Callable[..., wf.WFAResult]] = None
+    meet_variant: Optional[Callable[..., "wf.BidirMeetResult"]] = None
     needs_mesh: bool = False
     donate_args: Tuple[int, ...] = ()
     dispatch: Optional[Callable[..., wf.WFAResult]] = None
@@ -123,6 +124,12 @@ class BackendSpec:
         """Whether the callable serving ``output`` takes ``heur=``."""
         return _accepts_heur(self.fn if output == "score"
                              else self.trace_variant)
+
+    def callables(self) -> Tuple[Callable, ...]:
+        """Every non-None solver callable this backend exposes (used by the
+        engine to validate ``backend_opts`` keys up front)."""
+        return tuple(f for f in (self.fn, self.trace_variant,
+                                 self.meet_variant) if f is not None)
 
     def accepts_states(self) -> bool:
         """Whether the trace variant takes ``begin_state``/``end_state``
@@ -158,6 +165,7 @@ _REGISTRY: Dict[str, BackendSpec] = {}
 
 def register_backend(name: str, fn: Optional[Callable] = None, *,
                      trace_variant: Optional[Callable] = None,
+                     meet_variant: Optional[Callable] = None,
                      supports_cigar: bool = False,
                      needs_mesh: bool = False,
                      donate_args: Tuple[int, ...] = (),
@@ -170,7 +178,10 @@ def register_backend(name: str, fn: Optional[Callable] = None, *,
     for swapping in tuned variants).  ``models`` declares the penalty-model
     recurrence kinds the backend serves (plug-ins default to affine-only;
     pass ``models=("affine", "linear")`` when the backend handles linear
-    models too).  ``supports_cigar=True`` is the deprecated pre-output-mode
+    models too).  ``meet_variant`` optionally replaces the shared jnp
+    BiWFA meet solver (``wf.wfa_bidir_meet`` — same signature and
+    ``BidirMeetResult`` contract) for ``trace_variant="bidir"`` meet
+    waves.  ``supports_cigar=True`` is the deprecated pre-output-mode
     spelling for backends whose ``fn`` itself returns a traceback-capable
     ``WFAResult`` (full history, like the old ``ref``): it makes ``fn``
     double as the trace variant.
@@ -181,6 +192,7 @@ def register_backend(name: str, fn: Optional[Callable] = None, *,
             tv = f
         _REGISTRY[name] = BackendSpec(name=name, fn=f,
                                       trace_variant=tv,
+                                      meet_variant=meet_variant,
                                       needs_mesh=needs_mesh,
                                       donate_args=tuple(donate_args),
                                       dispatch=dispatch,
@@ -240,10 +252,11 @@ def _ref_backend(pattern, text, plen, tlen, *, pen, s_max, k_max, heur=None):
 
 
 def _ring_trace(pattern, text, plen, tlen, *, pen, s_max, k_max, heur=None,
-                begin_state="M", end_state="M"):
+                begin_state="M", end_state="M", band_cap=None):
     return wf.wfa_scores_packed(pattern, text, plen, tlen, pen=pen,
                                 s_max=s_max, k_max=k_max, heur=heur,
-                                begin_state=begin_state, end_state=end_state)
+                                begin_state=begin_state, end_state=end_state,
+                                band_cap=band_cap)
 
 
 # The [B] int32 length buffers are donatable: the [B] int32 score output
@@ -251,38 +264,56 @@ def _ring_trace(pattern, text, plen, tlen, *, pen, s_max, k_max, heur=None,
 @register_backend("ring", donate_args=(2, 3), trace_variant=_ring_trace,
                   models=ALL_MODELS,
                   doc="rolling-window pure-jnp WFA; packed backtrace")
-def _ring_backend(pattern, text, plen, tlen, *, pen, s_max, k_max, heur=None):
+def _ring_backend(pattern, text, plen, tlen, *, pen, s_max, k_max, heur=None,
+                  band_cap=None):
     return wf.wfa_scores(pattern, text, plen, tlen, pen=pen,
-                         s_max=s_max, k_max=k_max, heur=heur)
+                         s_max=s_max, k_max=k_max, heur=heur,
+                         band_cap=band_cap)
 
 
 def _kernel_trace(pattern, text, plen, tlen, *, pen, s_max, k_max,
-                  heur=None):
+                  heur=None, block_pairs=None, gather=None, ext_stride=1,
+                  band_cap=None):
     from repro.kernels.wfa import ops as kops  # lazy: pallas import is heavy
     score, m_bt, i_bt, d_bt = kops.wfa_align_trace(
         pattern, text, plen, tlen, pen=pen, s_max=s_max, k_max=k_max,
-        heur=heur)
+        heur=heur, block_pairs=block_pairs, gather=gather,
+        ext_stride=ext_stride, band_cap=band_cap)
     return wf.WFAResult(score, None, None, None, jnp.int32(s_max),
                         m_bt, i_bt, d_bt)
 
 
+def _kernel_meet(pattern, text, plen, tlen, starget, *, pen, s_max, k_max,
+                 heur=None, begin_state="M", end_state="M",
+                 block_pairs=None):
+    from repro.kernels.wfa import ops as kops  # lazy: pallas import is heavy
+    return kops.wfa_bidir_meet_kernel(
+        pattern, text, plen, tlen, starget, pen=pen, s_max=s_max,
+        k_max=k_max, heur=heur, begin_state=begin_state,
+        end_state=end_state, block_pairs=block_pairs)
+
+
 @register_backend("kernel", donate_args=(2, 3), trace_variant=_kernel_trace,
+                  meet_variant=_kernel_meet,
                   models=ALL_MODELS,
                   doc="Pallas TPU kernel (interpret on CPU); packed "
-                      "backtrace in VMEM")
+                      "backtrace in VMEM; fused in-grid BiWFA meet")
 def _kernel_backend(pattern, text, plen, tlen, *, pen, s_max, k_max,
-                    heur=None):
+                    heur=None, block_pairs=None, gather=None, ext_stride=1,
+                    band_cap=None):
     from repro.kernels.wfa import ops as kops  # lazy: pallas import is heavy
     score = kops.wfa_align(pattern, text, plen, tlen, pen=pen,
-                           s_max=s_max, k_max=k_max, heur=heur)
+                           s_max=s_max, k_max=k_max, heur=heur,
+                           block_pairs=block_pairs, gather=gather,
+                           ext_stride=ext_stride, band_cap=band_cap)
     return wf.WFAResult(score, None, None, None, jnp.int32(s_max))
 
 
 def _shardmap_trace(pattern, text, plen, tlen, *, pen, s_max, k_max, mesh,
-                    heur=None):
+                    heur=None, band_cap=None):
     score, m_bt, i_bt, d_bt = wf.wfa_trace_shardmap(
         pattern, text, plen, tlen, pen=pen, s_max=s_max, k_max=k_max,
-        mesh=mesh, heur=heur)
+        mesh=mesh, heur=heur, band_cap=band_cap)
     return wf.WFAResult(score, None, None, None, jnp.int32(s_max),
                         m_bt, i_bt, d_bt)
 
@@ -292,8 +323,8 @@ def _shardmap_trace(pattern, text, plen, tlen, *, pen, s_max, k_max, mesh,
                   doc="ring solver in shard_map: per-shard termination, "
                       "zero collectives; per-shard packed backtrace")
 def _shardmap_backend(pattern, text, plen, tlen, *, pen, s_max, k_max, mesh,
-                      heur=None):
+                      heur=None, band_cap=None):
     score = wf.wfa_scores_shardmap(pattern, text, plen, tlen, pen=pen,
                                    s_max=s_max, k_max=k_max, mesh=mesh,
-                                   heur=heur)
+                                   heur=heur, band_cap=band_cap)
     return wf.WFAResult(score, None, None, None, jnp.int32(s_max))

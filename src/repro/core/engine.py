@@ -79,7 +79,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import cigar as cigar_mod
 from repro.core import scoring
 from repro.core import wavefront as wf
-from repro.core.backends import BackendSpec, get_backend
+from repro.core.backends import BackendSpec, get_backend, _accepts_kw
 from repro.core.penalties import DEFAULT
 
 Seq = Union[str, bytes, np.ndarray]
@@ -322,7 +322,8 @@ class _Executable:
 
     def __init__(self, spec: BackendSpec, pen, s_max: int,
                  k_max: int, mesh: Optional[Mesh], output: str = "score",
-                 heur=None, states: Tuple[str, str] = ("M", "M")):
+                 heur=None, states: Tuple[str, str] = ("M", "M"),
+                 opts: Tuple[Tuple[str, object], ...] = ()):
         self.s_max = s_max
         self.k_max = k_max
         self._traces = [0]
@@ -331,16 +332,30 @@ class _Executable:
         heur = scoring.as_heuristic(heur)
         states = tuple(states)
         if output == "bidir_meet":
-            # the meet-in-the-middle breakpoint solver is engine-level (pure
-            # jnp, backend-independent): it exists to *avoid* materializing
-            # a trace, so there is no per-backend variant to select
-            backend_fn = wf.wfa_bidir_meet
+            # the meet-in-the-middle breakpoint solver: backends may ship a
+            # fused meet variant (the kernel runs both fronts' rings in
+            # VMEM with per-block early exit); otherwise the shared jnp
+            # solver serves every backend
+            backend_fn = spec.meet_variant or wf.wfa_bidir_meet
             self._dispatch = None
             extra = {}
         else:
             backend_fn = spec.variant(output, pen.kind)
             self._dispatch = spec.dispatch
             extra = {"mesh": mesh} if spec.needs_mesh else {}
+        # Backend tuning opts: ``band_cap="auto"`` resolves through the
+        # heuristic's own cap for this problem's band width (exact
+        # alignment has no pruning radius, so "auto" stays full-width).
+        # Each opt is then threaded only into callables whose signature
+        # takes it — the stateful-children ring substitution and the meet
+        # path keep working with kernel-only knobs configured.
+        opts = dict(opts)
+        if opts.get("band_cap") == "auto":
+            opts["band_cap"] = (None if heur.exact
+                                else heur.band_cap(2 * k_max + 1))
+        for kw, val in opts.items():
+            if val is not None and _accepts_kw(backend_fn, kw):
+                extra[kw] = val
         # Only pass heur when pruning is actually requested, so
         # heuristic-unaware plug-in backends keep serving exact alignment.
         if not heur.exact:
@@ -409,6 +424,14 @@ class AlignmentEngine:
     bucket_by_length : sort pairs into power-of-two length buckets.
     min_bucket_len : floor for bucket lengths (avoids tiny-shape churn).
     adaptive : enable the exact-bound recovery pass for overflow pairs.
+    backend_opts : backend tuning knobs, threaded by keyword into each of
+        the backend's callables that takes them.  Built-ins:
+        ``band_cap`` (compacting-band ring width on ring/kernel/shardmap;
+        ``"auto"`` derives it from the active heuristic's pruning radius
+        via ``heur.band_cap`` — exact alignment stays full-width), plus
+        ``block_pairs`` / ``gather`` / ``ext_stride`` on the kernel
+        backend.  Unknown keys raise ``ValueError`` here, not at align
+        time.
     """
 
     def __init__(self, pen=DEFAULT, *, backend: str = "ring",
@@ -421,8 +444,15 @@ class AlignmentEngine:
                  min_bucket_len: int = 16, adaptive: bool = True,
                  trace_variant: str = "packed",
                  max_wave_cells: int = 1 << 24,
-                 trace_budget: Optional[int] = None):
+                 trace_budget: Optional[int] = None,
+                 backend_opts: Optional[Dict[str, object]] = None):
         spec = get_backend(backend)
+        self.backend_opts = dict(backend_opts or {})
+        for kw in sorted(self.backend_opts):
+            if not any(_accepts_kw(f, kw) for f in spec.callables()):
+                raise ValueError(
+                    f"backend {backend!r} accepts no backend_opts key "
+                    f"{kw!r} on any of its callables")
         if with_cigar:
             output = "cigar"
         if output not in ("score", "cigar"):
@@ -617,14 +647,17 @@ class AlignmentEngine:
         heur = self.heuristic if heur is None else heur
         # the whole spec in the key: re-registering a backend name (new fn,
         # donation or dispatch hooks) must not serve stale executables.
-        # output mode, penalty model, heuristic and boundary states too:
-        # each compiles a different recurrence / pruning / seeding step.
-        key = (spec, pen, heur, pshape, tshape, s_max, k_max, output, states)
+        # output mode, penalty model, heuristic, boundary states and
+        # backend opts too: each compiles a different recurrence /
+        # pruning / seeding / blocking step.
+        opts = tuple(sorted(self.backend_opts.items()))
+        key = (spec, pen, heur, pshape, tshape, s_max, k_max, output, states,
+               opts)
         exe = self._cache.get(key)
         if exe is not None:
             return exe, True
         exe = _Executable(spec, pen, s_max, k_max, self.mesh, output, heur,
-                          states)
+                          states, opts)
         self._cache[key] = exe
         return exe, False
 

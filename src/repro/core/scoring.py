@@ -228,6 +228,21 @@ class WavefrontHeuristic:
         """True when results under this heuristic are provably optimal."""
         return False
 
+    def band_cap(self, K: int) -> "int | None":
+        """Static compact-band width for a ``K``-diagonal problem, or None.
+
+        A heuristic that keeps its live diagonals inside a bounded span can
+        return a cap ``Kc < K``: the solvers then run the whole score loop
+        on a ``Kc``-wide *compacting band* that re-centers on the live range
+        each step — every per-step vector op shrinks from ``K`` to ``Kc``
+        lanes (WFA-adaptive style) instead of masking dead lanes at full
+        width.  Lanes that drift outside the compact window are pruned
+        exactly as if the heuristic had killed them, so results stay the
+        usual heuristic upper bound.  ``None`` (the default) means the
+        heuristic gives no useful bound and solvers run full width.
+        """
+        return None
+
 
 @dataclasses.dataclass(frozen=True)
 class NoHeuristic(WavefrontHeuristic):
@@ -250,6 +265,17 @@ class AdaptiveBand(WavefrontHeuristic):
             raise ValueError(
                 f"need min_wf_len >= 1, max_distance_diff >= 1: {self}")
 
+    def band_cap(self, K: int) -> "int | None":
+        # live lanes sit within max_distance_diff of the best remaining-
+        # distance estimate; adjacent diagonals change the estimate by >= 1
+        # each, so the live span is bounded by max_distance_diff lanes on
+        # EACH side of the best (two-sided), plus the min_wf_len floor.
+        # The +2 margin absorbs the per-step +-1 band growth between
+        # re-centerings.
+        cap = _round_up(2 * self.max_distance_diff + self.min_wf_len + 2,
+                        8) + 1
+        return cap if cap < K else None
+
 
 @dataclasses.dataclass(frozen=True)
 class ZDrop(WavefrontHeuristic):
@@ -260,6 +286,17 @@ class ZDrop(WavefrontHeuristic):
     def __post_init__(self):
         if self.zdrop < 1:
             raise ValueError(f"need zdrop >= 1: {self}")
+
+    def band_cap(self, K: int) -> "int | None":
+        # antidiagonal progress h+v drops by >= 1 per diagonal away from
+        # the best lane, so live lanes sit within zdrop of it on EITHER
+        # side: the live span is two-sided, up to 2*zdrop + 1 lanes
+        cap = _round_up(2 * self.zdrop + 2, 8) + 1
+        return cap if cap < K else None
+
+
+def _round_up(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m
 
 
 EXACT = NoHeuristic()

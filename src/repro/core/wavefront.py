@@ -153,11 +153,12 @@ def _extend(M, pattern, text, plen, tlen, ks):
     """
     Lt = text.shape[1]
     Lp = pattern.shape[1]
+    ks2 = ks if ks.ndim == 2 else ks[None, :]   # [B, K] under a compact band
 
     def trip(state):
         M, _ = state
         h = M
-        v = M - ks[None, :]
+        v = M - ks2
         can = ((M > _VALID_THRESH)
                & (h >= 0) & (h < tlen[:, None])
                & (v >= 0) & (v < plen[:, None]))
@@ -229,6 +230,216 @@ def _prune_step(heur, plen, tlen, ks, *fronts):
     return _pruned(keep, *fronts)
 
 
+# ---------------------------------------------------------------------------
+# Compacting band (WFA-adaptive style).
+#
+# Under a pruning heuristic only a bounded span of diagonals stays live, so
+# instead of masking dead lanes at full width K the solvers can carry the
+# wavefronts at a *compact* width Kc and slide the window along the diagonal
+# axis: each ring row stores, besides the Kc offsets, the absolute K-index of
+# its lane 0 (``off``).  Per step the window re-centers on the live span of
+# the previous front, reads from older rows realign by gathering with the
+# offset delta, the target test and the ks plane shift by ``off``, and (in
+# packed mode) provenance codes scatter back to absolute k before packing —
+# so ``core.cigar`` decodes them unchanged.  Lanes that fall outside the
+# window are pruned exactly as if the heuristic had killed them: when the
+# heuristic's live span fits in Kc (see ``WavefrontHeuristic.band_cap``)
+# results are bit-identical to the full-width solver; when it does not, the
+# window truncation is just additional (heuristic-grade) pruning.
+# ---------------------------------------------------------------------------
+
+
+def _band_recenter(valid, prev_off, Kc, K):
+    """New window offset centered on the live compact lanes ``valid`` [B,Kc].
+
+    Keeps the previous offset when nothing is live (finished / diverged
+    pairs just coast to loop exit)."""
+    jidx = jnp.arange(Kc, dtype=jnp.int32)[None, :]
+    lo = jnp.min(jnp.where(valid, jidx, Kc), axis=1)
+    hi = jnp.max(jnp.where(valid, jidx, -1), axis=1)
+    off = jnp.clip(prev_off + (lo + hi) // 2 - Kc // 2, 0, K - Kc)
+    return jnp.where(hi >= lo, off, prev_off)
+
+
+def _band_read(ring, off_hist, s, delta, off, W):
+    """Ring row at score ``s - delta`` realigned to window offset ``off``."""
+    row = lax.rem(jnp.maximum(s - delta, 0), W)
+    r = lax.dynamic_index_in_dim(ring, row, keepdims=False)        # [B, Kc]
+    roff = lax.dynamic_index_in_dim(off_hist, row, keepdims=False)  # [B]
+    Kc = r.shape[-1]
+    idx = jnp.arange(Kc, dtype=jnp.int32)[None, :] + (off - roff)[:, None]
+    ok = (idx >= 0) & (idx < Kc) & (s >= delta)
+    return jnp.where(ok, jnp.take_along_axis(r, jnp.clip(idx, 0, Kc - 1),
+                                             axis=1), NEG)
+
+
+def _band_reached(M, plen, tlen, k_max, off):
+    """[B] bool: target diagonal reached, window-offset-aware."""
+    k_final = tlen - plen + k_max - off            # compact index
+    Kc = M.shape[-1]
+    in_band = (k_final >= 0) & (k_final < Kc)
+    idx = jnp.clip(k_final, 0, Kc - 1)
+    val = jnp.take_along_axis(M, idx[:, None], axis=1)[:, 0]
+    return in_band & (val >= tlen) & (val > _VALID_THRESH)
+
+
+def _band_scatter(code, off, K):
+    """Spread a compact [B, Kc] code plane to absolute width [B, K]."""
+    Kc = code.shape[-1]
+    idx = jnp.arange(K, dtype=jnp.int32)[None, :] - off[:, None]
+    ok = (idx >= 0) & (idx < Kc)
+    return jnp.where(ok, jnp.take_along_axis(code, jnp.clip(idx, 0, Kc - 1),
+                                             axis=1), 0)
+
+
+def _scores_band(pattern, text, plen, tlen, model, heur, s_max, k_max, Kc,
+                 packed, begin_state, end_state):
+    """Compacting-band ring solver (score-only or packed-backtrace).
+
+    Shared implementation behind ``wfa_scores(..., band_cap=)`` and
+    ``wfa_scores_packed(..., band_cap=)``; see the block comment above for
+    the window discipline.  Backtrace planes stay full width so traceback
+    is oblivious to the band."""
+    B = pattern.shape[0]
+    K = 2 * k_max + 1
+    W = model.window
+    affine = model.kind == "affine"
+
+    taint = (plen.reshape(-1)[0] * 0).astype(jnp.int32)
+    off0s = min(max(k_max - Kc // 2, 0), K - Kc)
+    j0 = k_max - off0s                              # seed lane, in [0, Kc)
+
+    def ks_of(off):
+        return off[:, None] + jnp.arange(Kc, dtype=jnp.int32)[None, :] - k_max
+
+    off0 = jnp.full((B,), off0s, jnp.int32) + taint
+    seed0 = jnp.full((B, Kc), NEG, jnp.int32).at[:, j0].set(0)
+    M0 = _extend(seed0, pattern, text, plen, tlen, ks_of(off0))
+
+    m_ring = (jnp.full((W, B, Kc), NEG, jnp.int32) + taint).at[0].set(M0)
+    off_hist = jnp.full((W, B), off0s, jnp.int32) + taint
+    negBK = jnp.full((B, Kc), NEG, jnp.int32)
+    I0 = seed0 if (affine and begin_state == "I") else negBK
+    D0 = seed0 if (affine and begin_state == "D") else negBK
+    if affine:
+        i_ring = (jnp.full((W, B, Kc), NEG, jnp.int32) + taint).at[0].set(I0)
+        d_ring = (jnp.full((W, B, Kc), NEG, jnp.int32) + taint).at[0].set(D0)
+
+    def end_front(M, I, D):
+        return {"M": M, "I": I, "D": D}[end_state]
+
+    front0 = M0 if not affine else end_front(M0, I0, D0)
+    score0 = _band_reached(front0, plen, tlen, k_max, off0)
+    score0 = jnp.where(score0, 0, -1)
+
+    NW = n_trace_words(s_max)
+    if packed:
+        m_bt = jnp.zeros((NW, B, K), jnp.int32) + taint
+        if affine:
+            i_bt = jnp.zeros((NW, B, K), jnp.int32) + taint
+            d_bt = jnp.zeros((NW, B, K), jnp.int32) + taint
+
+    def pack(bt, s, code, off):
+        w = s // TRACE_CELLS_PER_WORD
+        sh = 2 * lax.rem(s, TRACE_CELLS_PER_WORD)
+        word = lax.dynamic_index_in_dim(bt, w, keepdims=False)
+        full = _band_scatter(code, off, K)
+        return lax.dynamic_update_index_in_dim(
+            bt, word | jnp.left_shift(full, sh), w, axis=0)
+
+    def body(carry):
+        if affine:
+            (s, score, m_ring, i_ring, d_ring, off_hist, *bts) = carry
+        else:
+            (s, score, m_ring, off_hist, *bts) = carry
+        prow = lax.rem(s - 1, W)
+        prev_m = lax.dynamic_index_in_dim(m_ring, prow, keepdims=False)
+        prev_off = lax.dynamic_index_in_dim(off_hist, prow, keepdims=False)
+        live = prev_m > _VALID_THRESH
+        if affine:
+            # I/D fronts can outrun M between prunes; center on the union
+            live = (live
+                    | (lax.dynamic_index_in_dim(i_ring, prow, keepdims=False)
+                       > _VALID_THRESH)
+                    | (lax.dynamic_index_in_dim(d_ring, prow, keepdims=False)
+                       > _VALID_THRESH))
+        off = _band_recenter(live, prev_off, Kc, K)
+        ks_c = ks_of(off)
+
+        def rd(ring):
+            return lambda d: _band_read(ring, off_hist, s, d, off, W)
+
+        if affine:
+            out = _next_affine(model, rd(m_ring), pattern, text, plen, tlen,
+                               ks_c, rd(i_ring), rd(d_ring),
+                               with_codes=packed)
+            M_new, I_new, D_new = out[:3]
+            reached = _band_reached(end_front(M_new, I_new, D_new),
+                                    plen, tlen, k_max, off)
+        else:
+            out = _next_linear(model, rd(m_ring), pattern, text, plen, tlen,
+                               ks_c, with_codes=packed)
+            M_new = out[0] if packed else out
+            reached = _band_reached(M_new, plen, tlen, k_max, off)
+        score = jnp.where((score < 0) & reached, s, score)
+
+        keep = keep_mask(heur, M_new, plen[:, None], tlen[:, None], ks_c)
+        if affine:
+            M_new, I_new, D_new = _pruned(keep, M_new, I_new, D_new)
+        else:
+            M_new = _pruned(keep, M_new)
+
+        row = lax.rem(s, W)
+        m_ring = lax.dynamic_update_index_in_dim(m_ring, M_new, row, axis=0)
+        off_hist = lax.dynamic_update_index_in_dim(off_hist, off, row, axis=0)
+        if affine:
+            i_ring = lax.dynamic_update_index_in_dim(i_ring, I_new, row,
+                                                     axis=0)
+            d_ring = lax.dynamic_update_index_in_dim(d_ring, D_new, row,
+                                                     axis=0)
+        if packed and affine:
+            m_bt, i_bt, d_bt = bts
+            cm, ci, cd = out[3:]
+            bts = (pack(m_bt, s, cm, off), pack(i_bt, s, ci, off),
+                   pack(d_bt, s, cd, off))
+        elif packed:
+            (m_bt,) = bts
+            bts = (pack(m_bt, s, out[1], off),)
+        if affine:
+            return (s + 1, score, m_ring, i_ring, d_ring, off_hist, *bts)
+        return (s + 1, score, m_ring, off_hist, *bts)
+
+    def cond(carry):
+        s, score = carry[0], carry[1]
+        return (s <= s_max) & jnp.any(score < 0)
+
+    if affine:
+        init = (jnp.int32(1), score0, m_ring, i_ring, d_ring, off_hist)
+        if packed:
+            init += (m_bt, i_bt, d_bt)
+        fin = lax.while_loop(cond, body, init)
+        s, score = fin[0], fin[1]
+        if packed:
+            return WFAResult(score, None, None, None, s, *fin[6:9])
+        return WFAResult(score, None, None, None, s)
+    init = (jnp.int32(1), score0, m_ring, off_hist)
+    if packed:
+        init += (m_bt,)
+    fin = lax.while_loop(cond, body, init)
+    s, score = fin[0], fin[1]
+    if packed:
+        return WFAResult(score, None, None, None, s, fin[4], None, None)
+    return WFAResult(score, None, None, None, s)
+
+
+def _band_width(band_cap, K):
+    """Validated compact width, or None to run full width."""
+    if band_cap is None:
+        return None
+    Kc = max(int(band_cap), 9)     # floor keeps shifts/seed well-defined
+    return Kc if Kc < K else None
+
+
 def _next_affine(model, read_m, pattern, text, plen, tlen, ks,
                  read_i, read_d, with_codes=False, with_pre=False):
     """One gap-affine step: (M_s, I_s, D_s) from history accessors.
@@ -247,6 +458,7 @@ def _next_affine(model, read_m, pattern, text, plen, tlen, ks,
 
     tl = tlen[:, None]
     pl = plen[:, None]
+    ks2 = ks if ks.ndim == 2 else ks[None, :]
 
     # Insertion: source on diagonal k-1, offset +1; needs new h <= m.
     i_open = _shift_from_km1(m_owe)
@@ -260,12 +472,12 @@ def _next_affine(model, read_m, pattern, text, plen, tlen, ks,
     d_ext = _shift_from_kp1(d_e)
     d_src = jnp.maximum(d_open, d_ext)
     D_new = jnp.where((d_src > _VALID_THRESH)
-                      & (d_src - ks[None, :] <= pl), d_src, NEG)
+                      & (d_src - ks2 <= pl), d_src, NEG)
 
     # Mismatch: same diagonal, offset +1; consumes one char of each sequence.
     X_new = m_x + 1
     X_new = jnp.where((m_x > _VALID_THRESH) & (X_new <= tl)
-                      & (X_new - ks[None, :] <= pl), X_new, NEG)
+                      & (X_new - ks2 <= pl), X_new, NEG)
 
     M_pre = jnp.maximum(jnp.maximum(X_new, I_new), D_new)
     M_new = _extend(M_pre, pattern, text, plen, tlen, ks)
@@ -309,6 +521,7 @@ def _next_linear(model, read_m, pattern, text, plen, tlen, ks,
 
     tl = tlen[:, None]
     pl = plen[:, None]
+    ks2 = ks if ks.ndim == 2 else ks[None, :]
 
     i_src = _shift_from_km1(m_e)
     I_new = i_src + 1
@@ -316,11 +529,11 @@ def _next_linear(model, read_m, pattern, text, plen, tlen, ks,
 
     d_src = _shift_from_kp1(m_e)
     D_new = jnp.where((d_src > _VALID_THRESH)
-                      & (d_src - ks[None, :] <= pl), d_src, NEG)
+                      & (d_src - ks2 <= pl), d_src, NEG)
 
     X_new = m_x + 1
     X_new = jnp.where((m_x > _VALID_THRESH) & (X_new <= tl)
-                      & (X_new - ks[None, :] <= pl), X_new, NEG)
+                      & (X_new - ks2 <= pl), X_new, NEG)
 
     M_pre = jnp.maximum(jnp.maximum(X_new, I_new), D_new)
     M_new = _extend(M_pre, pattern, text, plen, tlen, ks)
@@ -457,20 +670,33 @@ def wfa_forward(pattern, text, plen, tlen, *, pen, s_max: int,
     return WFAResult(score, None, None, None, s)
 
 
-@functools.partial(jax.jit, static_argnames=("pen", "s_max", "k_max", "heur"))
+@functools.partial(jax.jit, static_argnames=("pen", "s_max", "k_max", "heur",
+                                             "band_cap"))
 def wfa_scores(pattern, text, plen, tlen, *, pen, s_max: int,
-               k_max: int, heur=None) -> WFAResult:
+               k_max: int, heur=None, band_cap=None) -> WFAResult:
     """Ring-buffer batched WFA — score-only throughput mode.
 
     Memory: rings of ``[window, B, K]`` (3 for affine, 1 for linear) with
     ``window = max(x, o+e) + 1``, the WFA metadata the paper keeps hot in
     WRAM.  This is the jnp reference for the Pallas kernel (same rolling-
     window discipline).
+
+    ``band_cap`` (static int) switches on the compacting band: wavefronts
+    are carried at width ``min(band_cap, K)`` in a window that re-centers
+    on the live diagonal span each step (see the compacting-band block
+    comment).  Identical results to full width whenever the live span fits
+    the window; otherwise the truncation acts as extra heuristic pruning —
+    so pass it only alongside a non-exact ``heur`` (or when a plain banded
+    approximation is explicitly wanted).
     """
     model, heur = _resolve(pen, heur)
     pattern, text, plen, tlen = _prep(pattern, text, plen, tlen)
     B = pattern.shape[0]
     K = 2 * k_max + 1
+    Kc = _band_width(band_cap, K)
+    if Kc is not None:
+        return _scores_band(pattern, text, plen, tlen, model, heur,
+                            s_max, k_max, Kc, False, "M", "M")
     W = model.window
     ks = jnp.arange(K, dtype=jnp.int32) - k_max
     affine = model.kind == "affine"
@@ -538,11 +764,12 @@ def wfa_scores(pattern, text, plen, tlen, *, pen, s_max: int,
 
 
 @functools.partial(jax.jit, static_argnames=("pen", "s_max", "k_max", "heur",
-                                             "begin_state", "end_state"))
+                                             "begin_state", "end_state",
+                                             "band_cap"))
 def wfa_scores_packed(pattern, text, plen, tlen, *, pen,
                       s_max: int, k_max: int, heur=None,
                       begin_state: str = "M",
-                      end_state: str = "M") -> WFAResult:
+                      end_state: str = "M", band_cap=None) -> WFAResult:
     """Ring-buffer batched WFA *with* a packed backtrace.
 
     Identical wavefront recurrence and rolling-window memory discipline as
@@ -555,12 +782,20 @@ def wfa_scores_packed(pattern, text, plen, tlen, *, pen,
     ``begin_state``/``end_state`` as in :func:`wfa_forward` (BiWFA
     sub-alignment boundaries, affine only).  The gap seed cell carries no
     provenance code; the traceback walker terminates on it directly.
+
+    ``band_cap`` as in :func:`wfa_scores` — the backtrace planes stay full
+    width (codes scatter to absolute k before packing), so ``core.cigar``
+    decodes band-mode traces unchanged.
     """
     model, heur = _resolve(pen, heur)
     _check_states(model, begin_state, end_state)
     pattern, text, plen, tlen = _prep(pattern, text, plen, tlen)
     B = pattern.shape[0]
     K = 2 * k_max + 1
+    Kc = _band_width(band_cap, K)
+    if Kc is not None:
+        return _scores_band(pattern, text, plen, tlen, model, heur,
+                            s_max, k_max, Kc, True, begin_state, end_state)
     W = model.window
     NW = n_trace_words(s_max)
     ks = jnp.arange(K, dtype=jnp.int32) - k_max
@@ -895,7 +1130,7 @@ def wfa_bidir_meet(pattern, text, plen, tlen, starget, *, pen, s_max: int,
 
 def wfa_trace_shardmap(pattern, text, plen, tlen, *, pen,
                        s_max: int, k_max: int, mesh, axis_names=None,
-                       heur=None):
+                       heur=None, band_cap=None):
     """Per-shard packed-backtrace WFA under ``shard_map``.
 
     The shardmap backend's CIGAR fallback: each shard runs the packed ring
@@ -918,14 +1153,14 @@ def wfa_trace_shardmap(pattern, text, plen, tlen, *, pen,
     if affine:
         def local(p, t, pl, tl):
             r = wfa_scores_packed(p, t, pl, tl, pen=pen, s_max=s_max,
-                                  k_max=k_max, heur=heur)
+                                  k_max=k_max, heur=heur, band_cap=band_cap)
             return r.score, r.m_bt, r.i_bt, r.d_bt
 
         out_specs = (spec1, spec_bt, spec_bt, spec_bt)
     else:
         def local(p, t, pl, tl):
             r = wfa_scores_packed(p, t, pl, tl, pen=pen, s_max=s_max,
-                                  k_max=k_max, heur=heur)
+                                  k_max=k_max, heur=heur, band_cap=band_cap)
             return r.score, r.m_bt
 
         out_specs = (spec1, spec_bt)
@@ -944,7 +1179,7 @@ def wfa_trace_shardmap(pattern, text, plen, tlen, *, pen,
 
 def wfa_scores_shardmap(pattern, text, plen, tlen, *, pen,
                         s_max: int, k_max: int, mesh, axis_names=None,
-                        heur=None):
+                        heur=None, band_cap=None):
     """PIM-faithful distributed WFA: per-shard termination via shard_map.
 
     The pjit formulation's while-condition ``any(score < 0)`` spans the
@@ -963,7 +1198,7 @@ def wfa_scores_shardmap(pattern, text, plen, tlen, *, pen,
 
     def local(p, t, pl, tl):
         return wfa_scores(p, t, pl, tl, pen=pen, s_max=s_max,
-                          k_max=k_max, heur=heur).score
+                          k_max=k_max, heur=heur, band_cap=band_cap).score
 
     kwargs = dict(mesh=mesh, in_specs=(spec2, spec2, spec1, spec1),
                   out_specs=spec1)

@@ -1,2 +1,3 @@
-from repro.kernels.wfa.ops import wfa_align, wfa_align_np  # noqa: F401
+from repro.kernels.wfa.ops import (  # noqa: F401
+    wfa_align, wfa_align_np, wfa_align_trace, wfa_bidir_meet_kernel)
 from repro.kernels.wfa.ref import ref_scores  # noqa: F401

@@ -3,25 +3,49 @@
 Hardware mapping (DESIGN.md §2):
 
 * one **grid program** ≙ one DPU: it owns a block of ``BP`` pairs and runs
-  their entire alignment without leaving VMEM;
+  their entire alignment without leaving VMEM — the whole score loop is a
+  ``lax.while_loop`` *inside* the kernel body with an all-pairs-done early
+  exit per block;
 * **BlockSpec** HBM→VMEM tiling of the pair batch ≙ the MRAM→WRAM DMA;
 * the wavefront **ring buffers** (depth ``window = max(x,o+e)+1``) live in
   VMEM scratch ≙ the WFA metadata the paper keeps hot in WRAM;
 * wavefronts are laid out ``[pairs, diagonals]`` on (sublane, lane) —
   every arithmetic op is a full-width vector op;
-* character fetch during extension uses a **one-hot compare-and-reduce**
-  (``sum_l [idx == l] * seq[l]``) instead of a per-lane gather, which TPUs
-  lack (UPMEM's scalar loads do not transfer);
 * no communication between grid programs ≙ no inter-DPU communication.
+
+Character fetch during extension is selected by the static ``gather`` mode:
+
+* ``"onehot"`` — compare-and-reduce (``sum_l [idx == l] * seq[l]``), the
+  only formulation a real TPU VPU supports (no per-lane gather); it
+  materializes a ``[BP, K, L]`` intermediate per extend trip, which is
+  exactly what made interpret mode ~100x slower than the jnp ring solver;
+* ``"index"`` — ``jnp.take_along_axis``: in interpret mode the kernel body
+  is discharged to plain jax ops on CPU, where a real gather exists and is
+  ~25x faster.  The wrapper defaults to ``index`` under ``interpret`` and
+  ``onehot`` when compiled.
+
+``ext_stride`` fetches several consecutive characters per extend trip
+(index mode): each trip gathers ``C`` chars of both sequences, takes the
+cumulative-AND of the matches along the stride, and advances each lane by
+its matched prefix — long match runs finish in ``len/C`` trips.
+
+``band_cap`` switches on the **compacting band** (the in-kernel counterpart
+of ``core.wavefront``'s ``band_cap``): rings are allocated at a compact
+width ``Kc`` and a per-block window offset tracks where those lanes sit on
+the absolute diagonal axis.  Each step the window re-centers on the union
+of the block's live lanes (min/max reduction), ring reads from older score
+rows realign by the offset delta (pad + dynamic slice — no gather needed),
+and packed-backtrace codes scatter to absolute k before OR-packing, so the
+trace decoder is oblivious.  Lanes outside the window are pruned exactly
+like heuristic kills; when the heuristic's live span fits ``Kc`` the
+results are identical to full width.
 
 The kernel is specialized per **penalty model** (``core.scoring``): affine
 models run the three-matrix M/I/D recurrence over three VMEM rings;
 linear models (``GapLinear`` / ``Edit``) collapse to the one-matrix
-recurrence over a **single** ring — a third of the per-step VMEM working
-set and fewer VPU ops per score step.  A **wavefront heuristic**
+recurrence over a **single** ring.  A **wavefront heuristic**
 (``AdaptiveBand`` / ``ZDrop``) optionally masks pruned k-lanes to the
-invalid sentinel after each step, so dead diagonals cost no further
-extension trips.
+invalid sentinel after each step (shared ``keep_mask`` policy).
 
 Two output modes, built from the same kernel body:
 
@@ -31,10 +55,7 @@ Two output modes, built from the same kernel body:
   per-cell provenance codes into ``[n_words, B, K]`` int32 words (16 score
   steps per word, same encoding as ``core.wavefront.wfa_scores_packed``;
   three planes for affine, one for linear), which ``core.cigar`` decodes
-  into exact CIGARs on the host.  The rings stay the only per-step working
-  set in VMEM; the packed words are ~16x smaller than a full offset
-  history, so full alignments fit the same bucketed batches the score path
-  serves.
+  into exact CIGARs on the host.
 """
 from __future__ import annotations
 
@@ -56,68 +77,106 @@ NEG = -(1 << 20)
 _THRESH = NEG // 2
 
 
-def _gather_chars(seq, idx):
+def _gather_chars(seq, idx, mode: str):
     """seq [BP, L], idx [BP, K] -> seq[b, idx[b, k]] as [BP, K].
 
-    One-hot contraction (VPU compare + reduce); idx is pre-clipped by the
-    caller's validity mask so out-of-range lanes read junk that is never used.
+    idx is pre-clipped here; out-of-range lanes read junk that the caller's
+    validity mask discards.  ``onehot`` is the VPU compare-and-reduce
+    formulation (TPUs lack per-lane gather); ``index`` is a real gather for
+    interpret mode, where the body runs as plain jax ops.
     """
-    BP, L = seq.shape
-    K = idx.shape[1]
-    l_iota = lax.broadcasted_iota(jnp.int32, (BP, K, L), 2)
+    L = seq.shape[1]
     idx_c = jnp.clip(idx, 0, L - 1)
+    if mode == "index":
+        return jnp.take_along_axis(seq, idx_c, axis=1)
+    BP, K = idx.shape
+    l_iota = lax.broadcasted_iota(jnp.int32, (BP, K, L), 2)
     hit = (l_iota == idx_c[:, :, None])
     return jnp.sum(jnp.where(hit, seq[:, None, :], 0), axis=2)
 
 
-def _make_kernel(model, heur, s_max: int, trace: bool = False):
+def _gather_strided(seq, idx, C: int):
+    """seq [BP, L], idx [BP, K] -> seq[b, idx[b, k] + c] as [BP, K, C].
+
+    One flattened take_along_axis for all C consecutive characters
+    (index-gather mode only)."""
+    BP, L = seq.shape
+    K = idx.shape[1]
+    cidx = lax.broadcasted_iota(jnp.int32, (BP, K, C), 2)
+    flat = jnp.clip(idx[:, :, None] + cidx, 0, L - 1).reshape(BP, K * C)
+    return jnp.take_along_axis(seq, flat, axis=1).reshape(BP, K, C)
+
+
+def _make_kernel(model, heur, s_max: int, k_pad: int, trace: bool,
+                 gather: str, ext_stride: int, band: bool):
     x, o, e = model.x, model.o, model.e
     W = model.window
     affine = model.kind == "affine"
     n_bt = (3 if affine else 1) if trace else 0
+    C = ext_stride if gather == "index" else 1
+    kc_full = k_pad // 2                     # absolute diagonal center
 
     def kernel(p_ref, t_ref, pl_ref, tl_ref, out_ref, steps_ref, *refs):
         bt_refs = refs[:n_bt]
-        rings = refs[n_bt:]
+        rings = refs[:-1][n_bt:] if band else refs[n_bt:]
+        off_ref = refs[-1] if band else None  # [W, 1] SMEM row offsets
         if affine:
             m_ring, i_ring, d_ring = rings
         else:
             (m_ring,) = rings
         BP, Lp = p_ref.shape
         _, Lt = t_ref.shape
-        K = m_ring.shape[-1]
-        kc = K // 2
+        Kc = m_ring.shape[-1]                # compact (== k_pad unless band)
 
         pat = p_ref[...]
         txt = t_ref[...]
-        plen = pl_ref[...]                       # [BP, 1]
+        plen = pl_ref[...]                   # [BP, 1]
         tlen = tl_ref[...]
-        ks = lax.broadcasted_iota(jnp.int32, (BP, K), 1) - kc
+        jidx = lax.broadcasted_iota(jnp.int32, (BP, Kc), 1)
 
-        def extend(M):
+        def ks_of(off):
+            """Absolute diagonal of each compact lane (off = 0 unbanded)."""
+            return jidx + (off - kc_full)
+
+        def extend(M, ks):
             def trip(st):
                 M, _ = st
                 v = M - ks
-                can = ((M > _THRESH) & (M >= 0) & (M < tlen)
-                       & (v >= 0) & (v < plen))
-                tc = _gather_chars(txt, M)
-                pc = _gather_chars(pat, v)
-                adv = can & (tc == pc)
-                return M + adv.astype(jnp.int32), jnp.any(adv)
+                base = (M > _THRESH)
+                if C == 1:
+                    can = (base & (M >= 0) & (M < tlen)
+                           & (v >= 0) & (v < plen))
+                    tc = _gather_chars(txt, M, gather)
+                    pc = _gather_chars(pat, v, gather)
+                    adv = (can & (tc == pc)).astype(jnp.int32)
+                    return M + adv, jnp.any(adv == 1)
+                tcs = _gather_strided(txt, M, C)
+                pcs = _gather_strided(pat, v, C)
+                cidx = lax.broadcasted_iota(jnp.int32, (BP, Kc, C), 2)
+                h3 = M[:, :, None] + cidx
+                v3 = v[:, :, None] + cidx
+                ok = (base[:, :, None]
+                      & (h3 >= 0) & (h3 < tlen[:, :, None])
+                      & (v3 >= 0) & (v3 < plen[:, :, None])
+                      & (tcs == pcs))
+                # matched prefix length along the stride
+                adv = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=2),
+                              axis=2)
+                return M + adv, jnp.any(adv >= C)
 
             st = trip((M, jnp.bool_(True)))
             M, _ = lax.while_loop(lambda st: st[1], trip, st)
             return M
 
-        def reached(M):
+        def reached(M, ks):
             """[BP, 1] bool: furthest offset hit the (tlen, plen) corner."""
-            k_final = tlen - plen                # [BP, 1] diagonal value
+            k_final = tlen - plen            # [BP, 1] diagonal value
             hit = (ks == k_final) & (M >= tlen) & (M > _THRESH)
             return jnp.any(hit, axis=1, keepdims=True)
 
-        def prune(M):
+        def prune(M, ks):
             # shared policy implementation; plen/tlen/ks are already in
-            # keep_mask's 2-D convention ([BP, 1] / [BP, K])
+            # keep_mask's 2-D convention ([BP, 1] / [BP, Kc])
             keep = keep_mask(heur, M, plen, tlen, ks)
             if keep is None:
                 return M, None
@@ -126,48 +185,88 @@ def _make_kernel(model, heur, s_max: int, trace: bool = False):
         def store_row(ring, row, val):
             ring[pl.ds(row, 1)] = val[None]
 
-        def load_row(ring, s, delta):
+        neg_kc = jnp.full((BP, Kc), NEG, jnp.int32)
+
+        def load_row(ring, s, delta, off):
             row = lax.rem(jnp.maximum(s - delta, 0), W)
             val = ring[pl.ds(row, 1)][0]
+            if band:
+                # realign the stored window to the current offset: pad both
+                # sides with NEG and slide by the offset delta (no gather)
+                shift = jnp.clip(off - off_ref[row, 0], -Kc, Kc)
+                padded = jnp.concatenate([neg_kc, val, neg_kc], axis=1)
+                val = lax.dynamic_slice_in_dim(padded, Kc + shift, Kc,
+                                               axis=1)
             return jnp.where(s >= delta, val, NEG)
 
-        def pack_code(bt_ref, s, code):
-            """OR the [BP, K] 2-bit code plane into word s//16 of bt_ref."""
+        def scatter_full(code, off):
+            """Place a compact [BP, Kc] plane at absolute k (width k_pad)."""
+            if not band:
+                return code
+            full = jnp.zeros((BP, k_pad), jnp.int32)
+            return lax.dynamic_update_slice(full, code, (0, off))
+
+        def pack_code(bt_ref, s, code, off):
+            """OR the 2-bit code plane into word s//16 of bt_ref."""
             w = s // TRACE_CELLS_PER_WORD
-            off = 2 * lax.rem(s, TRACE_CELLS_PER_WORD)
+            sh = 2 * lax.rem(s, TRACE_CELLS_PER_WORD)
             cur = bt_ref[pl.ds(w, 1)]
-            bt_ref[pl.ds(w, 1)] = cur | jnp.left_shift(code, off)[None]
+            full = scatter_full(code, off)
+            bt_ref[pl.ds(w, 1)] = cur | jnp.left_shift(full, sh)[None]
 
         # s = 0
         if trace:
             # out buffers are uninitialized; codes are OR-accumulated
             for bt in bt_refs:
                 bt[...] = jnp.zeros_like(bt)
-        M0 = jnp.where(ks == 0, 0, NEG)
-        M0 = extend(M0)
+        if band:
+            off0 = min(max(kc_full - Kc // 2, 0), k_pad - Kc)
+            off_ref[...] = jnp.full(off_ref.shape, off0, jnp.int32)
+        else:
+            off0 = 0
+        ks0 = ks_of(off0)
+        M0 = extend(jnp.where(ks0 == 0, 0, NEG), ks0)
         store_row(m_ring, 0, M0)
         if affine:
-            store_row(i_ring, 0, jnp.full((BP, K), NEG, jnp.int32))
-            store_row(d_ring, 0, jnp.full((BP, K), NEG, jnp.int32))
-        score0 = jnp.where(reached(M0), 0, -1)
+            store_row(i_ring, 0, neg_kc)
+            store_row(d_ring, 0, neg_kc)
+        score0 = jnp.where(reached(M0, ks0), 0, -1)
 
         neg_col = jnp.full((BP, 1), NEG, jnp.int32)
         sh_r = lambda w: jnp.concatenate([neg_col, w[:, :-1]], axis=1)
         sh_l = lambda w: jnp.concatenate([w[:, 1:], neg_col], axis=1)
 
+        def recenter(s):
+            """New window offset from the previous row's live lanes."""
+            if not band:
+                return 0
+            prow = lax.rem(s - 1, W)
+            live = m_ring[pl.ds(prow, 1)][0] > _THRESH
+            if affine:
+                # I/D fronts can outrun M between prunes; use the union
+                live = (live | (i_ring[pl.ds(prow, 1)][0] > _THRESH)
+                        | (d_ring[pl.ds(prow, 1)][0] > _THRESH))
+            poff = off_ref[prow, 0]
+            lo = jnp.min(jnp.where(live, jidx, Kc))
+            hi = jnp.max(jnp.where(live, jidx, -1))
+            new = jnp.clip(poff + (lo + hi) // 2 - Kc // 2, 0, k_pad - Kc)
+            return jnp.where(hi >= lo, new, poff)
+
         def body(carry):
             s, score = carry
-            m_x = load_row(m_ring, s, x)
+            off = recenter(s)
+            ks = ks_of(off)
+            m_x = load_row(m_ring, s, x, off)
             if affine:
-                m_owe = load_row(m_ring, s, o + e)
-                i_e = load_row(i_ring, s, e)
-                d_e = load_row(d_ring, s, e)
+                m_owe = load_row(m_ring, s, o + e, off)
+                i_e = load_row(i_ring, s, e, off)
+                d_e = load_row(d_ring, s, e, off)
                 i_open, i_ext = sh_r(m_owe), sh_r(i_e)
                 i_src = jnp.maximum(i_open, i_ext)
                 d_open, d_ext = sh_l(m_owe), sh_l(d_e)
                 d_src = jnp.maximum(d_open, d_ext)
             else:
-                m_e = m_x if x == e else load_row(m_ring, s, e)
+                m_e = m_x if x == e else load_row(m_ring, s, e, off)
                 i_src = sh_r(m_e)
                 d_src = sh_l(m_e)
 
@@ -178,7 +277,7 @@ def _make_kernel(model, heur, s_max: int, trace: bool = False):
             X_new = jnp.where((m_x > _THRESH) & (m_x + 1 <= tlen)
                               & (m_x + 1 - ks <= plen), m_x + 1, NEG)
             M_pre = jnp.maximum(jnp.maximum(X_new, I_new), D_new)
-            M_new = extend(M_pre)
+            M_new = extend(M_pre, ks)
 
             if trace:
                 # codes from the PRE-prune fronts — bit-identical to
@@ -189,7 +288,7 @@ def _make_kernel(model, heur, s_max: int, trace: bool = False):
                     jnp.where(M_pre == X_new, BT_M_FROM_X,
                               jnp.where(M_pre == I_new, BT_M_FROM_I,
                                         BT_M_FROM_D)), 0)
-                pack_code(bt_refs[0], s, code_m)
+                pack_code(bt_refs[0], s, code_m, off)
                 if affine:
                     code_i = jnp.where(
                         I_new > _THRESH,
@@ -199,11 +298,11 @@ def _make_kernel(model, heur, s_max: int, trace: bool = False):
                         D_new > _THRESH,
                         jnp.where(d_ext >= d_open, BT_GAP_EXT,
                                   BT_GAP_OPEN), 0)
-                    pack_code(bt_refs[1], s, code_i)
-                    pack_code(bt_refs[2], s, code_d)
+                    pack_code(bt_refs[1], s, code_i, off)
+                    pack_code(bt_refs[2], s, code_d, off)
 
-            score = jnp.where((score < 0) & reached(M_new), s, score)
-            M_new, keep = prune(M_new)
+            score = jnp.where((score < 0) & reached(M_new, ks), s, score)
+            M_new, keep = prune(M_new, ks)
             if affine and keep is not None:
                 I_new = jnp.where(keep, I_new, NEG)
                 D_new = jnp.where(keep, D_new, NEG)
@@ -213,6 +312,8 @@ def _make_kernel(model, heur, s_max: int, trace: bool = False):
             if affine:
                 store_row(i_ring, row, I_new)
                 store_row(d_ring, row, D_new)
+            if band:
+                off_ref[row, 0] = off
             return s + 1, score
 
         def cond(carry):
@@ -228,22 +329,35 @@ def _make_kernel(model, heur, s_max: int, trace: bool = False):
 
 @functools.partial(jax.jit, static_argnames=("pen", "s_max", "k_pad",
                                              "block_pairs", "interpret",
-                                             "trace", "heur"))
+                                             "trace", "heur", "gather",
+                                             "ext_stride", "band_cap"))
 def wfa_pallas(pattern, text, plen, tlen, *, pen, s_max: int,
                k_pad: int, block_pairs: int = 8, interpret: bool = True,
-               trace: bool = False, heur=None):
+               trace: bool = False, heur=None, gather=None,
+               ext_stride: int = 1, band_cap=None):
     """pattern/text [B, L*] int32 (B % block_pairs == 0, L* % 128 == 0),
     plen/tlen [B, 1] int32, k_pad % 128 == 0 is the padded diagonal count.
     -> (score [B, 1] int32, steps [B, 1] int32); with ``trace`` additionally
     the [n_words, B, k_pad] int32 packed provenance arrays (three for
-    affine models, one for linear)."""
+    affine models, one for linear).
+
+    ``gather`` (``"index"``/``"onehot"``; None = index under interpret,
+    onehot compiled), ``ext_stride`` (chars fetched per extend trip, index
+    mode) and ``band_cap`` (compact ring width, lane-aligned by the ops
+    wrapper; None = full width) are static — see the module docstring.
+    """
     B, Lp = pattern.shape
     Lt = text.shape[1]
     BP = block_pairs
     assert B % BP == 0, (B, BP)
     model = scoring.as_model(pen)
     heur = scoring.as_heuristic(heur)
-    kernel, W, affine = _make_kernel(model, heur, s_max, trace=trace)
+    if gather is None:
+        gather = "index" if interpret else "onehot"
+    band = band_cap is not None and band_cap < k_pad
+    Kc = band_cap if band else k_pad
+    kernel, W, affine = _make_kernel(model, heur, s_max, k_pad, trace,
+                                     gather, max(int(ext_stride), 1), band)
     grid = (B // BP,)
     n_rings = 3 if affine else 1
 
@@ -257,12 +371,275 @@ def wfa_pallas(pattern, text, plen, tlen, *, pen, s_max: int,
         bt_spec = pl.BlockSpec((NW, BP, k_pad), lambda i: (0, i, 0))
         out_specs += [bt_spec] * n_bt
         out_shape += [jax.ShapeDtypeStruct((NW, B, k_pad), jnp.int32)] * n_bt
+    scratch = [pltpu.VMEM((W, BP, Kc), jnp.int32)] * n_rings
+    if band:
+        scratch += [pltpu.SMEM((W, 1), jnp.int32)]
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[spec2(Lp), spec2(Lt), spec2(1), spec2(1)],
         out_specs=out_specs,
         out_shape=out_shape,
-        scratch_shapes=[pltpu.VMEM((W, BP, k_pad), jnp.int32)] * n_rings,
+        scratch_shapes=scratch,
         interpret=interpret,
     )(pattern, text, plen, tlen)
+
+
+def _make_meet_kernel(model, heur, s_max: int, k_pad: int,
+                      begin_state: str, end_state: str):
+    """BiWFA meet-in-the-middle as one fused grid program.
+
+    Port of ``core.wavefront.wfa_bidir_meet`` (same candidate classes,
+    window ``Wd`` and safety flags — see its docstring for the algorithm):
+    forward and reverse fronts step in lockstep inside a single
+    ``lax.while_loop``, both sets of rings resident in VMEM scratch, and
+    the meet test is fused into the same loop — so one grid program runs
+    the whole breakpoint search for its block and exits as soon as *its*
+    pairs have met (the jnp solver's early exit spans the whole batch).
+    Index-gather only (the per-pair ring reads and complement-diagonal
+    gathers are real gathers): interpret mode / CPU, the validation target.
+    """
+    x, o, e = model.x, model.o, model.e
+    affine = model.kind == "affine"
+    oend = (o if affine else 0) if end_state != "M" else 0
+    maxop = max(x, o + e) if affine else max(x, e)
+    Wd = max(model.window, 2 * maxop + 2)
+    kc = k_pad // 2
+    n_rings = 7 if affine else 3
+
+    def kernel(p_ref, t_ref, pr_ref, tr_ref, pl_ref, tl_ref, st_ref,
+               score_ref, steps_ref, state_ref, a_ref, b_ref, kk_ref,
+               h_ref, safe_ref, *rings):
+        if affine:
+            fm, fmp, fi, fd, rm, ri, rd = rings
+        else:
+            fm, fmp, rm = rings
+        BP = p_ref.shape[0]
+        K = fm.shape[-1]
+
+        pat, txt = p_ref[...], t_ref[...]
+        patr, txtr = pr_ref[...], tr_ref[...]
+        plen, tlen = pl_ref[...], tl_ref[...]          # [BP, 1]
+        starget = st_ref[...]
+        jidx = lax.broadcasted_iota(jnp.int32, (BP, K), 1)
+        ks = jidx - kc
+
+        def extend(M, p2, t2):
+            def trip(st):
+                M, _ = st
+                v = M - ks
+                can = ((M > _THRESH) & (M >= 0) & (M < tlen)
+                       & (v >= 0) & (v < plen))
+                tc = _gather_chars(t2, M, "index")
+                pc = _gather_chars(p2, v, "index")
+                adv = (can & (tc == pc)).astype(jnp.int32)
+                return M + adv, jnp.any(adv == 1)
+
+            st = trip((M, jnp.bool_(True)))
+            M, _ = lax.while_loop(lambda st: st[1], trip, st)
+            return M
+
+        def store(ring, row, val):
+            ring[pl.ds(row, 1)] = val[None]
+
+        def load(ring, s, delta):
+            row = lax.rem(jnp.maximum(s - delta, 0), Wd)
+            val = ring[pl.ds(row, 1)][0]
+            return jnp.where(s >= delta, val, NEG)
+
+        neg_col = jnp.full((BP, 1), NEG, jnp.int32)
+        sh_r = lambda w: jnp.concatenate([neg_col, w[:, :-1]], axis=1)
+        sh_l = lambda w: jnp.concatenate([w[:, 1:], neg_col], axis=1)
+
+        def step(mring, iring, dring, s, p2, t2):
+            """One affine/linear score step from the given rings.
+
+            Returns (M_new, I_new, D_new, M_pre); I/D are None for
+            linear models (their sources fold into M directly)."""
+            m_x = load(mring, s, x)
+            if affine:
+                m_owe = load(mring, s, o + e)
+                i_src = jnp.maximum(sh_r(m_owe), sh_r(load(iring, s, e)))
+                d_src = jnp.maximum(sh_l(m_owe), sh_l(load(dring, s, e)))
+            else:
+                m_e = m_x if x == e else load(mring, s, e)
+                i_src, d_src = sh_r(m_e), sh_l(m_e)
+            I_new = jnp.where((i_src > _THRESH) & (i_src + 1 <= tlen),
+                              i_src + 1, NEG)
+            D_new = jnp.where((d_src > _THRESH) & (d_src - ks <= plen),
+                              d_src, NEG)
+            X_new = jnp.where((m_x > _THRESH) & (m_x + 1 <= tlen)
+                              & (m_x + 1 - ks <= plen), m_x + 1, NEG)
+            M_pre = jnp.maximum(jnp.maximum(X_new, I_new), D_new)
+            return extend(M_pre, p2, t2), I_new, D_new, M_pre
+
+        def prune(*fronts):
+            keep = keep_mask(heur, fronts[0], plen, tlen, ks)
+            if keep is None:
+                return fronts
+            return tuple(jnp.where(keep, w, NEG) for w in fronts)
+
+        # s = 0 seeds (fwd M + begin-state gap; rev M + end-state gap —
+        # the reversed problem's *leading* gap, hence the oend shift)
+        seed = jnp.where(ks == 0, 0, NEG)
+        negK = jnp.full((BP, K), NEG, jnp.int32)
+        store(fm, 0, extend(seed, pat, txt))
+        store(fmp, 0, seed)
+        store(rm, 0, extend(seed, patr, txtr))
+        if affine:
+            store(fi, 0, seed if begin_state == "I" else negK)
+            store(fd, 0, seed if begin_state == "D" else negK)
+            store(ri, 0, seed if end_state == "I" else negK)
+            store(rd, 0, seed if end_state == "D" else negK)
+
+        # complement-diagonal gather: rev K-index addressing the same cell
+        jprime = (tlen - plen) + 2 * kc - jidx
+        jpok = (jprime >= 0) & (jprime < K)
+        jpc = jnp.clip(jprime, 0, K - 1)
+
+        def comp(arr):
+            return jnp.where(jpok, jnp.take_along_axis(arr, jpc, axis=1),
+                             NEG)
+
+        def at(ring, c):
+            """Ring row at per-pair cost c [BP, 1] (NEG outside window)."""
+            ok = (c >= 0) & (c <= s_cur[0]) & (c > s_cur[0] - Wd)
+            rows = lax.rem(jnp.maximum(c[:, 0], 0), Wd)
+            all_rows = ring[...]
+            sel = jnp.take_along_axis(
+                all_rows, jnp.broadcast_to(rows[None, :, None], (1, BP, K)),
+                axis=0)[0]
+            return jnp.where(ok, sel, NEG)
+
+        m2 = tlen
+        low = jnp.maximum(ks, 0)
+        met0 = (plen == 0) & (tlen == 0)       # padded rows: free the exit
+
+        # mutable closure cell for the current step (at() needs it)
+        s_cur = [jnp.int32(0)]
+
+        def body(carry):
+            s, met, jst, ja, jb, jk, jh, jsf = carry
+            s_cur[0] = s
+            Mf, If, Df, Mfp = step(fm, fi if affine else None,
+                                   fd if affine else None, s, pat, txt)
+            Mr, Ir, Dr, _ = step(rm, ri if affine else None,
+                                 rd if affine else None, s, patr, txtr)
+            if affine:
+                Mf, If, Df, Mfp = prune(Mf, If, Df, Mfp)
+                Mr, Ir, Dr = prune(Mr, Ir, Dr)
+            else:
+                Mf, Mfp = prune(Mf, Mfp)
+                (Mr,) = prune(Mr)
+            row = lax.rem(s, Wd)
+            store(fm, row, Mf)
+            store(fmp, row, Mfp)
+            store(rm, row, Mr)
+            if affine:
+                store(fi, row, If)
+                store(fd, row, Df)
+                store(ri, row, Ir)
+                store(rd, row, Dr)
+
+            def orient(a_m, a_g, b_m, b_g):
+                """Candidate classes for prefix costs a_*, suffix costs
+                b_* (see wfa_bidir_meet.orient)."""
+                fa_m, fa_mp = at(fm, a_m), at(fmp, a_m)
+                rb_m = comp(at(rm, b_m))
+                vmm = (fa_m > _THRESH) & (rb_m > _THRESH)
+                cov = vmm & (fa_m + rb_m >= m2)
+                h_mm = jnp.clip(m2 - rb_m, low, jnp.maximum(fa_m, low))
+                out = {"mm_safe": (cov & (fa_mp + rb_m <= m2), 0, a_m, b_m,
+                                   h_mm, 1),
+                       "mm_cov": (cov, 0, a_m, b_m, h_mm, 0)}
+                if affine:
+                    fa_i, rb_i = at(fi, a_g), comp(at(ri, b_g))
+                    fa_d, rb_d = at(fd, a_g), comp(at(rd, b_g))
+                    vii = (fa_i > _THRESH) & (rb_i > _THRESH)
+                    vdd = (fa_d > _THRESH) & (rb_d > _THRESH)
+                    out["ii0"] = (vii & (fa_i + rb_i == m2), 1, a_g, b_g,
+                                  fa_i, 1)
+                    out["dd0"] = (vdd & (fa_d + rb_d == m2), 2, a_g, b_g,
+                                  fa_d, 1)
+                    out["ii_cov"] = (vii & (fa_i + rb_i >= m2), 1, a_g,
+                                     b_g, fa_i, 0)
+                    out["dd_cov"] = (vdd & (fa_d + rb_d >= m2), 2, a_g,
+                                     b_g, fa_d, 0)
+                return out
+
+            sb = jnp.full((BP, 1), 0, jnp.int32) + s
+            st2 = starget - oend
+            A = orient(sb, sb, st2 - s, st2 + (o if affine else 0) - s)
+            Bo = orient(st2 - s, st2 + (o if affine else 0) - s, sb, sb)
+            names = ["mm_safe"] + (["ii0", "dd0"] if affine else []) \
+                + ["mm_cov"] + (["ii_cov", "dd_cov"] if affine else [])
+            for name in names:
+                for side in (A, Bo):
+                    mask2d, stc, a_arr, b_arr, hplane, sf = side[name]
+                    anyk = jnp.any(mask2d, axis=1, keepdims=True)
+                    kidx = jnp.argmax(mask2d, axis=1).astype(
+                        jnp.int32)[:, None]
+                    hsel = jnp.take_along_axis(hplane, kidx, axis=1)
+                    take = (~met) & anyk
+                    met = met | take
+                    jst = jnp.where(take, stc, jst)
+                    ja = jnp.where(take, a_arr, ja)
+                    jb = jnp.where(take, b_arr, jb)
+                    jk = jnp.where(take, kidx - kc, jk)
+                    jh = jnp.where(take, hsel, jh)
+                    jsf = jnp.where(take, sf, jsf)
+            return s + 1, met, jst, ja, jb, jk, jh, jsf
+
+        def cond(carry):
+            s, met = carry[0], carry[1]
+            return (s <= s_max) & ~jnp.all(met)
+
+        z = jnp.zeros((BP, 1), jnp.int32)
+        s_end, met, jst, ja, jb, jk, jh, jsf = lax.while_loop(
+            cond, body, (jnp.int32(1), met0, z - 1, z, z, z, z, z))
+        hit = met & ~met0                      # padded rows report unmet
+        score_ref[...] = jnp.where(hit, starget, -1)
+        steps_ref[...] = jnp.broadcast_to(s_end, (BP, 1))
+        state_ref[...] = jnp.where(hit, jst, -1)
+        a_ref[...] = ja
+        b_ref[...] = jb
+        kk_ref[...] = jk
+        h_ref[...] = jh
+        safe_ref[...] = jsf
+
+    return kernel, Wd, n_rings
+
+
+@functools.partial(jax.jit, static_argnames=("pen", "s_max", "k_pad",
+                                             "block_pairs", "interpret",
+                                             "heur", "begin_state",
+                                             "end_state"))
+def wfa_meet_pallas(pattern, text, pat_rev, txt_rev, plen, tlen, starget, *,
+                    pen, s_max: int, k_pad: int, block_pairs: int = 8,
+                    interpret: bool = True, heur=None,
+                    begin_state: str = "M", end_state: str = "M"):
+    """Fused BiWFA meet search: same input contract as :func:`wfa_pallas`
+    plus per-row-reversed sequences (computed by the ops wrapper — cheaper
+    batched on the host side of the grid) and ``starget`` [B, 1].
+    Returns 8 ``[B, 1]`` int32 arrays: score, steps, meet_state, meet_a,
+    meet_b, meet_k, meet_h, meet_safe (``BidirMeetResult`` fields)."""
+    B, Lp = pattern.shape
+    BP = block_pairs
+    assert B % BP == 0, (B, BP)
+    model = scoring.as_model(pen)
+    heur = scoring.as_heuristic(heur)
+    kernel, Wd, n_rings = _make_meet_kernel(model, heur, s_max, k_pad,
+                                            begin_state, end_state)
+    grid = (B // BP,)
+    spec2 = lambda L: pl.BlockSpec((BP, L), lambda i: (i, 0))
+    Lt = text.shape[1]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec2(Lp), spec2(Lt), spec2(Lp), spec2(Lt),
+                  spec2(1), spec2(1), spec2(1)],
+        out_specs=[spec2(1)] * 8,
+        out_shape=[jax.ShapeDtypeStruct((B, 1), jnp.int32)] * 8,
+        scratch_shapes=[pltpu.VMEM((Wd, BP, k_pad), jnp.int32)] * n_rings,
+        interpret=interpret,
+    )(pattern, text, pat_rev, txt_rev, plen, tlen, starget)

@@ -4,6 +4,20 @@ Hardware-alignment contract (DESIGN.md §2): sequence buffers pad to lane
 multiples (128), the diagonal axis pads to a lane multiple, the pair axis
 pads to the block size — the TPU analogue of UPMEM's 8-byte DMA alignment,
 absorbed here by the wrapper exactly like the paper's custom allocator.
+
+Tuning knobs (all optional, threaded from
+``AlignmentEngine(backend_opts=...)``):
+
+* ``block_pairs`` — pairs per grid program.  ``None`` picks the platform
+  auto-default (8: one int32 sublane tile on TPU, and the measured best in
+  interpret mode, where a small block keeps the per-block early exit
+  effective).
+* ``gather`` — extension character fetch, ``"index"``/``"onehot"``
+  (default: index under interpret, onehot compiled — see ``kernel.py``).
+* ``ext_stride`` — characters fetched per extend trip (index mode).
+* ``band_cap`` — compacting-band width; lane-aligned here (rounded up to
+  128) before reaching the kernel, so the compact rings stay legal TPU
+  tiles.  None = full width.
 """
 from __future__ import annotations
 
@@ -17,6 +31,7 @@ from repro.core import scoring
 from repro.kernels.wfa.kernel import wfa_pallas
 
 LANE = 128
+DEFAULT_BLOCK_PAIRS = 8
 
 
 def _round_up(v: int, m: int) -> int:
@@ -32,9 +47,46 @@ def _pad_axis(x, axis: int, to: int, value=0):
     return jnp.pad(x, widths, constant_values=value)
 
 
+def resolve_block_pairs(block_pairs: Optional[int]) -> int:
+    """Auto-default for pairs-per-grid-program (one int32 sublane tile)."""
+    if block_pairs is None:
+        return DEFAULT_BLOCK_PAIRS
+    bp = int(block_pairs)
+    if bp < 1:
+        raise ValueError(f"block_pairs must be >= 1, got {block_pairs}")
+    return bp
+
+
+def _band_lanes(band_cap, k_pad: int) -> Optional[int]:
+    """Lane-aligned compact ring width, or None for full width."""
+    if band_cap is None:
+        return None
+    kc = _round_up(max(int(band_cap), 1), LANE)
+    return kc if kc < k_pad else None
+
+
+def _prep(pattern, text, plen, tlen, block_pairs):
+    pattern = jnp.asarray(pattern, jnp.int32)
+    text = jnp.asarray(text, jnp.int32)
+    plen = jnp.asarray(plen, jnp.int32).reshape(-1)
+    tlen = jnp.asarray(tlen, jnp.int32).reshape(-1)
+    B, Lp = pattern.shape
+    Lt = text.shape[1]
+    Bp = _round_up(max(B, 1), block_pairs)
+    pattern = _pad_axis(_pad_axis(pattern, 1, _round_up(max(Lp, 1), LANE)),
+                        0, Bp)
+    text = _pad_axis(_pad_axis(text, 1, _round_up(max(Lt, 1), LANE)), 0, Bp)
+    # padded pairs have plen = tlen = 0 -> score 0 at s = 0, no extra trips
+    plen2 = _pad_axis(plen[:, None], 0, Bp)
+    tlen2 = _pad_axis(tlen[:, None], 0, Bp)
+    return pattern, text, plen2, tlen2, B
+
+
 def wfa_align(pattern, text, plen, tlen, *, pen, s_max: int,
-              k_max: int, block_pairs: int = 8,
-              interpret: Optional[bool] = None, heur=None):
+              k_max: int, block_pairs: Optional[int] = None,
+              interpret: Optional[bool] = None, heur=None,
+              gather: Optional[str] = None, ext_stride: int = 1,
+              band_cap: Optional[int] = None):
     """Batched WFA scores via the Pallas kernel.
 
     pattern/text: [B, L*] int; plen/tlen: [B] int.  Returns [B] int32 costs
@@ -42,70 +94,48 @@ def wfa_align(pattern, text, plen, tlen, *, pen, s_max: int,
     ``PenaltyModel`` (or a legacy ``Penalties`` triple) and ``heur`` an
     optional ``WavefrontHeuristic``; both specialize the kernel statically.
     ``interpret`` defaults to True off-TPU (CPU validation) and False on
-    TPU.
+    TPU; the remaining knobs are documented in the module docstring.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    pattern = jnp.asarray(pattern, jnp.int32)
-    text = jnp.asarray(text, jnp.int32)
-    plen = jnp.asarray(plen, jnp.int32).reshape(-1)
-    tlen = jnp.asarray(tlen, jnp.int32).reshape(-1)
-
-    B, Lp = pattern.shape
-    Lt = text.shape[1]
-    Bp = _round_up(max(B, 1), block_pairs)
-    Lp_p = _round_up(max(Lp, 1), LANE)
-    Lt_p = _round_up(max(Lt, 1), LANE)
+    bp = resolve_block_pairs(block_pairs)
+    pattern, text, plen2, tlen2, B = _prep(pattern, text, plen, tlen, bp)
     k_pad = _round_up(2 * k_max + 1, LANE)
 
-    pattern = _pad_axis(_pad_axis(pattern, 1, Lp_p), 0, Bp)
-    text = _pad_axis(_pad_axis(text, 1, Lt_p), 0, Bp)
-    # padded pairs have plen = tlen = 0 -> score 0 at s = 0, no extra trips
-    plen2 = _pad_axis(plen[:, None], 0, Bp)
-    tlen2 = _pad_axis(tlen[:, None], 0, Bp)
-
     score, _ = wfa_pallas(pattern, text, plen2, tlen2, pen=pen, s_max=s_max,
-                          k_pad=k_pad, block_pairs=block_pairs,
-                          interpret=interpret,
-                          heur=scoring.as_heuristic(heur))
+                          k_pad=k_pad, block_pairs=bp, interpret=interpret,
+                          heur=scoring.as_heuristic(heur), gather=gather,
+                          ext_stride=ext_stride,
+                          band_cap=_band_lanes(band_cap, k_pad))
     return score[:B, 0]
 
 
 def wfa_align_trace(pattern, text, plen, tlen, *, pen, s_max: int,
-                    k_max: int, block_pairs: int = 8,
-                    interpret: Optional[bool] = None, heur=None):
+                    k_max: int, block_pairs: Optional[int] = None,
+                    interpret: Optional[bool] = None, heur=None,
+                    gather: Optional[str] = None, ext_stride: int = 1,
+                    band_cap: Optional[int] = None):
     """Batched WFA scores *plus* packed backtrace via the Pallas kernel.
 
     Same padding contract as :func:`wfa_align`; returns
     ``(score [B], m_bt, i_bt, d_bt)`` where the bt arrays are
     ``[n_words, B, k_pad]`` int32 packed 2-bit provenance words
     (``core.cigar.traceback_packed_batch`` decodes them; the diagonal
-    center is ``k_pad // 2``).  Linear penalty models record a single M
-    plane: ``i_bt = d_bt = None``.
+    center is ``k_pad // 2`` — under a compacting band the codes are
+    scattered back to absolute k in-kernel, so the decoder is unchanged).
+    Linear penalty models record a single M plane: ``i_bt = d_bt = None``.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    pattern = jnp.asarray(pattern, jnp.int32)
-    text = jnp.asarray(text, jnp.int32)
-    plen = jnp.asarray(plen, jnp.int32).reshape(-1)
-    tlen = jnp.asarray(tlen, jnp.int32).reshape(-1)
-
-    B, Lp = pattern.shape
-    Lt = text.shape[1]
-    Bp = _round_up(max(B, 1), block_pairs)
-    Lp_p = _round_up(max(Lp, 1), LANE)
-    Lt_p = _round_up(max(Lt, 1), LANE)
+    bp = resolve_block_pairs(block_pairs)
+    pattern, text, plen2, tlen2, B = _prep(pattern, text, plen, tlen, bp)
     k_pad = _round_up(2 * k_max + 1, LANE)
-
-    pattern = _pad_axis(_pad_axis(pattern, 1, Lp_p), 0, Bp)
-    text = _pad_axis(_pad_axis(text, 1, Lt_p), 0, Bp)
-    plen2 = _pad_axis(plen[:, None], 0, Bp)
-    tlen2 = _pad_axis(tlen[:, None], 0, Bp)
 
     out = wfa_pallas(
         pattern, text, plen2, tlen2, pen=pen, s_max=s_max, k_pad=k_pad,
-        block_pairs=block_pairs, interpret=interpret, trace=True,
-        heur=scoring.as_heuristic(heur))
+        block_pairs=bp, interpret=interpret, trace=True,
+        heur=scoring.as_heuristic(heur), gather=gather,
+        ext_stride=ext_stride, band_cap=_band_lanes(band_cap, k_pad))
     if scoring.as_model(pen).kind == "linear":
         score, _, m_bt = out
         return score[:B, 0], m_bt[:, :B, :], None, None
@@ -115,3 +145,51 @@ def wfa_align_trace(pattern, text, plen, tlen, *, pen, s_max: int,
 
 def wfa_align_np(pattern, text, plen, tlen, **kw):
     return np.asarray(wfa_align(pattern, text, plen, tlen, **kw))
+
+
+def wfa_bidir_meet_kernel(pattern, text, plen, tlen, starget, *, pen,
+                          s_max: int, k_max: int, heur=None,
+                          begin_state: str = "M", end_state: str = "M",
+                          block_pairs: Optional[int] = None,
+                          interpret: Optional[bool] = None):
+    """Device-resident BiWFA meet search via the fused Pallas grid.
+
+    Drop-in for ``core.wavefront.wfa_bidir_meet`` (same signature and
+    ``BidirMeetResult``), selected by the ``kernel`` backend for
+    ``trace_variant="bidir"`` meet waves: both fronts' rings live in VMEM
+    scratch and each grid program exits as soon as its own block's pairs
+    have met, instead of the jnp solver's whole-batch early-exit.  The
+    meet detector's per-pair ring reads are real gathers, so the fused
+    grid is interpret-mode only for now — compiled TPU runs delegate to
+    the jnp solver (same results, already fully jitted).
+    """
+    from repro.core.wavefront import BidirMeetResult, _reverse_rows
+    from repro.core import wavefront as _wf
+    from repro.kernels.wfa.kernel import wfa_meet_pallas
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if not interpret:
+        return _wf.wfa_bidir_meet(pattern, text, plen, tlen, starget,
+                                  pen=pen, s_max=s_max, k_max=k_max,
+                                  heur=heur, begin_state=begin_state,
+                                  end_state=end_state)
+    bp = resolve_block_pairs(block_pairs)
+    pattern2, text2, plen2, tlen2, B = _prep(pattern, text, plen, tlen, bp)
+    starget2 = _pad_axis(
+        jnp.asarray(starget, jnp.int32).reshape(-1)[:, None], 0,
+        pattern2.shape[0])
+    k_pad = _round_up(2 * k_max + 1, LANE)
+    pat_rev = _reverse_rows(pattern2, plen2[:, 0])
+    txt_rev = _reverse_rows(text2, tlen2[:, 0])
+
+    (score, steps, state, a, b, k, h,
+     safe) = wfa_meet_pallas(pattern2, text2, pat_rev, txt_rev, plen2,
+                             tlen2, starget2, pen=pen, s_max=s_max,
+                             k_pad=k_pad, block_pairs=bp,
+                             interpret=interpret,
+                             heur=scoring.as_heuristic(heur),
+                             begin_state=begin_state, end_state=end_state)
+    return BidirMeetResult(score[:B, 0], jnp.max(steps), state[:B, 0],
+                           a[:B, 0], b[:B, 0], k[:B, 0], h[:B, 0],
+                           safe[:B, 0])

@@ -14,10 +14,11 @@ from repro.core.wavefront import wfa_scores
 
 
 def ref_scores(pattern, text, plen, tlen, *, pen: Penalties, s_max: int,
-               k_max: int):
+               k_max: int, heur=None, band_cap=None):
     """[B] int32 alignment costs (-1 where > s_max)."""
     res = wfa_scores(jnp.asarray(pattern), jnp.asarray(text),
                      jnp.asarray(plen).reshape(-1),
                      jnp.asarray(tlen).reshape(-1),
-                     pen=pen, s_max=s_max, k_max=k_max)
+                     pen=pen, s_max=s_max, k_max=k_max, heur=heur,
+                     band_cap=band_cap)
     return res.score
