@@ -53,12 +53,16 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,scaling,transfer,"
                          "cigar,scoring,mapping,serving,longread,kernelgap,"
-                         "wfa_ops,lm")
+                         "wfa_ops,lm,obs")
     ap.add_argument("--pairs", type=int, default=8192)
     ap.add_argument("--json", nargs="?", const="auto", default=None,
                     metavar="PATH",
                     help="also write a JSON snapshot (default "
                          "results/perf/BENCH_<timestamp>.json)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="run the suites with tracing enabled and write "
+                         "one Chrome trace-event JSON timeline (open in "
+                         "ui.perfetto.dev)")
     args = ap.parse_args(argv)
     want = set(args.only.split(",")) if args.only else None
 
@@ -114,18 +118,34 @@ def main(argv=None) -> int:
     if want is None or "lm" in want:
         from benchmarks import lm_substrate
         suites.append(("lm", lm_substrate.run))
+    if want is None or "obs" in want:
+        if args.trace_out:
+            # the obs suite toggles and resets the global tracer to
+            # measure its own overhead — under --trace-out it would wipe
+            # the other suites' timeline
+            print("# skipping obs suite under --trace-out",
+                  file=sys.stderr)
+        else:
+            from benchmarks import obs_overhead
+            suites.append(("obs",
+                           lambda: obs_overhead.run(
+                               pairs=min(args.pairs, 4096))))
 
     rows = []
     failed = []
     rc = 0
-    for name, fn in suites:
-        try:
-            rows.extend(fn())
-        except Exception:
-            print(f"# suite {name} FAILED:", file=sys.stderr)
-            traceback.print_exc()
-            failed.append(name)
-            rc = 1
+    from repro import obs
+    with obs.capture_trace(args.trace_out):
+        for name, fn in suites:
+            try:
+                rows.extend(fn())
+            except Exception:
+                print(f"# suite {name} FAILED:", file=sys.stderr)
+                traceback.print_exc()
+                failed.append(name)
+                rc = 1
+    if args.trace_out:
+        print(f"# trace -> {args.trace_out}", file=sys.stderr)
     emit(rows)
     if args.json is not None:
         path = _write_json(args.json, rows, argv, failed)

@@ -38,6 +38,8 @@ import numpy as np
 
 from repro.core import gotoh
 from repro.core.engine import _round_up, pack_batch
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 __all__ = ["BidirDriver", "DEFAULT_TRACE_BUDGET"]
 
@@ -54,7 +56,7 @@ class _Seg:
     parent ticket's packed rows)."""
     __slots__ = ("row", "p_lo", "p_hi", "t_lo", "t_hi", "cost", "begin",
                  "end", "parent", "left", "right", "ops", "pending",
-                 "fallback", "done")
+                 "fallback", "done", "depth")
 
     def __init__(self, row, p_lo, p_hi, t_lo, t_hi, cost, begin, end,
                  parent=None):
@@ -64,6 +66,7 @@ class _Seg:
         self.cost = cost          # forward-convention cost of this segment
         self.begin, self.end = begin, end
         self.parent = parent
+        self.depth = 0 if parent is None else parent.depth + 1
         self.left = self.right = None
         self.ops: Optional[np.ndarray] = None
         self.pending = 0          # unresolved children (0 or 2)
@@ -101,28 +104,14 @@ class BidirDriver:
         self.sess.submit_packed(
             self._p, self._plen, self._t, self._tlen, output="score",
             penalties=t.pen, heuristic=t.heur, trace_variant="packed",
-            _internal=True, _on_done=self._phase0_done)
+            _internal=True, _on_done=self._phase0_done, _flows=t.flows)
 
     def _merge_stats(self, child) -> None:
         """Fold an internal child ticket's telemetry into the parent's, so
         the bidir result reports the full cost (and the trace-memory
-        high-water mark) of its whole recursion."""
-        ps, cs = self.ticket.stats, child.stats
-        ps.buckets.extend(cs.buckets)
-        ps.n_overflow += cs.n_overflow
-        ps.n_recovered += cs.n_recovered
-        ps.cache_hits += cs.cache_hits
-        ps.cache_misses += cs.cache_misses
-        ps.n_traces += cs.n_traces
-        ps.rows_real += cs.rows_real
-        ps.rows_padded += cs.rows_padded
-        ps.bytes_in += cs.bytes_in
-        ps.bytes_out += cs.bytes_out
-        ps.t_scatter += cs.t_scatter
-        ps.t_kernel += cs.t_kernel
-        ps.t_gather += cs.t_gather
-        ps.n_meet_unmet += cs.n_meet_unmet
-        ps.peak_trace_bytes = max(ps.peak_trace_bytes, cs.peak_trace_bytes)
+        high-water mark) of its whole recursion.  ``count_pairs=False``:
+        the children's rows re-process pairs the parent already counted."""
+        self.ticket.stats.merge(child.stats, count_pairs=False)
 
     def _phase0_done(self, st) -> None:
         self._merge_stats(st)
@@ -175,20 +164,28 @@ class BidirDriver:
                     p, plen, tx, tlen, output="cigar", penalties=t.pen,
                     heuristic=t.heur, trace_variant="packed", meta=segs,
                     _s_cap=cap, _states=(b, e), _internal=True,
-                    _on_done=self._cigar_done)
+                    _on_done=self._cigar_done, _flows=t.flows)
             else:
                 cap = _round_up((int(costs.max(initial=0)) + self.o) // 2
                                 + self.wd + 2, 32)
                 self.sess.submit_packed(
                     p, plen, tx, tlen, penalties=t.pen, heuristic=t.heur,
                     meta=segs, _starget=costs, _s_cap=cap, _states=(b, e),
-                    _internal=True, _on_done=self._meet_done)
+                    _internal=True, _on_done=self._meet_done,
+                    _flows=t.flows)
 
     # -- child completions ---------------------------------------------------
 
     def _meet_done(self, mt) -> None:
         self._merge_stats(mt)
         segs: List[_Seg] = mt.meta
+        with obs_trace.span("bidir.split", cat="biwfa",
+                            args={"segments": len(segs)}
+                            if obs_trace.enabled() else None):
+            self._split_segs(mt, segs)
+        self._flush()
+
+    def _split_segs(self, mt, segs: List[_Seg]) -> None:
         for i, seg in enumerate(segs):
             state = int(mt._meet[i, 0])
             a = int(mt._meet[i, 1])
@@ -212,18 +209,25 @@ class BidirDriver:
                          seg.end, parent=seg)
             seg.left, seg.right = left, right
             seg.pending = 2
+            obs_metrics.counter("bidir_splits_total",
+                                "BiWFA segments split at a meet "
+                                "breakpoint").inc()
+            obs_trace.counter("bidir_recursion_depth", left.depth,
+                              cat="biwfa")
             self._classify(left)
             self._classify(right)
-        self._flush()
 
     def _cigar_done(self, ct) -> None:
         self._merge_stats(ct)
         segs: List[_Seg] = ct.meta
-        for i, seg in enumerate(segs):
-            if int(ct._scores[i]) < 0:
-                self._fallback(seg)
-                continue
-            self._resolve(seg, ct._cigars[i])
+        with obs_trace.span("bidir.stitch", cat="biwfa",
+                            args={"segments": len(segs)}
+                            if obs_trace.enabled() else None):
+            for i, seg in enumerate(segs):
+                if int(ct._scores[i]) < 0:
+                    self._fallback(seg)
+                    continue
+                self._resolve(seg, ct._cigars[i])
         self._flush()
 
     def _fallback(self, seg: _Seg) -> None:

@@ -78,6 +78,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import cigar as cigar_mod
 from repro.core import scoring
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.core import wavefront as wf
 from repro.core.backends import BackendSpec, get_backend, _accepts_kw
 from repro.core.penalties import DEFAULT
@@ -247,6 +249,28 @@ class EngineStats:
     n_bidir_fallback: int = 0  # segments re-run via packed traceback
     peak_trace_bytes: int = 0  # largest trace buffer gathered for one wave
                                # (the resident trace-memory high-water mark)
+
+    def merge(self, other: "EngineStats", *,
+              count_pairs: bool = True) -> "EngineStats":
+        """Fold ``other``'s telemetry into this one, in place -> self.
+
+        Additive fields sum, ``buckets`` extend, high-water marks max.
+        ``count_pairs=False`` skips ``n_pairs`` — for aggregating child
+        tickets (BiWFA sub-problems, mapper extension rounds) whose rows
+        re-process pairs the parent already counted.
+        """
+        if count_pairs:
+            self.n_pairs += other.n_pairs
+        self.n_workers = max(self.n_workers, other.n_workers)
+        self.buckets.extend(other.buckets)
+        for f in ("n_overflow", "n_recovered", "cache_hits", "cache_misses",
+                  "n_traces", "rows_real", "rows_padded", "bytes_in",
+                  "bytes_out", "t_scatter", "t_kernel", "t_gather",
+                  "n_meet_unmet", "n_bidir_fallback"):
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+        self.peak_trace_bytes = max(self.peak_trace_bytes,
+                                    other.peak_trace_bytes)
+        return self
 
     @property
     def n_buckets(self) -> int:
@@ -655,7 +679,16 @@ class AlignmentEngine:
                opts)
         exe = self._cache.get(key)
         if exe is not None:
+            obs_metrics.counter("engine_cache_hits_total",
+                                "executable cache hits").inc()
             return exe, True
+        obs_metrics.counter("engine_cache_misses_total",
+                            "executable cache misses (fresh XLA trace "
+                            "on first call)").inc()
+        if obs_trace.enabled():
+            obs_trace.instant("engine.retrace", args={
+                "backend": spec.name, "shape": list(pshape),
+                "s_max": s_max, "k_max": k_max, "output": output})
         exe = _Executable(spec, pen, s_max, k_max, self.mesh, output, heur,
                           states, opts)
         self._cache[key] = exe

@@ -60,6 +60,9 @@ from repro.core import cigar as cigar_mod
 from repro.core.engine import (AlignmentEngine, BucketInfo, EngineResult,
                                EngineStats, Seq, _fit_width, _pad_rows,
                                _quantize_rows, _round_up, pack_batch)
+from repro.obs import metrics as obs_metrics
+from repro.obs import profile as obs_profile
+from repro.obs import trace as obs_trace
 
 __all__ = ["AlignmentSession", "SessionStats", "Ticket", "run_streamed"]
 
@@ -109,6 +112,13 @@ class Ticket:
         # poll()/as_completed()/results(); on_done fires at finalization
         self.internal = internal
         self._on_done = on_done
+        # trace-flow IDs riding this ticket: each connects one logical
+        # request's spans (submit -> dispatch -> kernel -> retire -> done)
+        # across threads.  _own_flows marks IDs this ticket allocated (it
+        # ends them at finalize); externally-passed flows (serve requests,
+        # BiWFA parents) are only stepped.
+        self.flows: tuple = ()
+        self._own_flows = False
         self.stats = EngineStats(n_pairs=n_pairs, n_workers=eng.n_workers)
         self._session = session
         self._scores = np.full((n_pairs,), -1, np.int32)
@@ -265,7 +275,8 @@ class AlignmentSession:
                       penalties=None, heuristic=None, meta=None,
                       trace_variant: Optional[str] = None,
                       _s_cap=None, _states=("M", "M"), _starget=None,
-                      _internal: bool = False, _on_done=None) -> Ticket:
+                      _internal: bool = False, _on_done=None,
+                      _flows=None) -> Ticket:
         """Enqueue pre-packed [B, L] codes + [B] lens; returns immediately.
 
         The underscore keywords are the BiWFA driver's internal seam
@@ -273,6 +284,9 @@ class AlignmentSession:
         session so they batch with live traffic.  ``_starget`` (known
         per-pair costs) flips the ticket to the engine-level
         ``"bidir_meet"`` output — a breakpoint wave, not a score/trace one.
+        ``_flows`` hands the ticket externally-owned trace-flow IDs (serve
+        requests, BiWFA parent tickets) to step through its spans instead
+        of allocating its own.
         """
         with self._lock:
             self._check_open()
@@ -291,34 +305,50 @@ class AlignmentSession:
                             states=_states, s_cap=_s_cap,
                             internal=_internal, on_done=_on_done)
             self._tickets.append(ticket)
+            if _flows is not None:
+                ticket.flows = tuple(_flows)
+            elif obs_trace.enabled():
+                # one flow per ticket: the arrow chain a Perfetto timeline
+                # draws from this submit through every wave to finalize
+                ticket.flows = (obs_trace.new_flow(),)
+                ticket._own_flows = True
             if not _internal:
                 self.stats.n_submits += 1
                 self.stats.n_pairs += n
-            if n == 0:
-                self._finalize(ticket)
+            with obs_trace.span(
+                    "session.submit", cat="session",
+                    args={"ticket": ticket.index, "pairs": n, "output": out}
+                    if obs_trace.enabled() else None) as sp:
+                for fid in ticket.flows:
+                    (sp.flow_start if ticket._own_flows
+                     else sp.flow_step)(fid)
+                if n == 0:
+                    self._finalize(ticket)
+                    return ticket
+                ticket._p = np.asarray(p)
+                ticket._t = np.asarray(t)
+                ticket._plen = np.asarray(plen, np.int32)
+                ticket._tlen = np.asarray(tlen, np.int32)
+                if _starget is not None:
+                    ticket._starget = np.asarray(_starget, np.int32)
+                if tv == "bidir" and out == "cigar" and not _internal:
+                    # meet-in-the-middle traceback: a host-side driver owns
+                    # this ticket — it resolves scores first, then
+                    # recursively splits each pair via breakpoint waves and
+                    # internal sub-tickets, all batched through this same
+                    # session
+                    from repro.biwfa.recurse import BidirDriver
+                    BidirDriver(self, ticket).start()
+                    return ticket
+                eng = self.engine
+                # capped tickets (BiWFA children) are single-pass: the cap
+                # is already an exact bound, so skip the optimistic first
+                # pass
+                optimistic = (eng.edit_frac is not None
+                              and eng._s_max is None and _s_cap is None)
+                self._enqueue_pass(ticket, np.arange(n),
+                                   exact=not optimistic, recovery=False)
                 return ticket
-            ticket._p = np.asarray(p)
-            ticket._t = np.asarray(t)
-            ticket._plen = np.asarray(plen, np.int32)
-            ticket._tlen = np.asarray(tlen, np.int32)
-            if _starget is not None:
-                ticket._starget = np.asarray(_starget, np.int32)
-            if tv == "bidir" and out == "cigar" and not _internal:
-                # meet-in-the-middle traceback: a host-side driver owns this
-                # ticket — it resolves scores first, then recursively splits
-                # each pair via breakpoint waves and internal sub-tickets,
-                # all batched through this same session
-                from repro.biwfa.recurse import BidirDriver
-                BidirDriver(self, ticket).start()
-                return ticket
-            eng = self.engine
-            # capped tickets (BiWFA children) are single-pass: the cap is
-            # already an exact bound, so skip the optimistic first pass
-            optimistic = (eng.edit_frac is not None and eng._s_max is None
-                          and _s_cap is None)
-            self._enqueue_pass(ticket, np.arange(n), exact=not optimistic,
-                               recovery=False)
-            return ticket
 
     def _enqueue_pass(self, ticket: Ticket, idx: np.ndarray, *, exact: bool,
                       recovery: bool) -> None:
@@ -352,83 +382,115 @@ class AlignmentSession:
         while len(self._inflight) >= self.max_inflight:
             self._retire_one()
         eng = self.engine
-        t0 = time.perf_counter()
-        # quantized for cache reuse, but never above the per-wave memory cap
-        nb = min(_quantize_rows(len(rows), eng.n_workers),
-                 _round_up(self.wave_pairs, eng.n_workers))
-        pc = _pad_rows(_fit_width(ticket._p[rows], width), nb)
-        tc = _pad_rows(_fit_width(ticket._t[rows], width), nb)
-        plc = _pad_rows(ticket._plen[rows], nb)
-        tlc = _pad_rows(ticket._tlen[rows], nb)
-        arrays = [pc, tc, plc, tlc]
-        if ticket.output == "bidir_meet":
-            # breakpoint waves carry each pair's known cost as a 5th input
-            arrays.append(_pad_rows(ticket._starget[rows], nb))
-        exe, hit = eng._executable_for(pc.shape, tc.shape, s_max, k_max,
-                                       ticket.output, pen=ticket.pen,
-                                       heur=ticket.heur,
-                                       states=ticket.states)
-        for st in (ticket.stats, self.stats):
-            if hit:
-                st.cache_hits += 1
-            else:
-                st.cache_misses += 1
-            st.bytes_in += pc.nbytes + tc.nbytes + plc.nbytes + tlc.nbytes
-        for st in (ticket.stats, self.stats):
-            st.rows_real += len(rows)
-            st.rows_padded += nb
-        pre = exe.n_traces
-        try:
-            dev = eng._device_put(*arrays)
-            if self._sync:
-                jax.block_until_ready(dev)
-                t1 = time.perf_counter()
-                for st in (ticket.stats, self.stats):
-                    st.t_scatter += t1 - t0
-            res = exe.call(*dev)
-            if self._sync:
-                res.score.block_until_ready()
-                t2 = time.perf_counter()
-                for st in (ticket.stats, self.stats):
-                    st.t_kernel += t2 - t1
-            else:
-                # async: pack + enqueue cost only; the copy and kernel are
-                # both still in flight behind this wave
-                t1 = time.perf_counter()
-                for st in (ticket.stats, self.stats):
-                    st.t_scatter += t1 - t0
-        except Exception as e:
-            self._error = e
-            self._abandon_inflight()
-            raise
-        n_tr = exe.n_traces - pre
-        for st in (ticket.stats, self.stats):
-            st.n_traces += n_tr
-        keep = ticket.output == "cigar"
-        self._inflight.append(_Wave(ticket, rows, res, plc, tlc, k_max,
-                                    recovery,
-                                    pc=pc if keep else None,
-                                    tc=tc if keep else None))
+        with obs_trace.span(
+                "wave.scatter", cat="wave",
+                args={"ticket": ticket.index, "rows": len(rows),
+                      "width": width, "s_max": s_max,
+                      "recovery": recovery}
+                if obs_trace.enabled() else None) as sp:
+            for fid in ticket.flows:
+                sp.flow_step(fid)
+            t0 = time.perf_counter()
+            # quantized for cache reuse, but never above the per-wave
+            # memory cap
+            nb = min(_quantize_rows(len(rows), eng.n_workers),
+                     _round_up(self.wave_pairs, eng.n_workers))
+            pc = _pad_rows(_fit_width(ticket._p[rows], width), nb)
+            tc = _pad_rows(_fit_width(ticket._t[rows], width), nb)
+            plc = _pad_rows(ticket._plen[rows], nb)
+            tlc = _pad_rows(ticket._tlen[rows], nb)
+            arrays = [pc, tc, plc, tlc]
+            if ticket.output == "bidir_meet":
+                # breakpoint waves carry each pair's known cost as a 5th
+                # input
+                arrays.append(_pad_rows(ticket._starget[rows], nb))
+            exe, hit = eng._executable_for(pc.shape, tc.shape, s_max, k_max,
+                                           ticket.output, pen=ticket.pen,
+                                           heur=ticket.heur,
+                                           states=ticket.states)
+            for st in (ticket.stats, self.stats):
+                if hit:
+                    st.cache_hits += 1
+                else:
+                    st.cache_misses += 1
+                st.bytes_in += (pc.nbytes + tc.nbytes + plc.nbytes
+                                + tlc.nbytes)
+            for st in (ticket.stats, self.stats):
+                st.rows_real += len(rows)
+                st.rows_padded += nb
+            pre = exe.n_traces
+            try:
+                with obs_profile.annotation("wfa.kernel.dispatch"):
+                    dev = eng._device_put(*arrays)
+                    if self._sync:
+                        jax.block_until_ready(dev)
+                        t1 = time.perf_counter()
+                        for st in (ticket.stats, self.stats):
+                            st.t_scatter += t1 - t0
+                    res = exe.call(*dev)
+                if self._sync:
+                    res.score.block_until_ready()
+                    t2 = time.perf_counter()
+                    for st in (ticket.stats, self.stats):
+                        st.t_kernel += t2 - t1
+                else:
+                    # async: pack + enqueue cost only; the copy and kernel
+                    # are both still in flight behind this wave
+                    t1 = time.perf_counter()
+                    for st in (ticket.stats, self.stats):
+                        st.t_scatter += t1 - t0
+            except Exception as e:
+                self._error = e
+                self._abandon_inflight()
+                raise
+            n_tr = exe.n_traces - pre
+            for st in (ticket.stats, self.stats):
+                st.n_traces += n_tr
+            keep = ticket.output == "cigar"
+            self._inflight.append(_Wave(ticket, rows, res, plc, tlc, k_max,
+                                        recovery,
+                                        pc=pc if keep else None,
+                                        tc=tc if keep else None))
         self.stats.n_waves += 1
         self.stats.peak_inflight = max(self.stats.peak_inflight,
                                        len(self._inflight))
+        self._sample_inflight()
         if self._sync:
             self._retire_one()
 
     # -- retirement ----------------------------------------------------------
 
+    def _sample_inflight(self) -> None:
+        """Record the in-flight wave count on the gauge + counter track."""
+        n = len(self._inflight)
+        obs_metrics.gauge("session_inflight_waves",
+                          "waves dispatched but not yet retired").set(n)
+        obs_trace.counter("inflight_waves", n, cat="session")
+
     def _retire_one(self) -> None:
         """Gather the oldest in-flight wave and scatter its results."""
         wave = self._inflight.popleft()
         ticket = wave.ticket
+        self._sample_inflight()
+        _on = obs_trace.enabled()
+        _args = ({"ticket": ticket.index, "rows": len(wave.rows),
+                  "recovery": wave.recovery} if _on else None)
         t0 = time.perf_counter()
-        try:
-            wave.res.score.block_until_ready()
-        except Exception as e:
-            self._error = e
-            self._abandon_inflight()
-            raise
+        with obs_trace.span("wave.kernel", cat="wave", args=_args) as sp:
+            for fid in ticket.flows:
+                sp.flow_step(fid)
+            try:
+                with obs_profile.annotation("wfa.kernel.wait"):
+                    wave.res.score.block_until_ready()
+            except Exception as e:
+                self._error = e
+                self._abandon_inflight()
+                raise
         t1 = time.perf_counter()
+        sp = obs_trace.span("wave.gather", cat="wave", args=_args)
+        sp.__enter__()
+        for fid in ticket.flows:
+            sp.flow_step(fid)
         full = np.asarray(wave.res.score)
         out = full[: len(wave.rows)]
         steps = int(wave.res.n_steps)
@@ -452,20 +514,26 @@ class AlignmentSession:
             n_unmet = int((out < 0).sum())
             for st in (ticket.stats, self.stats):
                 st.n_meet_unmet += n_unmet
+        sp.__exit__(None, None, None)        # close the gather span
         if ticket._cigars is not None:
-            t3 = time.perf_counter()
-            ops = cigar_mod.traceback_result(
-                wave.res, ticket.pen, pattern=wave.pc, text=wave.tc,
-                plen=wave.plc, tlen=wave.tlc, k_max=wave.k_max,
-                begin_state=ticket.states[0], end_state=ticket.states[1])
-            dt = time.perf_counter() - t3
-            nbytes = cigar_mod.trace_nbytes(wave.res)
-            for st in (ticket.stats, self.stats):
-                st.t_gather += dt
-                st.bytes_out += nbytes
-                st.peak_trace_bytes = max(st.peak_trace_bytes, nbytes)
-            for j, orig in enumerate(wave.rows):
-                ticket._cigars[int(orig)] = ops[j]
+            with obs_trace.span("wave.traceback", cat="wave",
+                                args=_args) as tsp:
+                for fid in ticket.flows:
+                    tsp.flow_step(fid)
+                t3 = time.perf_counter()
+                ops = cigar_mod.traceback_result(
+                    wave.res, ticket.pen, pattern=wave.pc, text=wave.tc,
+                    plen=wave.plc, tlen=wave.tlc, k_max=wave.k_max,
+                    begin_state=ticket.states[0],
+                    end_state=ticket.states[1])
+                dt = time.perf_counter() - t3
+                nbytes = cigar_mod.trace_nbytes(wave.res)
+                for st in (ticket.stats, self.stats):
+                    st.t_gather += dt
+                    st.bytes_out += nbytes
+                    st.peak_trace_bytes = max(st.peak_trace_bytes, nbytes)
+                for j, orig in enumerate(wave.rows):
+                    ticket._cigars[int(orig)] = ops[j]
 
         eng = self.engine
         optimistic = (eng.edit_frac is not None and eng._s_max is None
@@ -480,6 +548,14 @@ class AlignmentSession:
             if len(overflow):
                 for st in (ticket.stats, self.stats):
                     st.n_overflow += len(overflow)
+                obs_metrics.counter("session_overflow_pairs_total",
+                                    "pairs past the optimistic bound, "
+                                    "queued for exact re-run"
+                                    ).inc(len(overflow))
+                if obs_trace.enabled():
+                    obs_trace.instant("session.overflow", cat="session",
+                                      args={"ticket": ticket.index,
+                                            "rows": len(overflow)})
                 if eng.adaptive:
                     # recycle into the recovery queue rather than blocking
                     # the pipeline for one straggler
@@ -537,6 +613,14 @@ class AlignmentSession:
                                       approximate=not ticket.heur.exact)
         ticket._p = ticket._t = ticket._plen = ticket._tlen = None
         ticket._done = True
+        if ticket._own_flows and ticket.flows:
+            # terminate the arrow chain: a zero-length span hosts the flow
+            # end so viewers bind the arrowhead to this thread's timeline
+            with obs_trace.span("session.ticket_done", cat="session",
+                                args={"ticket": ticket.index}
+                                if obs_trace.enabled() else None) as sp:
+                for fid in ticket.flows:
+                    sp.flow_end(fid)
         if ticket.internal:
             # BiWFA sub-problem: hand the result to the driver (which may
             # re-enter submit_packed — the lock is re-entrant) instead of
@@ -552,6 +636,11 @@ class AlignmentSession:
             if t._recovery_rows:
                 rows = np.concatenate(t._recovery_rows)
                 t._recovery_rows = []
+                if obs_trace.enabled():
+                    obs_trace.instant("session.recovery_flush",
+                                      cat="session",
+                                      args={"ticket": t.index,
+                                            "rows": len(rows)})
                 self._enqueue_pass(t, rows, exact=True, recovery=True)
 
     # -- gather --------------------------------------------------------------

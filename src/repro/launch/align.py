@@ -43,6 +43,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.configs import wfa_paper
 from repro.core import cigar as cigar_mod
 from repro.core import scoring
@@ -145,6 +146,11 @@ def main(argv=None):
                     help="cross-check N scores (and CIGAR re-scores) "
                          "against the Gotoh oracle")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="capture the measured runs as Chrome trace-event "
+                         "JSON (open in ui.perfetto.dev)")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="wrap the measured runs in jax.profiler.trace")
     args = ap.parse_args(argv)
 
     pen = (scoring.parse_penalties(args.penalties)
@@ -201,14 +207,19 @@ def main(argv=None):
                             output=out_mode)
 
     runs = []
-    if args.mode in ("sync", "both"):
-        runs.append(("sync", _run_sync(engine, P, plen, T, tlen, out_mode)))
-    if args.mode in ("stream", "both"):
-        runs.append(("stream",
-                     run_streamed(engine, P, plen, T, tlen,
-                                  submit_pairs=submit_pairs,
-                                  max_inflight_waves=args.inflight,
-                                  output=out_mode)))
+    with obs.capture_trace(args.trace_out), \
+            obs.profile.profile(args.profile):
+        if args.mode in ("sync", "both"):
+            runs.append(("sync",
+                         _run_sync(engine, P, plen, T, tlen, out_mode)))
+        if args.mode in ("stream", "both"):
+            runs.append(("stream",
+                         run_streamed(engine, P, plen, T, tlen,
+                                      submit_pairs=submit_pairs,
+                                      max_inflight_waves=args.inflight,
+                                      output=out_mode)))
+    if args.trace_out:
+        log(f"[align] trace -> {args.trace_out}")
 
     scores = cigars = None
     for mode, (sc, cg, st, wall) in runs:

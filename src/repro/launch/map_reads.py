@@ -22,6 +22,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.core import scoring
 from repro.core.backends import available_backends, get_backend
 from repro.core.engine import AlignmentEngine
@@ -77,6 +78,11 @@ def main(argv=None):
     ap.add_argument("--cigar-mode", choices=("classic", "extended"),
                     default="classic",
                     help="CIGAR spelling: pre-1.4 M (default) or 1.4 =/X")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="capture the mapping pass as Chrome trace-event "
+                         "JSON (open in ui.perfetto.dev)")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="wrap the mapping pass in jax.profiler.trace")
     args = ap.parse_args(argv)
 
     sam_to_stdout = args.sam_out == "-"
@@ -140,16 +146,21 @@ def main(argv=None):
 
     cl = "repro.launch.map_reads " + " ".join(argv or sys.argv[1:])
     t2 = time.perf_counter()
-    stream = mapper.map_stream(reads, max_inflight_waves=args.inflight)
-    if sam_to_stdout:
-        n_rec = write_sam(sys.stdout, stream, reads, read_names,
-                          index.names, index.lengths, mode=args.cigar_mode,
-                          cl=cl)
-    else:
-        with open(args.sam_out, "w") as f:
-            n_rec = write_sam(f, stream, reads, read_names, index.names,
-                              index.lengths, mode=args.cigar_mode, cl=cl)
+    with obs.capture_trace(args.trace_out), \
+            obs.profile.profile(args.profile):
+        stream = mapper.map_stream(reads, max_inflight_waves=args.inflight)
+        if sam_to_stdout:
+            n_rec = write_sam(sys.stdout, stream, reads, read_names,
+                              index.names, index.lengths,
+                              mode=args.cigar_mode, cl=cl)
+        else:
+            with open(args.sam_out, "w") as f:
+                n_rec = write_sam(f, stream, reads, read_names, index.names,
+                                  index.lengths, mode=args.cigar_mode,
+                                  cl=cl)
     wall = time.perf_counter() - t2
+    if args.trace_out:
+        log(f"[map] trace -> {args.trace_out}")
 
     st = mapper.stats
     log(f"[map] mapped {st.n_mapped}/{st.n_reads} reads "

@@ -28,6 +28,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.core import scoring
 from repro.core.engine import AlignmentEngine
 from repro.data.reads import ArrivalSpec, generate_trace
@@ -65,6 +66,14 @@ def main(argv=None) -> int:
     ap.add_argument("--heuristic", default=None,
                     help="adaptive[:min_len,max_diff] | zdrop:z | none")
     ap.add_argument("--seed", type=int, default=13)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="capture the measured replay as Chrome trace-event"
+                         " JSON (open in ui.perfetto.dev)")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="wrap the measured replay in jax.profiler.trace")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="append one obs.metrics JSONL snapshot after the "
+                         "replay")
     args = ap.parse_args(argv)
 
     pen = (scoring.parse_penalties(args.penalties)
@@ -105,16 +114,24 @@ def main(argv=None) -> int:
                      penalties=pen, heuristic=heur, output=args.output)
     traces0 = eng.cache_traces()
 
-    with ServeLoop(eng, wave_pairs=args.wave_pairs,
-                   form_deadline=args.form_deadline_ms / 1e3,
-                   max_queue_depth=args.queue_depth,
-                   n_threads=args.threads) as server:
+    with obs.capture_trace(args.trace_out), \
+            obs.profile.profile(args.profile), \
+            ServeLoop(eng, wave_pairs=args.wave_pairs,
+                      form_deadline=args.form_deadline_ms / 1e3,
+                      max_queue_depth=args.queue_depth,
+                      n_threads=args.threads) as server:
         report = replay_trace(
             server, payloads, unit_arrivals / rate, penalties=pen,
             heuristic=heur, output=args.output,
             deadline=(None if args.deadline_ms is None
                       else args.deadline_ms / 1e3))
     st = report.stats
+    if args.trace_out:
+        print(f"[serve_align] trace -> {args.trace_out}", file=sys.stderr)
+    if args.metrics_out:
+        obs.metrics.write_jsonl(args.metrics_out)
+        print(f"[serve_align] metrics -> {args.metrics_out}",
+              file=sys.stderr)
 
     print(f"[serve_align] {report.n_ok}/{report.n_requests} served, "
           f"{report.n_shed} shed, {report.n_failed} failed "

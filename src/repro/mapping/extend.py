@@ -42,8 +42,9 @@ import numpy as np
 
 from repro.core import scoring
 from repro.core.cigar import OP_D, OP_I, OP_M
-from repro.core.engine import AlignmentEngine
+from repro.core.engine import AlignmentEngine, EngineStats
 from repro.data.dna import as_ascii, revcomp
+from repro.obs import trace as obs_trace
 from repro.mapping.chain import Chain, candidates
 from repro.mapping.index import MinimizerIndex
 
@@ -93,6 +94,10 @@ class MapperStats:
     n_candidates: int = 0      # chains submitted for extension
     n_unresolved: int = 0      # extensions that came back score == -1
     n_tickets: int = 0
+    # engine-side telemetry aggregated across every extension ticket
+    # (EngineStats.merge per retirement — scatter/kernel/gather time,
+    # cache behaviour, overflow recovery for the whole pass)
+    engine: EngineStats = dataclasses.field(default_factory=EngineStats)
 
     @property
     def n_extensions(self) -> int:
@@ -237,9 +242,12 @@ class ReadMapper:
             for rid, read in enumerate(reads):
                 read = as_ascii(read)
                 stats.n_reads += 1
-                chains = candidates(self.index, read, top_n=self.top_n,
-                                    max_gap=self.max_gap,
-                                    min_score=self.min_chain_score)
+                with obs_trace.span("map.seed_chain", cat="mapping",
+                                    args={"read": rid}
+                                    if obs_trace.enabled() else None):
+                    chains = candidates(self.index, read, top_n=self.top_n,
+                                        max_gap=self.max_gap,
+                                        min_score=self.min_chain_score)
                 if not chains:
                     yield [Mapping(read_id=rid)]
                     continue
@@ -275,35 +283,44 @@ class ReadMapper:
         """Turn one completed ticket into per-read mapping lists."""
         res = ticket.result()
         stats = self.stats
-        by_read: dict = {}
-        for row, cand in enumerate(ticket.meta):
-            by_read.setdefault(cand.read_id, []).append((row, cand))
-        for rid, rows in by_read.items():
-            scored = []
-            for row, cand in rows:
-                s = int(res.scores[row])
-                if s < 0:
-                    stats.n_unresolved += 1
+        stats.engine.merge(ticket.stats)
+        out: List[List[Mapping]] = []
+        # the span closes before anything is yielded: it measures trim /
+        # rank / MAPQ work, not the consumer's time between yields
+        with obs_trace.span("map.retire", cat="mapping",
+                            args={"ticket": ticket.index,
+                                  "rows": ticket.n_pairs}
+                            if obs_trace.enabled() else None):
+            by_read: dict = {}
+            for row, cand in enumerate(ticket.meta):
+                by_read.setdefault(cand.read_id, []).append((row, cand))
+            for rid, rows in by_read.items():
+                scored = []
+                for row, cand in rows:
+                    s = int(res.scores[row])
+                    if s < 0:
+                        stats.n_unresolved += 1
+                        continue
+                    ops, lead, trimmed = self._trim(res.cigars[row], cand)
+                    scored.append((s - trimmed, cand, ops, lead))
+                if not scored:
+                    out.append([Mapping(read_id=rid, n_candidates=len(rows))])
                     continue
-                ops, lead, trimmed = self._trim(res.cigars[row], cand)
-                scored.append((s - trimmed, cand, ops, lead))
-            if not scored:
-                yield [Mapping(read_id=rid, n_candidates=len(rows))]
-                continue
-            scored.sort(key=lambda t: (t[0], -t[1].chain.score))
-            second = scored[1][0] if len(scored) > 1 else None
-            maps = []
-            for rank, (cost, cand, ops, lead) in enumerate(scored):
-                c = cand.chain
-                maps.append(Mapping(
-                    read_id=rid, ref_id=c.ref_id,
-                    pos=cand.wstart + lead, strand=c.strand,
-                    mapq=(self._mapq(cost, second) if rank == 0 else 0),
-                    score=cost, ops=ops, chain_score=c.score,
-                    n_candidates=len(rows), secondary=rank > 0,
-                    approximate=res.approximate))
-            stats.n_mapped += 1
-            yield maps
+                scored.sort(key=lambda t: (t[0], -t[1].chain.score))
+                second = scored[1][0] if len(scored) > 1 else None
+                maps = []
+                for rank, (cost, cand, ops, lead) in enumerate(scored):
+                    c = cand.chain
+                    maps.append(Mapping(
+                        read_id=rid, ref_id=c.ref_id,
+                        pos=cand.wstart + lead, strand=c.strand,
+                        mapq=(self._mapq(cost, second) if rank == 0 else 0),
+                        score=cost, ops=ops, chain_score=c.score,
+                        n_candidates=len(rows), secondary=rank > 0,
+                        approximate=res.approximate))
+                stats.n_mapped += 1
+                out.append(maps)
+        yield from out
 
     def _trim(self, ops: np.ndarray,
               cand: "_Cand") -> Tuple[np.ndarray, int, int]:

@@ -1,0 +1,60 @@
+"""`repro.obs` — unified tracing, metrics and profiling.
+
+The paper's core argument is a *phase breakdown*: scatter / kernel /
+gather time split across thousands of PIM workers decides whether PIM
+beats the CPU (Fig. 1).  This package is the reproduction's common
+measurement layer — every subsystem (engine waves, streaming session,
+serve loop, read mapper, BiWFA recursion) emits the same vocabulary of
+spans, counters and histograms, so one timeline shows a request's whole
+life and one scrape shows the service's health:
+
+* :mod:`repro.obs.trace` — a thread-safe span/instant/counter tracer
+  emitting Chrome trace-event JSON (open in https://ui.perfetto.dev).
+  Flow IDs follow a :class:`~repro.core.session.Ticket` from ``submit()``
+  through pack → dispatch → kernel → retire → traceback (and, in the
+  serve loop, a request from admit → wave-form → dispatch → delivery).
+  A process-global switch gates everything: when off, every entry point
+  is a single branch returning a shared no-op object — safe to leave
+  compiled into the hot path (``benchmarks/obs_overhead.py`` gates it).
+* :mod:`repro.obs.metrics` — a registry of counters, gauges and
+  log-bucketed latency histograms (p50/p95/p99 from bounded buckets, not
+  stored sample lists), with Prometheus text exposition (optionally over
+  HTTP) and JSONL snapshots.
+* :mod:`repro.obs.profile` — the ``jax.profiler`` bridge: wrap steady
+  state in ``jax.profiler.trace(dir)`` (the ``--profile DIR`` flag on the
+  launchers) with named ``TraceAnnotation``s that line up with our spans.
+
+Quickstart::
+
+    from repro import obs
+
+    with obs.capture_trace("t.json"):        # enable -> run -> save
+        engine.align(patterns, texts)
+
+    obs.metrics.render_prometheus()          # scrape text
+    obs.metrics.write_jsonl("metrics.jsonl") # append one snapshot line
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator, Optional
+
+from repro.obs import metrics, profile, trace
+
+__all__ = ["capture_trace", "metrics", "profile", "trace"]
+
+
+@contextlib.contextmanager
+def capture_trace(path: Optional[str]) -> Iterator[None]:
+    """Enable tracing for a ``with`` block and save the Chrome-trace JSON
+    to ``path`` on exit (``None`` → no-op, so callers can pass an optional
+    CLI flag straight through)."""
+    if not path:
+        yield
+        return
+    trace.enable()
+    try:
+        yield
+    finally:
+        trace.save(path)
+        trace.disable()

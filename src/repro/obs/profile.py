@@ -1,0 +1,61 @@
+"""`jax.profiler` bridge: device-level traces lined up with our spans.
+
+:func:`profile` wraps a block in ``jax.profiler.trace(outdir)`` (the
+``--profile DIR`` flag on the launchers), capturing XLA/TPU activity
+viewable in TensorBoard or Perfetto.  :func:`annotation` emits a named
+``jax.profiler.TraceAnnotation`` **only while a profile is active**, so
+the instrumented hot path (session dispatch, kernel wait) carries the
+same stage names in the device trace as in :mod:`repro.obs.trace`'s
+host-side timeline — matching up "wave.kernel" on both sides is how the
+paper's scatter/kernel/gather phase split (Fig. 1) is attributed to real
+device time.
+
+When no profile is active, :func:`annotation` returns a shared no-op
+context manager (no allocation), mirroring the disabled-mode contract of
+the tracer.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator, Optional
+
+__all__ = ["active", "annotation", "profile"]
+
+# Set only while a profile() block is running; annotation() gates on it so
+# steady-state code pays one branch when not profiling.
+_active = False
+
+_NULL_CTX = contextlib.nullcontext()
+
+
+def active() -> bool:
+    return _active
+
+
+@contextlib.contextmanager
+def profile(outdir: Optional[str]) -> Iterator[None]:
+    """Capture a ``jax.profiler`` trace of the block into ``outdir``
+    (``None`` → no-op, so callers can pass an optional CLI flag straight
+    through).  View with TensorBoard's profile plugin or Perfetto."""
+    global _active
+    if not outdir:
+        yield
+        return
+    import jax
+
+    _active = True
+    try:
+        with jax.profiler.trace(outdir):
+            yield
+    finally:
+        _active = False
+
+
+def annotation(name: str):
+    """A named ``TraceAnnotation`` scope when a profile is active, else a
+    shared no-op context manager."""
+    if not _active:
+        return _NULL_CTX
+    import jax
+
+    return jax.profiler.TraceAnnotation(name)

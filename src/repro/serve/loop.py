@@ -31,6 +31,8 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.engine import AlignmentEngine, Seq
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve.queue import RequestQueue
 from repro.serve.request import AlignFuture, AlignRequest
 from repro.serve.waves import FormedWave, WaveFormer
@@ -38,13 +40,17 @@ from repro.serve.waves import FormedWave, WaveFormer
 __all__ = ["ServeLoop", "ServerStats"]
 
 
-def _pct(lat: np.ndarray, q: float) -> float:
-    return float(np.percentile(lat, q)) if lat.size else float("nan")
-
-
 @dataclasses.dataclass(frozen=True)
 class ServerStats:
-    """One consistent snapshot of the service (``ServeLoop.stats()``)."""
+    """One consistent snapshot of the service (``ServeLoop.stats()``).
+
+    Latency percentiles come from the loop's bounded
+    :class:`repro.obs.metrics.Histogram` (log-bucketed, so each is within
+    one bucket — ≤19% — of exact, in constant memory no matter how long
+    the service runs); ``latency_mean``/``latency_max`` stay exact.  The
+    same histogram backs the Prometheus ``serve_request_latency_seconds``
+    series, so a scrape and this snapshot always agree.
+    """
     uptime: float
     queue_depth: int             # admitted, not yet wave-formed
     pending_pairs: int           # forming (accumulated, not dispatched)
@@ -122,7 +128,13 @@ class ServeLoop:
         self._started = False
         self._error: Optional[BaseException] = None
         self._live: set = set()          # accepted, future unresolved
-        self._latencies: List[float] = []
+        # bounded latency distribution (satellite fix: this replaced an
+        # ever-growing stored sample list) — per-loop so concurrent/warm
+        # loops don't pollute each other; attached to the global registry
+        # at start() so a Prometheus scrape sees the live server's series
+        self._latency_hist = obs_metrics.Histogram(
+            "serve_request_latency_seconds",
+            "arrival -> future-resolution latency")
         self._t_start = 0.0
         self._n_accepted = 0
         self._n_completed = 0
@@ -138,6 +150,7 @@ class ServeLoop:
             raise RuntimeError("server already started")
         self._started = True
         self._t_start = time.monotonic()
+        obs_metrics.REGISTRY.attach(self._latency_hist)
         self._session = self.engine.stream(
             max_inflight_waves=self.max_inflight_waves,
             wave_pairs=self.wave_pairs)
@@ -210,22 +223,37 @@ class ServeLoop:
             with self._mutex:
                 self._n_accepted += 1
                 self._n_completed += 1
-                self._latencies.append(req._resolve(req.t_arrival))
+                self._latency_hist.observe(req._resolve(req.t_arrival))
             return req.future
-        with self._mutex:
-            self._live.add(req)
-            self._n_accepted += 1
-        if not self._queue.offer(req):       # shed: future already resolved
+        with obs_trace.span("serve.admit", cat="serve",
+                            args={"request": req.request_id,
+                                  "pairs": req.n_pairs}
+                            if obs_trace.enabled() else None) as sp:
+            if obs_trace.enabled():
+                # the request's flow: the arrow Perfetto draws from this
+                # admit through form/dispatch/kernel/retire to delivery
+                req.flow_id = obs_trace.new_flow()
+                sp.flow_start(req.flow_id)
             with self._mutex:
-                self._live.discard(req)
-                self._n_accepted -= 1
+                self._live.add(req)
+                self._n_accepted += 1
+            if not self._queue.offer(req):   # shed: future already resolved
+                with self._mutex:
+                    self._live.discard(req)
+                    self._n_accepted -= 1
+                obs_metrics.counter("serve_shed_total",
+                                    "requests rejected by admission "
+                                    "control").inc()
+                if obs_trace.enabled():
+                    obs_trace.instant("serve.shed", cat="serve",
+                                      args={"request": req.request_id})
         return req.future
 
     # -- observability -------------------------------------------------------
 
     def stats(self) -> ServerStats:
         with self._mutex:
-            lat = np.asarray(self._latencies, float)
+            lat = self._latency_hist
             sess = self._session.stats if self._session is not None else None
             return ServerStats(
                 uptime=(time.monotonic() - self._t_start
@@ -251,11 +279,11 @@ class ServeLoop:
                 n_retraces=sess.n_traces if sess else 0,
                 cache_hits=sess.cache_hits if sess else 0,
                 cache_misses=sess.cache_misses if sess else 0,
-                latency_p50=_pct(lat, 50), latency_p95=_pct(lat, 95),
-                latency_p99=_pct(lat, 99),
-                latency_mean=float(lat.mean()) if lat.size else float("nan"),
-                latency_max=float(lat.max()) if lat.size else float("nan"),
-                n_latency_samples=int(lat.size))
+                latency_p50=lat.quantile(0.5), latency_p95=lat.quantile(0.95),
+                latency_p99=lat.quantile(0.99),
+                latency_mean=lat.mean,
+                latency_max=lat.max if lat.count else float("nan"),
+                n_latency_samples=lat.count)
 
     # -- worker loop ---------------------------------------------------------
 
@@ -284,6 +312,10 @@ class ServeLoop:
         """One scheduling round: admit -> form -> dispatch -> deliver."""
         progressed = False
         arrivals = self._queue.drain()
+        obs_metrics.gauge("serve_queue_depth",
+                          "admitted requests not yet wave-formed"
+                          ).set(len(self._queue))
+        obs_trace.counter("queue_depth", len(self._queue), cat="serve")
         if arrivals:
             progressed = True
             with self._mutex:
@@ -292,6 +324,14 @@ class ServeLoop:
         with self._mutex:
             waves = (self._former.flush_all() if self._stop.is_set()
                      else self._former.take_ready(now))
+        if waves:
+            with obs_trace.span("serve.form", cat="serve",
+                                args={"waves": len(waves)}
+                                if obs_trace.enabled() else None) as sp:
+                for wave in waves:
+                    for sl in wave.slices:
+                        if sl.request.flow_id:
+                            sp.flow_step(sl.request.flow_id)
         for wave in waves:
             progressed = True
             self._dispatch(wave)
@@ -302,9 +342,19 @@ class ServeLoop:
 
     def _dispatch(self, wave: FormedWave) -> None:
         pen, heur, out, _bucket = wave.key
-        ticket = self._session.submit_packed(
-            wave.p, wave.plen, wave.t, wave.tlen, output=out,
-            penalties=pen, heuristic=heur, meta=wave)
+        flows = tuple(sl.request.flow_id for sl in wave.slices
+                      if sl.request.flow_id)
+        with obs_trace.span("serve.dispatch", cat="serve",
+                            args={"rows": int(wave.p.shape[0]),
+                                  "real": wave.n_real,
+                                  "reason": wave.reason}
+                            if obs_trace.enabled() else None) as sp:
+            for fid in flows:
+                sp.flow_step(fid)
+            ticket = self._session.submit_packed(
+                wave.p, wave.plen, wave.t, wave.tlen, output=out,
+                penalties=pen, heuristic=heur, meta=wave,
+                _flows=flows)
         del ticket
         with self._mutex:
             self._pairs_real += wave.n_real
@@ -314,7 +364,10 @@ class ServeLoop:
         wave: FormedWave = ticket.meta
         res = ticket.result()                # completed: no blocking
         now = time.monotonic()
-        with self._mutex:
+        with obs_trace.span("serve.deliver", cat="serve",
+                            args={"slices": len(wave.slices)}
+                            if obs_trace.enabled() else None) as sp, \
+                self._mutex:
             for sl in wave.slices:
                 scores = res.scores[sl.row_lo: sl.row_lo + sl.n]
                 cigars = (res.cigars[sl.row_lo: sl.row_lo + sl.n]
@@ -322,7 +375,9 @@ class ServeLoop:
                 done = sl.request._deliver_rows(
                     slice(sl.req_lo, sl.req_lo + sl.n), scores, cigars)
                 if done:
-                    self._latencies.append(sl.request._resolve(now))
+                    if sl.request.flow_id:
+                        sp.flow_end(sl.request.flow_id)
+                    self._latency_hist.observe(sl.request._resolve(now))
                     self._live.discard(sl.request)
                     self._n_completed += 1
                     self._n_pairs_done += sl.request.n_pairs

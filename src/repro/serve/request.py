@@ -94,6 +94,7 @@ class AlignRequest:
         self.future = AlignFuture(self)
         # -- delivery state (serve-loop owned) --------------------------------
         self.t_arrival: float = 0.0          # stamped at admission
+        self.flow_id: int = 0                # trace flow (0 = tracing off)
         self.pen = None                      # resolved at admission
         self.heur = None
         self.out: str = "score"

@@ -20,6 +20,7 @@ QUICK_MODULES = {
     "test_biwfa",
     "test_analysis",
     "test_fault_dist",
+    "test_obs",
 }
 
 

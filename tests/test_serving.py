@@ -224,7 +224,11 @@ def test_latency_percentiles_from_many_completions(rng):
     assert 0 < p50 <= p95 <= p99
     assert st.latency_p50 <= st.latency_p95 <= st.latency_p99 \
         <= st.latency_max
-    assert st.latency_p50 == pytest.approx(p50 / 1e3)
+    # ServerStats percentiles come from the bounded log-bucketed histogram:
+    # within one bucket (a factor) of the exact driver-side percentile
+    factor = server._latency_hist.factor
+    assert (p50 / 1e3) / factor <= st.latency_p50 \
+        <= (p50 / 1e3) * factor + 1e-12
     assert np.isfinite(st.latency_mean)
 
 
