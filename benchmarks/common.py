@@ -47,6 +47,42 @@ def rows_from_json(pattern: str, prefix: str) -> List[Row]:
     return rows
 
 
+def snapshot_diff(pattern: str, prefix: str = "", top: int = 5) -> List[str]:
+    """Attribute movement between the two newest snapshots → text lines.
+
+    When a gate fails, "suite X regressed" is only half an answer; this
+    compares the two newest ``BENCH_*.json`` captures matching
+    ``pattern`` and names the (suite, phase) rows that moved the most
+    (``repro.obs.analyze.diff_rows`` ordering).  Returns ``[]`` when
+    fewer than two snapshots exist — attribution is best-effort and
+    must never mask the underlying gate failure.
+    """
+    paths = sorted(glob.glob(pattern))
+    if len(paths) < 2:
+        return []
+    try:
+        from repro.obs import analyze
+
+        def load(p: str):
+            with open(p) as f:
+                payload = json.load(f)
+            return {r["name"]: float(r["us_per_call"])
+                    for r in payload["rows"]
+                    if r["name"].startswith(prefix)}
+
+        deltas = analyze.diff_rows(load(paths[-2]), load(paths[-1]))
+    except Exception as e:            # pragma: no cover - best-effort
+        return [f"snapshot diff failed: {e!r}"]
+    if not deltas:
+        return []
+    lines = [f"snapshot diff {paths[-2]} -> {paths[-1]} "
+             f"(biggest movers first):"]
+    for d in deltas[:max(1, top)]:
+        lines.append(f"  suite={d.suite} phase={d.phase}: "
+                     f"{d.a:.4g} -> {d.b:.4g} ({d.ratio:.3f}x)")
+    return lines
+
+
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
     """Median wall seconds per call (blocking on jax outputs)."""
     for _ in range(warmup):

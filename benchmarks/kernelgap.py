@@ -193,6 +193,10 @@ def main(argv=None) -> int:
         for f in failures:
             print(f"# kernelgap REGRESSION: {f}", file=sys.stderr)
         if failures:
+            if args.from_json:
+                from benchmarks.common import snapshot_diff
+                for line in snapshot_diff(args.from_json, "kernelgap/"):
+                    print(f"# kernelgap {line}", file=sys.stderr)
             return 1
         print("# kernelgap gate passed: ratio >= 10x pre-PR baseline, "
               "kernel==ring parity, adaptive >= exact on divergent mix",

@@ -10,15 +10,21 @@ negligible:
   one branch returning a shared no-op object.  ``obs/disabled_ns``
   microbenchmarks that call; ``obs/disabled_frac`` projects it onto a
   wave (a conservative per-wave call count x ns-per-call / measured wave
-  time).  Gate: <= 2% — the layer is effectively free when off, i.e.
-  tracing-off throughput is within 2% of a build without the layer.
+  time).  Since PR 10 "disabled" includes the **flight recorder**: the
+  streamed measurement and the projection both run with the post-mortem
+  ring active (``obs/flightrec_ns`` is the ring's full span cycle), so
+  the 2% budget covers the always-on configuration a live server
+  actually runs in, not just the bare branch.  Gate: <= 2%.
 * **enabled** — spans, flow events and counters are actually buffered.
   ``obs/on_ratio`` is enabled/disabled align throughput (warm engine,
   best-of-3 each, interleaved).  Gate: >= 0.90 — capturing a timeline
   costs at most 10%.
 
 ``main(--check)`` is the CI gate; ``--from-json`` gates on the newest
-``benchmarks.run --json`` snapshot like the other suites.
+``benchmarks.run --json`` snapshot like the other suites.  The whole
+measurement runs inside ``obs_trace.isolated()``, so toggling the
+switch and emitting ~10^5 throwaway spans never corrupts an outer
+``benchmarks.run --trace-out`` capture.
 """
 from __future__ import annotations
 
@@ -32,6 +38,7 @@ from repro.core.engine import AlignmentEngine
 from repro.core.session import run_streamed
 from repro.data.reads import ReadPairSpec, generate_pairs
 from repro.obs import metrics as obs_metrics
+from repro.obs import record as obs_record
 from repro.obs import trace as obs_trace
 
 ON_RATIO_GATE = 0.90       # tracing-on throughput >= 90% of tracing-off
@@ -81,41 +88,55 @@ def run(pairs: int = 4096, read_len: int = 100, edit_frac: float = 0.02,
     run_streamed(eng, P, plen, T, tlen,
                  submit_pairs=submit_pairs)          # warm the cache
 
-    was_on = obs_trace.enabled()
-    try:
-        # interleaved off/on/off/on: shared-host noise hits both modes
-        obs_trace.disable()
-        t_off = _bench_stream(eng, P, plen, T, tlen, submit_pairs)
-        obs_trace.enable()
-        obs_trace.reset()
-        t_on = _bench_stream(eng, P, plen, T, tlen, submit_pairs)
-        n_events = len(obs_trace.events())
-        obs_trace.reset()
-        obs_trace.disable()
-        t_off = min(t_off, _bench_stream(eng, P, plen, T, tlen,
-                                         submit_pairs))
-        obs_trace.enable()
-        obs_trace.reset()
-        t_on = min(t_on, _bench_stream(eng, P, plen, T, tlen,
-                                       submit_pairs))
-        obs_trace.reset()
+    with obs_trace.isolated():
+        # "disabled" is the production default: tracer off, flight
+        # recorder ON (a live server keeps the post-mortem ring warm).
+        obs_record.acquire()
+        try:
+            # interleaved off/on/off/on: shared-host noise hits both modes
+            obs_trace.disable()
+            t_off = _bench_stream(eng, P, plen, T, tlen, submit_pairs)
+            obs_trace.enable()
+            obs_trace.reset()
+            t_on = _bench_stream(eng, P, plen, T, tlen, submit_pairs)
+            n_events = len(obs_trace.events())
+            obs_trace.reset()
+            obs_trace.disable()
+            t_off = min(t_off, _bench_stream(eng, P, plen, T, tlen,
+                                             submit_pairs))
+            obs_trace.enable()
+            obs_trace.reset()
+            t_on = min(t_on, _bench_stream(eng, P, plen, T, tlen,
+                                           submit_pairs))
+            obs_trace.reset()
 
-        obs_trace.disable()
+            # ring-only span cost: tracer off, recorder active — a real
+            # Span is built and its exit event lands in the ring
+            obs_trace.disable()
+
+            def _span_cycle():
+                with obs_trace.span("x"):
+                    pass
+
+            rec_span_ns = _ns_per_call(_span_cycle)
+            g = obs_metrics.gauge("obs_overhead_probe")
+            gauge_ns = _ns_per_call(lambda: g.set(1.0))
+        finally:
+            obs_record.release()
+        # bare branch cost: tracer off, recorder off -> NULL span
         span_ns = _ns_per_call(lambda: obs_trace.span("x"))
-        g = obs_metrics.gauge("obs_overhead_probe")
-        gauge_ns = _ns_per_call(lambda: g.set(1.0))
-    finally:
-        (obs_trace.enable if was_on else obs_trace.disable)()
 
     n_waves = max(1, -(-pairs // submit_pairs))
     wave_s = t_off / n_waves
-    disabled_frac = (CALLS_PER_WAVE * span_ns
+    worst_span_ns = max(span_ns, rec_span_ns)
+    disabled_frac = (CALLS_PER_WAVE * worst_span_ns
                      + METRIC_CALLS_PER_WAVE * gauge_ns) / 1e9 / wave_s
     on_ratio = t_off / t_on
 
     return [
         ("obs/off", t_off / pairs * 1e6,
-         f"{pairs / t_off:,.0f} pairs/s tracing disabled"),
+         f"{pairs / t_off:,.0f} pairs/s tracing disabled "
+         f"(flight recorder active)"),
         ("obs/on", t_on / pairs * 1e6,
          f"{pairs / t_on:,.0f} pairs/s tracing enabled "
          f"({n_events} trace events over 3 passes)"),
@@ -123,11 +144,14 @@ def run(pairs: int = 4096, read_len: int = 100, edit_frac: float = 0.02,
          f"enabled/disabled throughput (gate >= {ON_RATIO_GATE})"),
         ("obs/disabled_ns", span_ns,
          f"ns per disabled span() call ({gauge_ns:.0f} ns per gauge set)"),
+        ("obs/flightrec_ns", rec_span_ns,
+         "ns per full span cycle with tracing off + flight-recorder "
+         "ring active"),
         ("obs/disabled_frac", disabled_frac,
          f"projected disabled overhead per wave: {CALLS_PER_WAVE} span "
-         f"points x {span_ns:.0f} ns + {METRIC_CALLS_PER_WAVE} metric "
-         f"updates x {gauge_ns:.0f} ns over {wave_s * 1e3:.1f} ms "
-         f"(gate <= {DISABLED_FRAC_GATE})"),
+         f"points x {worst_span_ns:.0f} ns (ring-active worst case) + "
+         f"{METRIC_CALLS_PER_WAVE} metric updates x {gauge_ns:.0f} ns "
+         f"over {wave_s * 1e3:.1f} ms (gate <= {DISABLED_FRAC_GATE})"),
     ]
 
 
@@ -187,6 +211,10 @@ def main(argv=None) -> int:
         for f in failures:
             print(f"# obs REGRESSION: {f}", file=sys.stderr)
         if failures:
+            if args.from_json:
+                from benchmarks.common import snapshot_diff
+                for line in snapshot_diff(args.from_json, "obs/"):
+                    print(f"# obs {line}", file=sys.stderr)
             return 1
         print("# obs gate passed: disabled overhead <= "
               f"{args.disabled_frac_gate:.0%}, tracing-on within "

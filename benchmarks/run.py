@@ -119,17 +119,12 @@ def main(argv=None) -> int:
         from benchmarks import lm_substrate
         suites.append(("lm", lm_substrate.run))
     if want is None or "obs" in want:
-        if args.trace_out:
-            # the obs suite toggles and resets the global tracer to
-            # measure its own overhead — under --trace-out it would wipe
-            # the other suites' timeline
-            print("# skipping obs suite under --trace-out",
-                  file=sys.stderr)
-        else:
-            from benchmarks import obs_overhead
-            suites.append(("obs",
-                           lambda: obs_overhead.run(
-                               pairs=min(args.pairs, 4096))))
+        # safe under --trace-out: the suite self-measures inside
+        # obs_trace.isolated(), which restores the outer timeline
+        from benchmarks import obs_overhead
+        suites.append(("obs",
+                       lambda: obs_overhead.run(
+                           pairs=min(args.pairs, 4096))))
 
     rows = []
     failed = []
@@ -146,6 +141,19 @@ def main(argv=None) -> int:
                 rc = 1
     if args.trace_out:
         print(f"# trace -> {args.trace_out}", file=sys.stderr)
+        try:
+            # phase accounting over the capture we just wrote: the
+            # paper's transfer/kernel/retrieve split lands in the same
+            # snapshot, so snapshot diffs can name the phase that moved
+            from repro.obs import analyze
+            pt = analyze.phase_accounting(
+                analyze.Trace.from_file(args.trace_out))
+            rows.extend(pt.as_rows())
+        except Exception:
+            print("# phase accounting FAILED:", file=sys.stderr)
+            traceback.print_exc()
+            failed.append("phase")
+            rc = 1
     emit(rows)
     if args.json is not None:
         path = _write_json(args.json, rows, argv, failed)

@@ -208,6 +208,10 @@ def main(argv=None) -> int:
         for f in failures:
             print(f"# serving REGRESSION: {f}", file=sys.stderr)
         if failures:
+            if args.from_json:
+                from benchmarks.common import snapshot_diff
+                for line in snapshot_diff(args.from_json, "serving/"):
+                    print(f"# serving {line}", file=sys.stderr)
             return 1
         print("# serving gate passed: >=50% of batch pairs/s, 0 retraces, "
               "p99 within budget", file=sys.stderr)

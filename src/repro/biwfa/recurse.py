@@ -39,6 +39,7 @@ import numpy as np
 from repro.core import gotoh
 from repro.core.engine import _round_up, pack_batch
 from repro.obs import metrics as obs_metrics
+from repro.obs import record as obs_record
 from repro.obs import trace as obs_trace
 
 __all__ = ["BidirDriver", "DEFAULT_TRACE_BUDGET"]
@@ -233,6 +234,9 @@ class BidirDriver:
     def _fallback(self, seg: _Seg) -> None:
         for st in (self.ticket.stats, self.sess.stats):
             st.n_bidir_fallback += 1
+        obs_record.dump("bidir_fallback",
+                        {"row": seg.row, "depth": seg.depth,
+                         "cost": int(seg.cost)})
         if seg.fallback:
             # the packed path itself came back unresolved: give up on the
             # row (same -1 contract as the packed trace under a pinned

@@ -62,6 +62,7 @@ from repro.core.engine import (AlignmentEngine, BucketInfo, EngineResult,
                                _quantize_rows, _round_up, pack_batch)
 from repro.obs import metrics as obs_metrics
 from repro.obs import profile as obs_profile
+from repro.obs import record as obs_record
 from repro.obs import trace as obs_trace
 
 __all__ = ["AlignmentSession", "SessionStats", "Ticket", "run_streamed"]
@@ -576,6 +577,9 @@ class AlignmentSession:
         reported) so no in-flight computation outlives the session to raise
         at interpreter exit.
         """
+        obs_record.dump("session_failure",
+                        {"error": repr(self._error) if self._error else None,
+                         "inflight_waves": len(self._inflight)})
         with self._lock:
             inflight, self._inflight = list(self._inflight), \
                 collections.deque()
@@ -712,8 +716,9 @@ class AlignmentSession:
                         "in-flight waves")          # pragma: no cover
             now = time.monotonic()
             if now >= deadline:
-                raise TimeoutError(
-                    "as_completed timed out: " + self._inflight_diagnostics())
+                diag = self._inflight_diagnostics()
+                obs_record.dump("as_completed_timeout", {"detail": diag})
+                raise TimeoutError("as_completed timed out: " + diag)
             # oldest wave still running: nap outside the lock so producers
             # keep submitting while we wait
             time.sleep(min(1e-3, deadline - now))

@@ -74,7 +74,25 @@ def main(argv=None) -> int:
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="append one obs.metrics JSONL snapshot after the "
                          "replay")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="N",
+                    help="serve the live Prometheus /metrics endpoint on "
+                         "this port for the duration of the run")
     args = ap.parse_args(argv)
+
+    msrv = None
+    if args.metrics_port is not None:
+        msrv = obs.metrics.start_http_server(args.metrics_port)
+        print(f"[serve_align] metrics endpoint -> "
+              f"http://localhost:{args.metrics_port}/metrics",
+              file=sys.stderr)
+    try:
+        return _run(args)
+    finally:
+        if msrv is not None:
+            msrv.shutdown()
+
+
+def _run(args) -> int:
 
     pen = (scoring.parse_penalties(args.penalties)
            if args.penalties else None)

@@ -23,6 +23,15 @@ life and one scrape shows the service's health:
 * :mod:`repro.obs.profile` — the ``jax.profiler`` bridge: wrap steady
   state in ``jax.profiler.trace(dir)`` (the ``--profile DIR`` flag on the
   launchers) with named ``TraceAnnotation``s that line up with our spans.
+* :mod:`repro.obs.analyze` — the consumption side: typed trace loader,
+  per-wave phase accounting (the paper's transfer/kernel/retrieve
+  split), per-ticket critical paths from flow arrows, pipeline
+  bubble/occupancy analysis, and trace/snapshot diffing that attributes
+  a regression to the (suite, phase) that moved.
+* :mod:`repro.obs.record` — the always-on flight recorder: a bounded
+  ring of recent events kept live while full tracing is off, dumped as
+  a Perfetto-viewable post-mortem on shed / timeout / failure /
+  BiWFA fallback.
 
 Quickstart::
 
@@ -39,22 +48,30 @@ from __future__ import annotations
 import contextlib
 from typing import Iterator, Optional
 
-from repro.obs import metrics, profile, trace
+from repro.obs import analyze, metrics, profile, record, trace
 
-__all__ = ["capture_trace", "metrics", "profile", "trace"]
+__all__ = ["analyze", "capture_trace", "metrics", "profile", "record",
+           "trace"]
 
 
 @contextlib.contextmanager
 def capture_trace(path: Optional[str]) -> Iterator[None]:
     """Enable tracing for a ``with`` block and save the Chrome-trace JSON
     to ``path`` on exit (``None`` → no-op, so callers can pass an optional
-    CLI flag straight through)."""
+    CLI flag straight through).
+
+    Nesting-safe: if tracing was already on when the block was entered
+    (an outer capture is live), it stays on at exit — the inner capture
+    saves its view of the shared timeline without clobbering the outer
+    one's switch."""
     if not path:
         yield
         return
+    was_on = trace.enabled()
     trace.enable()
     try:
         yield
     finally:
         trace.save(path)
-        trace.disable()
+        if not was_on:
+            trace.disable()

@@ -35,6 +35,7 @@ Usage::
 """
 from __future__ import annotations
 
+import contextlib
 import itertools
 import json
 import os
@@ -43,13 +44,27 @@ import time
 from typing import Dict, Iterator, List, Optional
 
 __all__ = ["NULL", "Span", "counter", "disable", "enable", "enabled",
-           "events", "instant", "new_flow", "reset", "save", "span"]
+           "events", "instant", "isolated", "new_flow", "reset", "save",
+           "span"]
 
 _PID = os.getpid()
 _T0 = time.perf_counter()
 
 # THE switch: one module-global read gates every emission path.
 _on = False
+
+# Secondary sink: the flight recorder (repro.obs.record).  When installed
+# it receives every emitted event even while the full tracer is off, so a
+# bounded ring of recent history exists to dump on failure.  ``None``
+# keeps the disabled fast path a single extra global read.
+_rec = None
+
+
+def _set_recorder(rec) -> None:
+    """Install/remove the flight-recorder sink (``repro.obs.record``
+    owns this — instrumented code never calls it)."""
+    global _rec
+    _rec = rec
 
 _lock = threading.Lock()
 _events: List[dict] = []
@@ -66,8 +81,12 @@ def _now_us() -> float:
 
 
 def _emit(ev: dict) -> None:
-    with _lock:
-        _events.append(ev)
+    if _on:
+        with _lock:
+            _events.append(ev)
+    r = _rec
+    if r is not None:
+        r.record(ev)
 
 
 # ---------------------------------------------------------------------------
@@ -210,8 +229,13 @@ NULL = _NullSpan()
 
 def span(name: str, cat: str = "repro",
          args: Optional[dict] = None) -> "Span | _NullSpan":
-    """Open a span (use as a context manager).  Disabled → :data:`NULL`."""
-    if not _on:
+    """Open a span (use as a context manager).  Disabled → :data:`NULL`.
+
+    When the flight recorder is active the real span is created even
+    with the tracer off, so the ring sees recent history; the fully-off
+    path (no tracer, no recorder) still allocates nothing.
+    """
+    if not _on and _rec is None:
         return NULL
     return Span(name, cat, args)
 
@@ -219,7 +243,7 @@ def span(name: str, cat: str = "repro",
 def instant(name: str, cat: str = "repro",
             args: Optional[dict] = None) -> None:
     """Mark a point in time (thread-scoped instant event)."""
-    if not _on:
+    if not _on and _rec is None:
         return
     _emit({"name": name, "cat": cat, "ph": "i", "s": "t",
            "ts": _now_us(), "pid": _PID, "tid": threading.get_ident(),
@@ -228,8 +252,33 @@ def instant(name: str, cat: str = "repro",
 
 def counter(name: str, value: float, cat: str = "repro") -> None:
     """Sample a counter track (rendered as a stacked chart in Perfetto)."""
-    if not _on:
+    if not _on and _rec is None:
         return
     _emit({"name": name, "cat": cat, "ph": "C",
            "ts": _now_us(), "pid": _PID, "tid": 0,
            "args": {"value": value}})
+
+
+@contextlib.contextmanager
+def isolated() -> Iterator[None]:
+    """Run a block against a private event buffer, then restore.
+
+    Self-measuring code (``benchmarks/obs_overhead.py``) toggles the
+    tracer and emits hundreds of thousands of throwaway spans; under an
+    outer live capture (``benchmarks.run --trace-out``) that would wipe
+    or flood the shared timeline.  Inside this block the outer events
+    and switch state are stashed and the buffer starts empty; on exit
+    both are restored and everything emitted inside is dropped.
+    """
+    global _on
+    with _lock:
+        stash = list(_events)
+        _events.clear()
+    was_on = _on
+    try:
+        yield
+    finally:
+        _on = was_on
+        with _lock:
+            _events.clear()
+            _events.extend(stash)

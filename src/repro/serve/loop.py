@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core.engine import AlignmentEngine, Seq
 from repro.obs import metrics as obs_metrics
+from repro.obs import record as obs_record
 from repro.obs import trace as obs_trace
 from repro.serve.queue import RequestQueue
 from repro.serve.request import AlignFuture, AlignRequest
@@ -151,6 +152,11 @@ class ServeLoop:
         self._started = True
         self._t_start = time.monotonic()
         obs_metrics.REGISTRY.attach(self._latency_hist)
+        # Flight recorder: a live server always keeps the post-mortem
+        # ring warm, so a shed/timeout/failure can dump recent history
+        # even when full tracing is off.  Released in stop().
+        obs_record.acquire()
+        self._rec_held = True
         self._session = self.engine.stream(
             max_inflight_waves=self.max_inflight_waves,
             wave_pairs=self.wave_pairs)
@@ -167,16 +173,21 @@ class ServeLoop:
         Every accepted request's future is resolved before this returns
         (with a result, or with the loop's failure if one occurred).
         """
-        self._stop.set()
-        self._queue.close()
-        for th in self._threads:
-            th.join()
-        self._threads = []
-        if self._error is not None:
-            raise RuntimeError("serve loop failed") from self._error
-        if self._session is not None:
-            self._session.close()
-        return self.stats()
+        try:
+            self._stop.set()
+            self._queue.close()
+            for th in self._threads:
+                th.join()
+            self._threads = []
+            if self._error is not None:
+                raise RuntimeError("serve loop failed") from self._error
+            if self._session is not None:
+                self._session.close()
+            return self.stats()
+        finally:
+            if getattr(self, "_rec_held", False):
+                self._rec_held = False
+                obs_record.release()
 
     def __enter__(self) -> "ServeLoop":
         return self.start()
@@ -247,6 +258,10 @@ class ServeLoop:
                 if obs_trace.enabled():
                     obs_trace.instant("serve.shed", cat="serve",
                                       args={"request": req.request_id})
+                obs_record.dump("shed",
+                                {"request": req.request_id,
+                                 "n_pairs": req.n_pairs,
+                                 "queue_depth": len(self._queue)})
         return req.future
 
     # -- observability -------------------------------------------------------
@@ -385,6 +400,7 @@ class ServeLoop:
     def _fail(self, e: BaseException) -> None:
         """Poison the service: every unresolved accepted future gets the
         failure (exactly-once answering holds even on the error path)."""
+        obs_record.dump("serve_failure", {"error": repr(e)})
         with self._mutex:
             if self._error is None:
                 self._error = e

@@ -21,7 +21,25 @@ QUICK_MODULES = {
     "test_analysis",
     "test_fault_dist",
     "test_obs",
+    "test_obs_analyze",
 }
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _flightrec_tmpdir(tmp_path_factory):
+    """Route flight-recorder post-mortems to a tmp dir for the whole run.
+
+    Session/serve failure tests trip the dump hooks on purpose; without
+    this they would scatter ``results/flightrec/*.json`` into the repo.
+    """
+    d = tmp_path_factory.mktemp("flightrec")
+    prev = os.environ.get("REPRO_FLIGHTREC_DIR")
+    os.environ["REPRO_FLIGHTREC_DIR"] = str(d)
+    yield
+    if prev is None:
+        os.environ.pop("REPRO_FLIGHTREC_DIR", None)
+    else:
+        os.environ["REPRO_FLIGHTREC_DIR"] = prev
 
 
 @pytest.fixture
